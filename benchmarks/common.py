@@ -1,0 +1,37 @@
+"""Shared benchmark utilities: timing + CSV row helpers.
+
+Rows follow the contract ``name,us_per_call,derived`` where ``derived``
+packs the analysis values (JSON-ish key=value pairs).  Wall-clock numbers
+are CPU-measured (this container); roofline-model numbers target TPU v5e
+and are labeled ``modeled_*``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time of fn(*args) in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def row(name: str, us_per_call: float, **derived) -> str:
+    d = ";".join(f"{k}={_fmt(v)}" for k, v in derived.items())
+    return f"{name},{us_per_call:.2f},{d}"
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)

@@ -1,0 +1,76 @@
+"""Paper Fig. 12: execution-time overhead of each redundancy scheme on
+square matrix multiplications of varying size.
+
+Reproduces the paper's central crossover result on both devices:
+  * NVIDIA T4 (the paper's device, FP16 CMR=203) — validates against the
+    published claims: thread/block-level ABFT wins below the CMR (paper:
+    up to 6.5x lower overhead), global wins above (paper: up to 14x),
+    replication spikes for large sizes.
+  * TPU v5e (our target, bf16 CMR~240) — the same structure with the
+    TPU-adapted cost model (VPU checksums co-issue with the MXU).
+
+Also measures the *actual* CPU wall time of the fused Pallas kernel
+(interpret mode) vs an unprotected matmul for small sizes — a correctness-
+of-costing sanity check, not a TPU perf claim.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.core import NVIDIA_T4, TPU_V5E, GemmDims, Scheme, overhead_pct
+from repro.kernels import abft_matmul
+
+SIZES = [32, 64, 128, 256, 512, 1024, 2048, 4096, 8192]
+SCHEMES = [Scheme.GLOBAL, Scheme.BLOCK_1S, Scheme.BLOCK_2S, Scheme.REPLICA]
+
+
+def run() -> list:
+    rows = []
+    for hw in (NVIDIA_T4, TPU_V5E):
+        crossover_checked = False
+        for s in SIZES:
+            d = GemmDims(m=s, k=s, n=s)
+            ovh = {sc: overhead_pct(sc, d, hw) for sc in SCHEMES}
+            ai = d.arithmetic_intensity
+            best = min(SCHEMES, key=lambda sc: ovh[sc])
+            from repro.core import select_scheme
+            guided = select_scheme(d, hw).scheme
+            rows.append(row(
+                f"fig12/{hw.name}/square_{s}", 0.0,
+                ai=ai, cmr=hw.cmr,
+                regime="bandwidth" if ai < hw.cmr else "compute",
+                **{f"ovh_{sc.value}": ovh[sc] for sc in SCHEMES},
+                intensity_guided=guided.value,
+                best_of_all=best.value,
+            ))
+        # paper-claim validation rows (T4): block beats global below CMR,
+        # global beats replication above, replication spikes when compute
+        # bound
+        small = GemmDims(m=128, k=128, n=128)
+        big = GemmDims(m=4096, k=4096, n=4096)
+        rows.append(row(
+            f"fig12/{hw.name}/claims", 0.0,
+            block_wins_small=overhead_pct(Scheme.BLOCK_1S, small, hw)
+            < overhead_pct(Scheme.GLOBAL, small, hw),
+            global_wins_big=overhead_pct(Scheme.GLOBAL, big, hw)
+            <= overhead_pct(Scheme.REPLICA, big, hw),
+            replica_spike_pct=overhead_pct(Scheme.REPLICA, big, hw),
+        ))
+
+    # measured CPU wall time: fused kernel (interpret) vs plain matmul
+    rng = np.random.default_rng(0)
+    for s in (128, 256):
+        x = jnp.asarray(rng.standard_normal((s, s)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((s, s)), jnp.float32)
+        t_plain = time_call(lambda a, b: a @ b, x, w)
+        t_abft = time_call(
+            lambda a, b: abft_matmul(a, b, mode="1s",
+                                     out_dtype=jnp.float32)[0], x, w)
+        rows.append(row(
+            f"fig12/measured_cpu_interpret/square_{s}", t_abft,
+            plain_us=t_plain,
+            note="interpret-mode-correctness-check-not-tpu-perf"))
+    return rows

@@ -1,0 +1,41 @@
+"""Paper Fig. 5 analog: per-layer arithmetic intensity within one network.
+
+The paper shows ResNet-50's conv/fc layers spanning AI 1-511 — the
+heterogeneity that motivates per-layer scheme selection.  We report the
+per-GEMM-site AI of each architecture under its assigned shapes, and the
+scheme the intensity-guided selector picks per site.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.configs import ALL_ARCHS, get_config
+from repro.core import TPU_V5E, select_scheme
+from repro.models.counting import layer_gemms
+
+PHASES = {"train_4k": 256 * 4096, "decode_32k": 128}
+
+
+def run() -> list:
+    rows = []
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        for shape, toks in PHASES.items():
+            sites = layer_gemms(cfg, toks)
+            ais = []
+            for site, (dims, count) in sites.items():
+                sel = select_scheme(dims, TPU_V5E)
+                ais.append(dims.arithmetic_intensity)
+                rows.append(row(
+                    f"fig5/{arch}/{shape}/{site}", 0.0,
+                    m=dims.m, k=dims.k, n=dims.n, count=count,
+                    ai=dims.arithmetic_intensity,
+                    scheme=sel.scheme.value,
+                ))
+            if ais:
+                rows.append(row(
+                    f"fig5/{arch}/{shape}/_range", 0.0,
+                    ai_min=min(ais), ai_max=max(ais),
+                    heterogeneous=(max(ais) / max(min(ais), 1e-9) > 4),
+                ))
+    return rows

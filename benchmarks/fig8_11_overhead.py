@@ -1,0 +1,74 @@
+"""Paper Figs. 8-11: per-network execution-time overhead of global ABFT vs
+thread(block)-level ABFT vs intensity-guided ABFT — the paper's primary
+result (1.09-5.3x overhead reduction).
+
+Network time = sum over GEMM sites of the roofline-modeled layer time
+(paper §6.2 aggregates per-layer times the same way).  For each arch x
+shape we report the three overheads and the reduction factor
+global/intensity-guided, mirroring Fig. 8's summary plus per-domain detail:
+  * decode shapes ~ the paper's DLRM/batch-1 regime (bandwidth bound),
+  * train/prefill ~ the paper's HD-CNN regime (mostly compute bound).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.configs import ALL_ARCHS, get_config
+from repro.core import Scheme, TPU_V5E
+from repro.core.schemes import protected_time
+from repro.core.selector import modeled_layer_time, select_scheme
+from repro.models.counting import layer_gemms
+
+SHAPE_TOKENS = {
+    "train_4k": 256 * 4096,
+    "prefill_32k": 32 * 32768,
+    "decode_32k": 128,
+    "long_500k": 1,
+}
+
+
+def network_time(cfg, toks, scheme: Scheme | None) -> float:
+    """Modeled total linear-layer time under one scheme (None = select
+    per layer — intensity-guided)."""
+    total = 0.0
+    for site, (dims, count) in layer_gemms(cfg, toks).items():
+        if scheme is None:
+            s = select_scheme(dims, TPU_V5E).scheme
+        else:
+            s = scheme
+        total += count * modeled_layer_time(dims, s, TPU_V5E)
+    return total
+
+
+def run() -> list:
+    rows = []
+    reductions = []
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        for shape, toks in SHAPE_TOKENS.items():
+            t_none = network_time(cfg, toks, Scheme.NONE)
+            t_global = network_time(cfg, toks, Scheme.GLOBAL)
+            t_block = network_time(cfg, toks, Scheme.BLOCK_1S)
+            t_guided = network_time(cfg, toks, None)
+            ovh = lambda t: (t - t_none) / t_none * 100.0
+            red = (ovh(t_global) / max(ovh(t_guided), 1e-9)
+                   if ovh(t_guided) > 1e-9 else float("inf"))
+            reductions.append(min(red, 100.0))
+            rows.append(row(
+                f"fig8/{arch}/{shape}", 0.0,
+                ovh_global_pct=ovh(t_global),
+                ovh_block_pct=ovh(t_block),
+                ovh_guided_pct=ovh(t_guided),
+                reduction_x=red,
+                guided_never_worse=(
+                    ovh(t_guided) <= ovh(t_global) + 1e-9
+                    and ovh(t_guided) <= ovh(t_block) + 1e-9),
+            ))
+    rows.append(row(
+        "fig8/summary", 0.0,
+        n_cells=len(reductions),
+        reduction_min=min(reductions),
+        reduction_max=max(reductions),
+        paper_band="1.09-5.3x",
+    ))
+    return rows

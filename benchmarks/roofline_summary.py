@@ -1,0 +1,39 @@
+"""Roofline summary: folds results/dryrun/*.json (produced by
+repro.launch.dryrun) into benchmark rows — one per (arch x shape x mesh)
+cell with the three roofline terms and the dominant bottleneck."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import row
+
+DRYRUN_DIR = pathlib.Path("results/dryrun")
+
+
+def run() -> list:
+    rows = []
+    if not DRYRUN_DIR.exists():
+        return [row("roofline/missing", 0.0,
+                    note="run repro.launch.dryrun first")]
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        rec = json.loads(p.read_text())
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec.get("status") == "skipped":
+            rows.append(row(name, 0.0, status="skipped",
+                            reason=rec.get("reason", "")))
+            continue
+        if rec.get("status") != "ok":
+            rows.append(row(name, 0.0, status=rec.get("status", "?")))
+            continue
+        rows.append(row(
+            name, rec.get("t_bound_s", 0.0) * 1e6,
+            compute_s=rec["compute_s"],
+            memory_s=rec["memory_s"],
+            collective_s=rec["collective_s"],
+            bottleneck=rec["bottleneck"],
+            hbm_gib=round(rec.get("hbm_per_device_gib", 0.0), 2),
+            useful_flops_ratio=round(rec.get("useful_flops_ratio", 0.0), 4),
+        ))
+    return rows

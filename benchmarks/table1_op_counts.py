@@ -1,0 +1,42 @@
+"""Paper Table 1: additional matmul-unit ops and checksum ops per K step
+for replication vs two-sided vs one-sided schemes — re-derived for the TPU
+block-level kernel (per (bm x bn) output block per bk step).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.core import BlockShape, GemmDims, Scheme, scheme_cost
+
+
+def run() -> list:
+    rows = []
+    b = BlockShape(bm=256, bk=512, bn=256)
+    d = GemmDims(m=4096, k=4096, n=4096)
+    base_flops = d.flops
+    for sc in (Scheme.REPLICA, Scheme.BLOCK_2S, Scheme.BLOCK_1S,
+               Scheme.GLOBAL):
+        c = scheme_cost(sc, d, b)
+        rows.append(row(
+            f"table1/{sc.value}", 0.0,
+            extra_mxu_flops=c.flops_mxu,
+            extra_vpu_flops=c.flops_vpu,
+            extra_bytes=c.bytes_hbm,
+            fixed_ops=c.fixed_ops,
+            mxu_ratio=c.flops_mxu / base_flops,
+            vpu_ratio=c.flops_vpu / base_flops,
+        ))
+    # Table-1 orderings (TPU form): replica maximizes matmul-unit ops with
+    # zero checksum ops; two-sided minimizes both but loses location;
+    # one-sided sits between on VPU ops and adds zero MXU ops.
+    c_rep = scheme_cost(Scheme.REPLICA, d, b)
+    c_2s = scheme_cost(Scheme.BLOCK_2S, d, b)
+    c_1s = scheme_cost(Scheme.BLOCK_1S, d, b)
+    rows.append(row(
+        "table1/orderings", 0.0,
+        replica_max_mxu=(c_rep.flops_mxu > c_1s.flops_mxu
+                         and c_rep.flops_mxu > c_2s.flops_mxu),
+        onesided_no_mxu=(c_1s.flops_mxu == 0.0),
+        twosided_fewest_vpu=(c_2s.flops_vpu < c_1s.flops_vpu),
+    ))
+    return rows

@@ -1,0 +1,51 @@
+"""Kernel-level demo: the two fused-ABFT Pallas kernels.
+
+1. abft_matmul — the paper's block-level (thread-level-equivalent) scheme:
+   checksums computed on VMEM-resident tiles, zero extra HBM traffic,
+   per-row fault location.
+2. flash_attention — beyond-paper: ABFT fused into both attention GEMMs,
+   with the checksum invariant carried through the online-softmax
+   rescaling.
+
+  PYTHONPATH=src python examples/abft_kernels_demo.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FaultSpec
+from repro.kernels import abft_matmul, flash_attention
+
+rng = np.random.default_rng(0)
+
+# ---- 1. fused-ABFT matmul ------------------------------------------------
+x = jnp.asarray(rng.standard_normal((256, 512)), jnp.float32)
+w = jnp.asarray(rng.standard_normal((512, 256)), jnp.float32)
+
+y, chk = abft_matmul(x, w, mode="1s", out_dtype=jnp.float32)
+print(f"matmul clean:     flag={bool(chk.flag)}  "
+      f"max residual/threshold="
+      f"{float(jnp.max(chk.residual / chk.threshold)):.2e}")
+
+y, chk = abft_matmul(x, w, mode="1s", out_dtype=jnp.float32,
+                     fault=FaultSpec.bitflip(row=100, col=42, bit=28))
+res = np.asarray(chk.residual)      # (gm, gn, bm): locates the faulty row
+gm, gn, bm = res.shape
+hot = np.unravel_index(np.argmax(res), res.shape)
+print(f"matmul bit-flip:  flag={bool(chk.flag)}  "
+      f"located row={hot[0] * bm + hot[2]} (injected row=100)")
+
+# ---- 2. fused-ABFT flash attention ----------------------------------------
+q = jnp.asarray(rng.standard_normal((1, 128, 4, 32)), jnp.float32)
+k = jnp.asarray(rng.standard_normal((1, 128, 4, 32)), jnp.float32)
+v = jnp.asarray(rng.standard_normal((1, 128, 4, 32)), jnp.float32)
+
+o, chk = flash_attention(q, k, v, causal=True, bq=32, bk=32)
+print(f"attention clean:  flag={bool(chk.flag)}  out={o.shape}")
+
+o, chk = flash_attention(q, k, v, causal=True, bq=32, bk=32,
+                         fault=FaultSpec.value(row=7, col=3, delta=40.0))
+print(f"attention fault:  flag={bool(chk.flag)} "
+      "(detected through the online-softmax rescaling)")
+assert bool(chk.flag)
+print("OK")

@@ -1,0 +1,31 @@
+"""Pre-deployment intensity report (paper §5.3 'integration with
+pre-deployment optimizers'): for any assigned architecture and serving
+shape, print the per-GEMM-site arithmetic intensity, the bound regime, and
+the ABFT scheme intensity-guided selection chooses.
+
+  PYTHONPATH=src python examples/intensity_report.py [arch] [n_tokens]
+"""
+
+import sys
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.core import TPU_V5E, select_scheme
+from repro.models.counting import aggregate_ai, layer_gemms
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "deepseek-v3-671b"
+n_tokens = int(sys.argv[2]) if len(sys.argv) > 2 else 128  # decode batch
+
+cfg = get_config(arch)
+print(f"arch={arch}  tokens-per-step={n_tokens}  "
+      f"device={TPU_V5E.name} (CMR={TPU_V5E.cmr:.0f})")
+print(f"aggregate AI: {aggregate_ai(cfg, n_tokens):.1f}\n")
+print(f"{'site':18s} {'m':>9s} {'k':>7s} {'n':>7s} {'count':>6s} "
+      f"{'AI':>9s} {'bound':>10s}  scheme")
+for site, (dims, count) in layer_gemms(cfg, n_tokens).items():
+    sel = select_scheme(dims, TPU_V5E)
+    bound = "compute" if dims.arithmetic_intensity >= TPU_V5E.cmr \
+        else "bandwidth"
+    print(f"{site:18s} {dims.m:>9d} {dims.k:>7d} {dims.n:>7d} {count:>6d} "
+          f"{dims.arithmetic_intensity:>9.1f} {bound:>10s}  "
+          f"{sel.scheme.value}")
+print("\n(available archs: " + ", ".join(ALL_ARCHS) + ")")

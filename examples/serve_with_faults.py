@@ -1,0 +1,49 @@
+"""Serving example: continuous-batched generation with a soft-error
+campaign — faults are injected mid-decode, detected by ABFT, and recovered
+by recompute; the output stream is verified identical to a clean run.
+
+  PYTHONPATH=src python examples/serve_with_faults.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, scaled_down
+from repro.core import ABFTConfig, FaultSpec, Scheme
+from repro.models import ModelFault, build_model
+from repro.serve.engine import Request, ServeEngine
+
+cfg = scaled_down(get_config("qwen3-14b"))
+model = build_model(cfg)
+params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)
+abft = ABFTConfig(scheme=Scheme.AUTO, use_pallas=False)
+
+
+def make_requests():
+    return [
+        Request(uid=i, prompt=np.arange(1, 9 + i, dtype=np.int32),
+                max_new_tokens=6)
+        for i in range(3)
+    ]
+
+
+# clean run
+clean_engine = ServeEngine(model, params, slots=2, max_len=64, abft=abft,
+                           dtype=jnp.float32)
+clean = clean_engine.run(make_requests())
+
+# faulty run: corrupt layer 1's attention output GEMM at decode step 2
+fault = ModelFault.at(1, "attn_out", FaultSpec.value(0, 5, 5e4))
+eng = ServeEngine(model, params, slots=2, max_len=64, abft=abft,
+                  dtype=jnp.float32)
+faulty = eng.run(make_requests(), fault_at=(2, fault))
+
+print(f"requests served:   {len(faulty)}")
+print(f"faults detected:   {eng.stats.faults_detected}")
+print(f"retries:           {eng.stats.retries}")
+print(f"hard faults:       {eng.stats.hard_faults}")
+match = all(clean[k] == faulty[k] for k in clean)
+print(f"recovered outputs match clean run: {match}")
+assert match and eng.stats.faults_detected >= 1
+print("OK: soft error detected by ABFT and recovered transparently.")

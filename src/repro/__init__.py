@@ -1,0 +1,7 @@
+"""repro: arithmetic-intensity-guided ABFT for NN inference/training on TPU.
+
+Reproduction + extension of Kosaian & Rashmi, SC '21, as a multi-pod JAX
+framework.  See DESIGN.md for the system inventory.
+"""
+
+__version__ = "0.1.0"

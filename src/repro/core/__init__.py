@@ -1,0 +1,64 @@
+"""Core ABFT library: the paper's contribution as composable JAX modules."""
+
+from repro.core.checksums import (
+    CheckResult,
+    global_row_check,
+    global_scalar_check,
+    weight_abs_checksum,
+    weight_row_checksum,
+)
+from repro.core.faults import FaultSpec, inject_output_fault, random_fault
+from repro.core.hardware import DEFAULT, NVIDIA_T4, TPU_V5E, HardwareSpec
+from repro.core.intensity import (
+    GemmDims,
+    aggregate_intensity,
+    gemm_time,
+    is_compute_bound,
+    roofline_time,
+)
+from repro.core.protected import (
+    ABFTConfig,
+    WeightChecksums,
+    precompute_weight_checksums,
+    protected_matmul,
+)
+from repro.core.schemes import (
+    BlockShape,
+    Scheme,
+    overhead_pct,
+    protected_time,
+    scheme_cost,
+)
+from repro.core.selector import SelectorConfig, select_scheme, selection_report
+
+__all__ = [
+    "ABFTConfig",
+    "BlockShape",
+    "CheckResult",
+    "DEFAULT",
+    "FaultSpec",
+    "GemmDims",
+    "HardwareSpec",
+    "NVIDIA_T4",
+    "Scheme",
+    "SelectorConfig",
+    "TPU_V5E",
+    "WeightChecksums",
+    "aggregate_intensity",
+    "gemm_time",
+    "global_row_check",
+    "global_scalar_check",
+    "inject_output_fault",
+    "is_compute_bound",
+    "overhead_pct",
+    "precompute_weight_checksums",
+    "protected_matmul",
+    "protected_time",
+    "random_fault",
+    "roofline_time",
+    "scheme_cost",
+    "select_scheme",
+    "selection_report",
+    "weight_abs_checksum",
+    "weight_row_checksum",
+]

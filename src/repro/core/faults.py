@@ -1,0 +1,112 @@
+"""Soft-error fault injection (paper §2.3 fault model).
+
+We model a single faulty output value in a GEMM's output matrix: a transient
+error in processing logic corrupts one accumulator before it is written
+back.  Injection sites:
+
+* ``inject_output_fault`` — post-hoc corruption of a materialized output
+  (used on the global-ABFT path and in system tests).
+* the Pallas kernels accept a ``FaultSpec`` and corrupt the main accumulator
+  *after* the checksum path has consumed the operands, mimicking an MXU
+  error invisible to the (independent) VPU checksum data path.
+
+Bit-flips are expressed by XOR on the raw bit pattern, matching neutron-beam
+observed upsets; value faults add a chosen delta.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class FaultSpec(NamedTuple):
+    """Where/what to inject.  All fields are scalars (static or traced).
+
+    row/col: coordinates in the 2-D GEMM output.
+    delta: value added to the output element (value-fault mode).
+    bit: if >= 0, flip this bit of the element instead (bit-flip mode).
+      Bit indices are dtype-relative to the corrupted buffer: the fused
+      block kernel corrupts its f32 accumulator (exponent bits 23-30);
+      the global path corrupts the materialized output in its own dtype
+      (bf16 exponent bits 8-14).
+    enabled: 0/1 master switch so the same jitted graph can run clean.
+    """
+
+    row: jnp.ndarray
+    col: jnp.ndarray
+    delta: jnp.ndarray
+    bit: jnp.ndarray
+    enabled: jnp.ndarray
+
+    @staticmethod
+    def none() -> "FaultSpec":
+        z = jnp.zeros((), jnp.int32)
+        return FaultSpec(row=z, col=z, delta=jnp.zeros((), jnp.float32),
+                         bit=jnp.full((), -1, jnp.int32), enabled=z)
+
+    @staticmethod
+    def value(row: int, col: int, delta: float) -> "FaultSpec":
+        return FaultSpec(
+            row=jnp.asarray(row, jnp.int32),
+            col=jnp.asarray(col, jnp.int32),
+            delta=jnp.asarray(delta, jnp.float32),
+            bit=jnp.full((), -1, jnp.int32),
+            enabled=jnp.ones((), jnp.int32),
+        )
+
+    @staticmethod
+    def bitflip(row: int, col: int, bit: int) -> "FaultSpec":
+        return FaultSpec(
+            row=jnp.asarray(row, jnp.int32),
+            col=jnp.asarray(col, jnp.int32),
+            delta=jnp.zeros((), jnp.float32),
+            bit=jnp.asarray(bit, jnp.int32),
+            enabled=jnp.ones((), jnp.int32),
+        )
+
+
+_UINT_FOR_BYTES = {2: jnp.uint16, 4: jnp.uint32}
+
+
+def flip_bit(value: jnp.ndarray, bit) -> jnp.ndarray:
+    """XOR one bit of each element of ``value`` (same shape)."""
+    nbytes = jnp.dtype(value.dtype).itemsize
+    uint = _UINT_FOR_BYTES[nbytes]
+    raw = jax.lax.bitcast_convert_type(value, uint)
+    mask = (jnp.ones((), uint) << bit.astype(uint)).astype(uint)
+    return jax.lax.bitcast_convert_type(raw ^ mask, value.dtype)
+
+
+def inject_output_fault(y: jnp.ndarray, fault: FaultSpec) -> jnp.ndarray:
+    """Corrupt one element of a (..., m, n) output per ``fault``."""
+    m, n = y.shape[-2], y.shape[-1]
+    rows = jnp.arange(m, dtype=jnp.int32)
+    cols = jnp.arange(n, dtype=jnp.int32)
+    mask = (rows[:, None] == fault.row) & (cols[None, :] == fault.col)
+    mask = jnp.broadcast_to(mask, y.shape)
+    on = fault.enabled.astype(bool)
+
+    flipped = flip_bit(y, jnp.maximum(fault.bit, 0))
+    bit_mode = fault.bit >= 0
+    corrupted = jnp.where(
+        bit_mode, flipped, y + fault.delta.astype(y.dtype)
+    )
+    return jnp.where(on & mask, corrupted, y)
+
+
+def random_fault(rng: np.random.Generator, m: int, n: int,
+                 magnitude: float | None = None) -> FaultSpec:
+    """Sample a random single-output fault for campaigns: exponent-region
+    bit-flip (the catastrophic case) or a value fault of given magnitude."""
+    row = int(rng.integers(m))
+    col = int(rng.integers(n))
+    if magnitude is None:
+        # bf16: bits 8..14 are exponent — flips there scale the value by
+        # powers of two, the classic soft-error signature.
+        bit = int(rng.integers(8, 15))
+        return FaultSpec.bitflip(row, col, bit)
+    return FaultSpec.value(row, col, magnitude)

@@ -1,0 +1,96 @@
+"""Arithmetic-intensity accounting for linear layers (paper §3).
+
+Every linear layer in the framework is described by ``GemmDims``; its
+arithmetic intensity (FLOPs / bytes moved) is compared against the device
+CMR to classify the layer as compute- or bandwidth-bound, which drives the
+intensity-guided ABFT scheme selection (paper §5.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.hardware import HardwareSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmDims:
+    """A (possibly batched) GEMM: (m, k) @ (k, n), repeated ``batch`` times.
+
+    ``bytes_a/b/out`` model the *HBM traffic* of each operand.  Weights that
+    are resident and re-read per step still count; operands known to be
+    fused away (e.g., an activation checksum produced in a previous layer's
+    epilogue) can be excluded by the caller via ``bytes_*_override``.
+    """
+
+    m: int
+    k: int
+    n: int
+    batch: int = 1
+    dtype_bytes: int = 2          # bf16 operands
+    acc_bytes: int = 4            # f32 accumulation/output before downcast
+    out_dtype_bytes: int = 2
+
+    @property
+    def flops(self) -> float:
+        return 2.0 * self.batch * self.m * self.k * self.n
+
+    @property
+    def bytes_a(self) -> float:
+        return float(self.batch * self.m * self.k * self.dtype_bytes)
+
+    @property
+    def bytes_b(self) -> float:
+        return float(self.batch * self.k * self.n * self.dtype_bytes)
+
+    @property
+    def bytes_out(self) -> float:
+        return float(self.batch * self.m * self.n * self.out_dtype_bytes)
+
+    @property
+    def bytes_total(self) -> float:
+        return self.bytes_a + self.bytes_b + self.bytes_out
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / self.bytes_total
+
+
+def is_compute_bound(dims: GemmDims, hw: HardwareSpec) -> bool:
+    """Paper Eq. (1): AI > CMR => compute bound."""
+    return dims.arithmetic_intensity > hw.cmr
+
+
+def gemm_time(dims: GemmDims, hw: HardwareSpec) -> float:
+    """Roofline execution-time estimate for the unprotected GEMM."""
+    return max(dims.flops / hw.peak_flops, dims.bytes_total / hw.hbm_bw)
+
+
+def roofline_time(
+    flops_mxu: float,
+    flops_vpu: float,
+    bytes_hbm: float,
+    hw: HardwareSpec,
+    fixed_ops: int = 0,
+) -> float:
+    """Three-way roofline: MXU, VPU and HBM operate concurrently; fixed
+    per-op overheads serialize.  This is the analytic model referenced by
+    paper §7.2 and used by the intensity-guided selector."""
+    return (
+        max(
+            flops_mxu / hw.peak_flops,
+            flops_vpu / hw.vpu_flops,
+            bytes_hbm / hw.hbm_bw,
+        )
+        + fixed_ops * hw.fixed_op_overhead_s
+    )
+
+
+def aggregate_intensity(layers: list[GemmDims]) -> float:
+    """Paper §3.2 'aggregate arithmetic intensity' of a network: total FLOPs
+    across linear layers divided by total bytes across linear layers."""
+    total_flops = sum(l.flops for l in layers)
+    total_bytes = sum(l.bytes_total for l in layers)
+    if total_bytes == 0:
+        return 0.0
+    return total_flops / total_bytes

@@ -1,0 +1,74 @@
+"""Empirical pre-deployment profiling (paper §5.3 / §6.1).
+
+The paper integrates ABFT-scheme selection into the CUTLASS profiler: all
+schemes are *executed* per layer shape and the fastest wins.  This module
+is that mode for our stack: measure wall time per (GemmDims, Scheme) on
+the current backend and emit a ``profile_table`` consumable by
+``SelectorConfig(mode="profile")``.
+
+On this CPU container the timings rank XLA emulations (useful for the
+mode's plumbing and tests); on a real TPU the same code times the fused
+Pallas kernel vs the global-ABFT XLA path — exactly the paper's flow.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.intensity import GemmDims
+from repro.core.protected import ABFTConfig, protected_matmul
+from repro.core.schemes import Scheme
+
+DEFAULT_CANDIDATES = (Scheme.GLOBAL, Scheme.BLOCK_1S)
+
+
+def _time(fn, *args, warmup=1, iters=3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def profile_layer(
+    dims: GemmDims,
+    candidates=DEFAULT_CANDIDATES,
+    dtype=jnp.float32,
+    use_pallas: bool | None = None,
+    seed: int = 0,
+) -> dict:
+    """Measured seconds per scheme for one GEMM shape."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((dims.m, dims.k)), dtype)
+    w = jnp.asarray(rng.standard_normal((dims.k, dims.n)), dtype)
+    out = {}
+    for sc in candidates:
+        cfg = ABFTConfig(scheme=sc, use_pallas=use_pallas)
+        fn = jax.jit(lambda a, b, _cfg=cfg: protected_matmul(
+            a, b, _cfg, out_dtype=dtype)[0])
+        out[sc] = _time(fn, x, w)
+    return out
+
+
+def build_profile_table(
+    layer_dims,
+    candidates=DEFAULT_CANDIDATES,
+    **kw,
+) -> dict:
+    """profile_table for SelectorConfig(mode='profile'):
+    {GemmDims: fastest Scheme}."""
+    table = {}
+    for dims in layer_dims:
+        times = profile_layer(dims, candidates, **kw)
+        table[dims] = min(times, key=times.get)
+    return table

@@ -1,0 +1,183 @@
+"""``protected_matmul`` — the paper's contribution as a composable JAX op.
+
+Every linear layer in the framework calls this instead of ``x @ w``.  The
+intensity-guided selector (paper §5.3) resolves Scheme.AUTO per layer shape
+at trace time; the chosen scheme executes and returns (y, CheckResult).
+
+Scheme dispatch:
+  GLOBAL   — XLA dot + Hari-style global check using the offline weight
+             checksum (precompute via ``precompute_weight_checksums``).
+  BLOCK_*  — the fused Pallas kernel (kernels/ops.py).
+  REPLICA  — fused kernel in replica mode (ablation baseline).
+  NONE     — plain dot, clean CheckResult.
+
+Distribution note: under pjit/shard_map the GLOBAL path shards exactly like
+the dot it protects (the check einsums follow the same specs); the BLOCK
+path runs the Pallas kernel per shard — on a TP-sharded weight each shard
+checks its local sub-GEMM, which is precisely the paper's "smallest parallel
+subproblem" principle lifted one level up the hierarchy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import checksums
+from repro.core.checksums import CheckResult
+from repro.core.faults import FaultSpec, inject_output_fault
+from repro.core.hardware import DEFAULT, HardwareSpec
+from repro.core.intensity import GemmDims
+from repro.core.schemes import BlockShape, Scheme
+from repro.core.selector import SelectorConfig, select_scheme
+
+
+class WeightChecksums(NamedTuple):
+    """Offline row checksums of a weight matrix (paper §2.5)."""
+
+    w_sum: jnp.ndarray
+    w_abs_sum: jnp.ndarray
+
+
+def precompute_weight_checksums(w: jnp.ndarray) -> WeightChecksums:
+    return WeightChecksums(
+        w_sum=checksums.weight_row_checksum(w),
+        w_abs_sum=checksums.weight_abs_checksum(w),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ABFTConfig:
+    """Framework-wide ABFT policy, threaded through model construction."""
+
+    enabled: bool = True
+    scheme: Scheme = Scheme.AUTO
+    selector: SelectorConfig = SelectorConfig()
+    hardware: HardwareSpec = DEFAULT
+    blocks: BlockShape = BlockShape()
+    use_pallas: bool = True        # False: block schemes via the jnp oracle
+    c_factor: float = 16.0
+    protect_backward: bool = False  # optional dgrad/wgrad protection
+    # fused-ABFT flash attention backend (kernels/flash_attention.py):
+    # protects attention's own GEMMs in-kernel and keeps score chunks in
+    # VMEM (the §Perf-identified lever).  XLA chunked attention otherwise.
+    flash_attention: bool = False
+
+    def resolve(self, dims: GemmDims, first_layer: bool = False) -> Scheme:
+        if not self.enabled:
+            return Scheme.NONE
+        if self.scheme != Scheme.AUTO:
+            return self.scheme
+        return select_scheme(
+            dims, self.hardware, self.selector, first_layer=first_layer
+        ).scheme
+
+    @staticmethod
+    def off() -> "ABFTConfig":
+        return ABFTConfig(enabled=False)
+
+
+def _gemm_dims(x: jnp.ndarray, w: jnp.ndarray, out_dtype) -> GemmDims:
+    *lead, m, k = x.shape
+    n = w.shape[-1]
+    batch = 1
+    for d in lead:
+        batch *= d
+    return GemmDims(
+        m=batch * m, k=k, n=n, batch=1,
+        dtype_bytes=jnp.dtype(x.dtype).itemsize,
+        out_dtype_bytes=jnp.dtype(out_dtype).itemsize,
+    )
+
+
+def protected_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    cfg: ABFTConfig = ABFTConfig(),
+    *,
+    wsums: WeightChecksums | None = None,
+    out_dtype=None,
+    fault: FaultSpec | None = None,
+    first_layer: bool = False,
+) -> tuple[jnp.ndarray, CheckResult]:
+    """ABFT-protected ``y = x @ w``.
+
+    x: (..., m, k);  w: (k, n).  Returns (y, CheckResult).
+    ``fault`` (optional) injects a single output fault for testing — on the
+    block path it corrupts the kernel accumulator; on the global path the
+    materialized output.
+    """
+    out_dtype = out_dtype or x.dtype
+    dims = _gemm_dims(x, w, out_dtype)
+    scheme = cfg.resolve(dims, first_layer=first_layer)
+
+    if scheme == Scheme.NONE:
+        y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+        y = y.astype(out_dtype)
+        if fault is not None:
+            y = inject_output_fault(y, fault)
+        return y, CheckResult.clean()
+
+    if scheme == Scheme.GLOBAL:
+        y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+        y = y.astype(out_dtype)
+        if fault is not None:
+            y = inject_output_fault(y, fault)
+        if wsums is None:
+            wsums = precompute_weight_checksums(w)
+        x2 = x.reshape((-1, x.shape[-1]))
+        y2 = y.reshape((-1, y.shape[-1]))
+        check = checksums.global_row_check(
+            x2, wsums.w_sum, wsums.w_abs_sum, y2, c_factor=cfg.c_factor
+        )
+        return y, check
+
+    # Block-level schemes — fused Pallas kernel (or jnp oracle fallback).
+    mode = {
+        Scheme.BLOCK_1S: "1s",
+        Scheme.BLOCK_2S: "2s",
+        Scheme.REPLICA: "replica",
+    }[scheme]
+    if cfg.use_pallas:
+        from repro.kernels import ops
+
+        return ops.abft_matmul(
+            x, w, mode=mode, blocks=cfg.blocks, out_dtype=out_dtype,
+            fault=fault, c_factor=cfg.c_factor,
+        )
+    # XLA emulation of the fused kernel's *semantics* (used inside the
+    # 512-device dry-run, where interpret-mode pallas_call cannot lower):
+    # the one-sided check with the weight checksum recomputed inline, as
+    # the kernel does.  Sharding-friendly: pure einsums, no reshapes of
+    # sharded dims.  On real TPU the Pallas kernel replaces this path; its
+    # internal costs are modeled analytically for the roofline since a
+    # custom-call's internals are opaque to cost_analysis either way.
+    f32 = jnp.float32
+    y = jnp.matmul(x, w, preferred_element_type=f32).astype(out_dtype)
+    if fault is not None:
+        y = inject_output_fault(y, fault)
+    # reductions accumulate in f32 via dtype= — materializing .astype(f32)
+    # copies of the weights would add 3x weight traffic per layer to the
+    # emulation (measured; the fused kernel pays none of this)
+    w_sum = jnp.sum(w, axis=-1, dtype=f32)
+    w_abs = jnp.sum(jnp.abs(w), axis=-1, dtype=f32)
+    check = jnp.einsum("...mk,k->...m", x, w_sum.astype(x.dtype),
+                       preferred_element_type=f32)
+    bound = jnp.einsum("...mk,k->...m", jnp.abs(x), w_abs.astype(x.dtype),
+                       preferred_element_type=f32)
+    yf = y.astype(f32)
+    rowsum = jnp.sum(y, axis=-1, dtype=f32)
+    res = jnp.abs(check - rowsum)
+    rtol = checksums.tolerance_scale(x.shape[-1], c=cfg.c_factor)
+    if x.dtype != f32:
+        # w_sum was quantized to the activation dtype for the check
+        # einsum: absorb its quantization into the threshold
+        rtol = rtol + 0.5 * checksums.eps_of(x.dtype)
+    tau = checksums.ATOL + rtol * bound
+    if y.dtype != f32:
+        tau = tau + 0.5 * checksums.eps_of(y.dtype) * jnp.sum(
+            jnp.abs(yf), axis=-1)
+    flag = checksums.flag_from(res, tau)
+    return y, CheckResult(flag=flag, residual=res, threshold=tau)

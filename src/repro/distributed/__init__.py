@@ -1,0 +1,23 @@
+"""Distribution: sharding rules, mesh construction, collectives helpers."""
+
+from repro.distributed.sharding import (
+    batch_axes,
+    batch_specs,
+    cache_specs,
+    expert_axes,
+    logits_spec,
+    make_sharding,
+    opt_state_specs,
+    param_specs,
+)
+
+__all__ = [
+    "batch_axes",
+    "batch_specs",
+    "cache_specs",
+    "expert_axes",
+    "logits_spec",
+    "make_sharding",
+    "opt_state_specs",
+    "param_specs",
+]

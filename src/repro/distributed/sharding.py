@@ -1,0 +1,232 @@
+"""Sharding rules: logical-parameter → PartitionSpec mapping for the
+production mesh (DESIGN.md §5).
+
+Axis roles:
+  pod   — outer data parallelism across pods (multi-pod mesh only)
+  data  — data parallelism; FSDP weight sharding for >=20B models; the
+          second expert-parallel axis for deepseek's 256 experts
+  model — tensor parallelism (heads / ffn / vocab) + expert parallelism
+
+Specs are constructed by name-based rules over the params pytree, with the
+stacked segment dim (scan) prepended as None.  GSPMD tolerates non-divisible
+shardings (it pads), so kv_heads=8 over model=16 etc. are accepted.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+FSDP_THRESHOLD = 20e9   # params; above this, weights shard over 'data' too
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _is_fsdp(cfg: ModelConfig) -> bool:
+    from repro.models.counting import count_params
+
+    return count_params(cfg) >= FSDP_THRESHOLD
+
+
+def expert_axes(cfg: ModelConfig, mesh: Mesh) -> tuple:
+    """Expert-parallel axis.  Experts shard over 'model' (matching the
+    group-local MoE dispatch buffer, whose group dim owns 'data'); large
+    MoE configs (deepseek) additionally FSDP the expert D dim over 'data'
+    via the fsdp flag, giving 256-way effective weight sharding."""
+    return ("model",)
+
+
+def _axes_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on any dim the mesh axes do not divide — explicit
+    NamedShardings (unlike internal GSPMD propagation) require exact
+    divisibility."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(entry if i < len(shape) else None)
+            continue
+        if shape[i] % _axes_size(mesh, entry) == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out[: len(shape)])
+
+
+def _param_rule(path: str, ndim: int, cfg: ModelConfig, mesh: Mesh,
+                fsdp: bool) -> P:
+    """Spec for one (unstacked) parameter leaf, by trailing path name."""
+    name = path.split("/")[-1]
+    e_ax = expert_axes(cfg, mesh)
+    # experts that don't divide the EP axes fall back to intra-expert TP
+    # (shard the expert FFN dim over 'model' — qwen2-moe's 60 experts)
+    ep_fits = cfg.n_experts % _axes_size(mesh, e_ax) == 0 \
+        if cfg.n_experts else True
+    d = "data" if fsdp else None
+
+    table = {
+        # embeddings / head
+        "embed": P("model", d),
+        "lm_head": P(d, "model"),
+        "vision_proj": P(None, None),
+        # attention
+        "wq": P(d, "model"), "wk": P(d, "model"), "wv": P(d, "model"),
+        "wo": P("model", d),
+        "bq": P("model"), "bk": P("model"), "bv": P("model"),
+        "q_norm": P(None), "k_norm": P(None),
+        # mla
+        "wq_a": P(d, None), "wq_b": P(d, "model"),
+        "wkv_a": P(d, None),
+        "q_a_norm": P(None), "kv_a_norm": P(None),
+        "w_uk": P("model", None, None), "w_uv": P("model", None, None),
+        # mlp
+        "up": P(d, "model"), "gate": P(d, "model"), "down": P("model", d),
+        "up_b": P("model"), "down_b": P(None),
+        # moe: EP when experts divide the model axis; else TP on the
+        # expert ffn dim (qwen2-moe's 60 experts over a 16-wide axis)
+        "router": P(None, None),
+        "w_up": P(e_ax, d, None) if ep_fits else P(None, d, "model"),
+        "w_gate": P(e_ax, d, None) if ep_fits else P(None, d, "model"),
+        "w_down": P(e_ax, None, d) if ep_fits else P(None, "model", d),
+        # mamba
+        "in_z": P(d, "model"), "in_x": P(d, "model"),
+        "in_bc": P(d, None), "in_dt": P(d, "model"),
+        "conv_x_w": P(None, "model"), "conv_x_b": P("model"),
+        "conv_bc_w": P(None, None), "conv_bc_b": P(None),
+        "A_log": P("model"), "D": P("model"), "dt_bias": P("model"),
+        "out_norm": P("model"), "out_proj": P("model", d),
+        # misc
+        "proj": P(None, None),        # mtp projection
+        "cross_gate": P(),
+    }
+    if name in table:
+        spec = table[name]
+        # trim/extend to leaf rank (biases under mlp rules etc.)
+        if len(spec) > ndim:
+            spec = P(*spec[:ndim])
+        return spec
+    # norms and anything unmatched: replicate
+    return P(*([None] * ndim))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for pp in path:
+        if hasattr(pp, "key"):
+            parts.append(str(pp.key))
+        elif hasattr(pp, "idx"):
+            parts.append(str(pp.idx))
+        else:
+            parts.append(str(pp))
+    return "/".join(parts)
+
+
+def param_specs(cfg: ModelConfig, params_shape, mesh: Mesh,
+                fsdp: bool | None = None):
+    """PartitionSpec pytree matching a params (shape) pytree."""
+    fsdp = _is_fsdp(cfg) if fsdp is None else fsdp
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        stacked = "segments" in ps
+        ndim = len(leaf.shape) - (1 if stacked else 0)
+        spec = _param_rule(ps, ndim, cfg, mesh, fsdp)
+        if stacked:
+            spec = P(None, *spec)
+        return sanitize_spec(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_state_specs(cfg: ModelConfig, params_shape, mesh: Mesh):
+    """ZeRO-1: optimizer moments always carry the FSDP ('data') sharding,
+    regardless of model size — distributed optimizer state."""
+    return param_specs(cfg, params_shape, mesh, fsdp=True)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh) -> dict:
+    ba = batch_axes(mesh)
+    specs = {"tokens": P(ba, None), "labels": P(ba, None)}
+    if cfg.is_encoder_decoder:
+        specs["enc_input"] = P(ba, None, None)
+    if cfg.vision_dim:
+        specs["images"] = P(ba, None, None)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, cache_shape, mesh: Mesh, batch: int,
+                kv_fallback: str = "headdim"):
+    """KV/state cache specs.  If the batch cannot cover the data axes
+    (long-context B=1), shard the cache *sequence* dim over 'data' instead
+    (context parallelism for decode).
+
+    ``kv_fallback`` picks the layout when kv_heads do not divide the model
+    axis: 'headdim' shards head_dim (baseline; forces per-layer cache
+    resharding in decode attention), 'replicate' leaves the cache
+    model-replicated so attention runs fully local per q-head shard with
+    one small all-reduce at the output projection (perf iteration A1)."""
+    ba = batch_axes(mesh)
+    dsize = 1
+    for a in ba:
+        dsize *= mesh.shape[a]
+    seq_shard = batch < dsize
+    b_ax = None if seq_shard else ba
+    s_ax = "data" if seq_shard else None
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        name = ps.split("/")[-1]
+        nd = len(leaf.shape)
+        if name in ("k", "v"):          # (B, S, KV, hd)
+            kv = leaf.shape[-2]
+            if kv % mesh.shape["model"] == 0:
+                core = P(b_ax, s_ax, "model", None)
+            elif kv_fallback == "replicate":
+                core = P(b_ax, s_ax, None, None)
+            else:
+                core = P(b_ax, s_ax, None, "model")
+        elif name in ("c_kv", "k_pe", "latent"):  # (B, S, c)
+            core = P(b_ax, s_ax, None)
+        elif name == "conv_x":          # (B, W-1, d_in)
+            core = P(b_ax, None, "model")
+        elif name == "conv_bc":
+            core = P(b_ax, None, None)
+        elif name == "ssm":             # (B, H, P, N)
+            core = P(b_ax, "model", None, None)
+        else:
+            return P(*([None] * nd))
+        if len(core) < nd:              # leading segment-stack dim
+            core = P(*([None] * (nd - len(core))), *core)
+        return sanitize_spec(core, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def logits_spec(mesh: Mesh, batch: int) -> P:
+    ba = batch_axes(mesh)
+    dsize = 1
+    for a in ba:
+        dsize *= mesh.shape[a]
+    if batch < dsize:
+        return P(None, None, "model")
+    return P(ba, None, "model")
+
+
+def make_sharding(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

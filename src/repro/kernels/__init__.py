@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the perf-critical fused-ABFT hot spots.
+
+The paper's compute hot-spot is the ABFT-protected GEMM itself; the
+block-level (thread-level-equivalent) scheme *requires* a custom kernel —
+checksum generation must happen while the operand tiles are VMEM-resident
+(DESIGN.md §2).
+
+* abft_matmul.py — blocked matmul with fused one-/two-sided block ABFT and
+  the replication baseline; ops.py is the jit'd wrapper, ref.py the oracle.
+* flash_attention.py — flash attention with in-VMEM ABFT over both
+  attention GEMMs (scores + PV, rescaled through the online softmax);
+  flash_ops.py is the wrapper.  This is the §Perf-identified next lever
+  for every memory-bound train/prefill cell.
+"""
+
+from repro.kernels.flash_ops import flash_attention
+from repro.kernels.ops import abft_matmul, default_interpret
+
+__all__ = ["abft_matmul", "default_interpret", "flash_attention"]

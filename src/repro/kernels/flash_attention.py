@@ -1,0 +1,188 @@
+"""Pallas TPU kernel: flash attention with *fused in-VMEM ABFT*.
+
+This is the "shared next lever" identified by the §Perf iterations: every
+train/prefill cell is memory-bound on attention score-chunk HBM round
+trips, and the paper's design principle (§3.5: add no memory traffic)
+applies to attention's two GEMMs exactly as it does to linear layers:
+
+  S = Q K^T   — protected by a one-sided checksum of the K tile:
+                 chk_s = Q @ rowsum(K_tile)  vs  rowsum(S_tile),
+                 checked per (q_block, k_block) while S is in VMEM;
+  O = P V     — protected through the online-softmax rescaling: the
+                 checksum accumulator rescales with the same correction
+                 factor as the output accumulator, so
+                 chk_pv = Σ corr·(P @ rowsum(V_tile))  vs  rowsum(acc)
+                 holds at the end of the K loop.
+
+The softmax itself is nonlinear (ABFT does not traverse exp); the paper's
+treatment (replicate nonlinear ops) applies — here the exp/max/sum chain
+is a small VPU computation whose inputs and outputs are *both* covered by
+the two GEMM checks, bounding undetected-fault propagation to the
+elementwise stage.
+
+Kernel structure: grid (num_q_blocks, num_k_blocks), K innermost; online
+softmax state (m, l), f32 accumulators, ABFT accumulators and magnitude
+bounds in VMEM scratch.  Causal masking by absolute block positions.
+Single-head 2-D problem; ops.py wrappers vmap over (batch, heads).
+Validated in interpret mode against ref.py (tests/test_flash_attention.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, fault_ref,            # inputs
+    o_ref, res_s_ref, bnd_s_ref, res_pv_ref, bnd_pv_ref,   # outputs
+    m_ref, l_ref, acc_ref, chk_ref, bndc_ref, ress_ref, bnds_ref,  # scratch
+    *, gk: int, bq: int, bk: int, causal: bool, scale: float,
+):
+    qi = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        chk_ref[...] = jnp.zeros_like(chk_ref)
+        bndc_ref[...] = jnp.zeros_like(bndc_ref)
+        ress_ref[...] = jnp.zeros_like(ress_ref)
+        bnds_ref[...] = jnp.zeros_like(bnds_ref)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    qf = q.astype(F32)
+    kf = k.astype(F32)
+    vf = v.astype(F32)
+
+    # ---- QK^T on the MXU, f32 accumulation
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=F32) * scale
+
+    # ---- ABFT check #1: scores vs K-tile checksum (VPU)
+    k_sum = jnp.sum(kf, axis=0)                    # (d,)
+    k_abs = jnp.sum(jnp.abs(kf), axis=0)
+    chk_s = jnp.sum(qf * k_sum[None, :], axis=1) * scale       # (bq,)
+    bnd_s = jnp.sum(jnp.abs(qf) * k_abs[None, :], axis=1) * abs(scale)
+    res_here = jnp.abs(chk_s - jnp.sum(s, axis=1))
+    ress_ref[...] = jnp.maximum(ress_ref[...], res_here)
+    bnds_ref[...] = jnp.maximum(bnds_ref[...], bnd_s)
+
+    # ---- causal mask by absolute positions
+    if causal:
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    # ---- online softmax update
+    m_new = jnp.maximum(m_ref[...], jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_ref[...] - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    m_ref[...] = m_new
+
+    # ---- PV on the MXU + ABFT check #2 accumulators (VPU), with the
+    # same rescaling so the invariant survives the online softmax
+    pv = jax.lax.dot_general(
+        p, vf, (((1,), (0,)), ((), ())), preferred_element_type=F32)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    v_sum = jnp.sum(vf, axis=1)                    # (bk,)
+    v_abs = jnp.sum(jnp.abs(vf), axis=1)
+    chk_ref[...] = chk_ref[...] * corr + jnp.sum(p * v_sum[None, :], axis=1)
+    bndc_ref[...] = bndc_ref[...] * corr + jnp.sum(p * v_abs[None, :],
+                                                   axis=1)
+
+    @pl.when(ki == gk - 1)
+    def _finalize():
+        acc = acc_ref[...]
+        # optional fault: corrupt the output accumulator only (the ABFT
+        # data path consumed the same tiles independently)
+        fi = fault_ref[...]
+        here = (fi[4] == 1) & (fi[0] == qi)
+        rows = jax.lax.broadcasted_iota(jnp.int32, acc.shape, 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, acc.shape, 1)
+        mask = (rows == fi[2]) & (cols == fi[3]) & here
+        acc = jnp.where(
+            mask, acc + jax.lax.bitcast_convert_type(fi[5], F32), acc)
+
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+        res_pv_ref[0, :] = jnp.abs(chk_ref[...] - jnp.sum(acc, axis=1))
+        bnd_pv_ref[0, :] = bndc_ref[...]
+        res_s_ref[0, :] = ress_ref[...]
+        bnd_s_ref[0, :] = bnds_ref[...]
+
+
+def flash_attention_kernel(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    fault: jnp.ndarray,
+    *,
+    bq: int,
+    bk: int,
+    causal: bool = True,
+    scale: float | None = None,
+    out_dtype=None,
+    interpret: bool = True,
+):
+    """Single-head fused-ABFT flash attention.
+
+    q: (Lq, d), k: (Lk, d), v: (Lk, dv) — padded to block multiples.
+    fault: (6,) int32 [q_block, _, row, col, enabled, delta_bits].
+    Returns (o (Lq, dv), res_s, bnd_s, res_pv, bnd_pv) with per-q-row
+    residual/bound vectors of shape (gq, bq).
+    """
+    Lq, d = q.shape
+    Lk, dv = v.shape
+    assert Lq % bq == 0 and Lk % bk == 0, ((Lq, Lk), (bq, bk))
+    gq, gk = Lq // bq, Lk // bk
+    scale = scale if scale is not None else d ** -0.5
+    out_dtype = out_dtype or q.dtype
+
+    kernel = functools.partial(
+        _kernel, gk=gk, bq=bq, bk=bk, causal=causal, scale=scale)
+    vec_spec = pl.BlockSpec((1, bq), lambda i, j: (i, 0))
+    o, rs, bs, rp, bp = pl.pallas_call(
+        kernel,
+        grid=(gq, gk),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk, dv), lambda i, j: (j, 0)),
+            pl.BlockSpec((6,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, dv), lambda i, j: (i, 0)),
+            vec_spec, vec_spec, vec_spec, vec_spec,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Lq, dv), out_dtype),
+            jax.ShapeDtypeStruct((gq, bq), F32),
+            jax.ShapeDtypeStruct((gq, bq), F32),
+            jax.ShapeDtypeStruct((gq, bq), F32),
+            jax.ShapeDtypeStruct((gq, bq), F32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq,), F32),       # m
+            pltpu.VMEM((bq,), F32),       # l
+            pltpu.VMEM((bq, dv), F32),    # acc
+            pltpu.VMEM((bq,), F32),       # pv checksum
+            pltpu.VMEM((bq,), F32),       # pv bound
+            pltpu.VMEM((bq,), F32),       # scores residual (max over k)
+            pltpu.VMEM((bq,), F32),       # scores bound
+        ],
+        interpret=interpret,
+    )(q, k, v, fault)
+    return o, rs, bs, rp, bp

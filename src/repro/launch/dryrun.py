@@ -1,0 +1,322 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "")
+    + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/collective analysis per cell.
+
+This is the proof that the distribution config is coherent without real
+hardware (512 placeholder host devices).  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json and feed
+EXPERIMENTS.md §Dry-run and §Roofline.
+"""
+
+import argparse
+import gzip
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.core.hardware import TPU_V5E
+from repro.core.protected import ABFTConfig
+from repro.core.schemes import Scheme
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import LayerCtx, build_model
+from repro.models.layers import ShardingHints
+from repro.models.counting import model_flops
+from repro.roofline.analysis import analyze_compiled
+from repro.train import OptConfig, TrainConfig, init_opt_state, make_train_step
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Perf-iteration variants (EXPERIMENTS.md §Perf): --set key=value tweaks
+# one aspect of the cell build; baseline is the empty dict.
+VARIANT: dict = {}
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# long_500k needs sub-quadratic attention: run only for SSM/hybrid archs
+# (decode state is O(1) / KV-linear); skip for pure full-attention archs
+# (DESIGN.md §Arch-applicability).
+LONG_OK = {"mamba2-1.3b", "jamba-v0.1-52b"}
+
+
+def skip_reason(arch: str, shape: str) -> str | None:
+    if shape == "long_500k" and arch not in LONG_OK:
+        return "long_500k skipped: pure full-attention arch (DESIGN.md §4)"
+    return None
+
+
+def dryrun_abft(arch: str) -> ABFTConfig:
+    """ABFT policy used inside the dry-run graph: auto-selected schemes with
+    the XLA emulation of the fused kernel (use_pallas=False; see
+    core/protected.py — a custom-call's internals are opaque to
+    cost_analysis either way)."""
+    mode = VARIANT.get("abft", "auto")
+    if mode == "off":
+        return ABFTConfig.off()
+    if mode == "auto":
+        return ABFTConfig(scheme=Scheme.AUTO, use_pallas=False)
+    return ABFTConfig(scheme=Scheme(mode), use_pallas=False)
+
+
+def _moment_dtype(cfg) -> str:
+    from repro.models.counting import count_params
+
+    return "bfloat16" if count_params(cfg) >= 100e9 else "float32"
+
+
+def make_hints(cfg, mesh) -> ShardingHints:
+    ba = shd.batch_axes(mesh)
+    dp_size = 1
+    for a in ba:
+        dp_size *= mesh.shape[a]
+    ep_fits = (cfg.n_experts % mesh.shape["model"] == 0) \
+        if cfg.n_experts else True
+    return ShardingHints(
+        dp=ba,
+        dp_size=dp_size,
+        ep=("model",),
+        moe_mode="ep" if ep_fits else "tp",
+    )
+
+
+def build_cell(arch: str, shape: str, mesh):
+    """Returns (fn, args_structs, in_shardings, out_shardings, meta)."""
+    cfg = get_config(arch)
+    if "pad_heads" in VARIANT:
+        import dataclasses as _dc
+
+        hp = int(VARIANT["pad_heads"])
+        kvp = int(VARIANT.get("pad_kv_heads", hp))
+        cfg = _dc.replace(cfg, pad_heads_to=hp, pad_kv_heads_to=kvp)
+    spec = SHAPES[shape]
+    model = build_model(cfg)
+    abft = dryrun_abft(arch)
+    B, S = spec["batch"], spec["seq"]
+    dt = jnp.bfloat16
+    hints = make_hints(cfg, mesh)
+
+    params_struct = jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0), dtype=dt))
+    fsdp = None
+    if "fsdp" in VARIANT:
+        fsdp = VARIANT["fsdp"] != "off"
+    p_spec = shd.param_specs(cfg, params_struct, mesh, fsdp=fsdp)
+    p_shard = shd.make_sharding(mesh, p_spec)
+    ba = shd.batch_axes(mesh)
+
+    def _batch_struct(b, s):
+        d = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if spec["kind"] == "train":
+            d["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if cfg.is_encoder_decoder:
+            d["enc_input"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq_len, cfg.d_model), dt)
+        if cfg.vision_dim:
+            d["images"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_image_tokens, cfg.vision_dim), dt)
+        return d
+
+    if spec["kind"] == "train":
+        ocfg = OptConfig(moment_dtype=_moment_dtype(cfg))
+        tcfg = TrainConfig(
+            opt=ocfg, microbatches=int(VARIANT.get("microbatches", 1)))
+        opt_struct = jax.eval_shape(
+            lambda p: init_opt_state(p, ocfg), params_struct)
+        o_spec = shd.opt_state_specs(cfg, opt_struct, mesh)
+        o_shard = shd.make_sharding(mesh, o_spec)
+        batch = _batch_struct(B, S)
+        b_spec = {k: (P(ba, None) if v.ndim == 2 else P(ba, None, None))
+                  for k, v in batch.items()}
+        b_shard = shd.make_sharding(mesh, b_spec)
+        step = make_train_step(model, abft, tcfg, hints=hints)
+
+        def fn(params, opt_state, batch):
+            return step(params, opt_state, batch)
+
+        args = (params_struct, opt_struct, batch)
+        in_sh = (p_shard, o_shard, b_shard)
+        out_sh = (p_shard, o_shard,
+                  jax.tree_util.tree_map(
+                      lambda _: NamedSharding(mesh, P()), {
+                          "loss": 0, "aux_loss": 0, "abft_flag": 0,
+                          "grad_norm": 0, "total_loss": 0}))
+        meta = dict(tokens=B * S, training=True)
+        return fn, args, in_sh, out_sh, meta
+
+    cache_struct = jax.eval_shape(
+        lambda: model.init_cache(B, S, dtype=dt))
+    c_spec = shd.cache_specs(
+        cfg, cache_struct, mesh, B,
+        kv_fallback=VARIANT.get("kv_fallback", "headdim"))
+    c_shard = shd.make_sharding(mesh, c_spec)
+    lg_spec = shd.sanitize_spec(
+        shd.logits_spec(mesh, B), (B, 1, cfg.vocab_size), mesh)
+    lg_shard = NamedSharding(mesh, lg_spec)
+    fl_shard = NamedSharding(mesh, P())
+    ctx = LayerCtx(abft=abft, hints=hints)
+
+    if spec["kind"] == "prefill":
+        batch = _batch_struct(B, S)
+        b_spec = {k: (P(ba, None) if v.ndim == 2 else P(ba, None, None))
+                  for k, v in batch.items()}
+        b_shard = shd.make_sharding(mesh, b_spec)
+
+        def fn(params, batch, cache):
+            return model.prefill(params, batch, cache, ctx)
+
+        args = (params_struct, batch, cache_struct)
+        in_sh = (p_shard, b_shard, c_shard)
+        out_sh = (lg_shard, c_shard, fl_shard)
+        meta = dict(tokens=B * S, training=False)
+        return fn, args, in_sh, out_sh, meta
+
+    # decode: one new token against a seq_len-deep cache
+    tok_struct = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_spec = P(ba, None) if B >= mesh.devices.size // mesh.shape[
+        "model"] else P(None, None)
+    pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(params, token, cache, pos):
+        return model.decode(params, token, cache, pos, ctx)
+
+    args = (params_struct, tok_struct, cache_struct, pos_struct)
+    in_sh = (p_shard, NamedSharding(mesh, tok_spec), c_shard,
+             NamedSharding(mesh, P()))
+    out_sh = (lg_shard, c_shard, fl_shard)
+    meta = dict(tokens=B, training=False)
+    return fn, args, in_sh, out_sh, meta
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, outdir: pathlib.Path,
+             force: bool = False) -> dict:
+    outdir.mkdir(parents=True, exist_ok=True)
+    suffix = ""
+    if VARIANT:
+        suffix = "__" + "-".join(f"{k}={v}" for k, v in sorted(
+            VARIANT.items()))
+    path = outdir / f"{arch}__{shape}__{mesh_kind}{suffix}.json"
+    if path.exists() and not force:
+        rec = json.loads(path.read_text())
+        if rec.get("status") != "error":
+            print(f"[skip-cached] {path.name}")
+            return rec
+
+    reason = skip_reason(arch, shape)
+    if reason:
+        rec = dict(arch=arch, shape=shape, mesh=mesh_kind, status="skipped",
+                   reason=reason)
+        path.write_text(json.dumps(rec, indent=2))
+        print(f"[skipped] {arch} {shape}: {reason}")
+        return rec
+
+    t0 = time.time()
+    rec = dict(arch=arch, shape=shape, mesh=mesh_kind)
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "pod"))
+        fn, args, in_sh, out_sh, meta = build_cell(arch, shape, mesh)
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        hlo_text = compiled.as_text()
+        if os.environ.get("DRYRUN_SAVE_HLO", "1") == "1":
+            hlo_path = path.with_suffix(".hlo.txt.gz")
+            with gzip.open(hlo_path, "wt") as f:
+                f.write(hlo_text)
+        print(compiled.memory_analysis())
+        cost = compiled.cost_analysis()
+        print({k: v for k, v in (cost[0] if isinstance(cost, (list, tuple))
+                                 else cost).items()
+               if k in ("flops", "bytes accessed")})
+        analysis = analyze_compiled(compiled, TPU_V5E)
+        cfg = get_config(arch)
+        mf = model_flops(cfg, meta["tokens"], meta["training"])
+        chips = mesh.devices.size
+        hlo_flops_global = analysis["flops_per_device"] * chips
+        rec.update(
+            status="ok",
+            variant=dict(VARIANT),
+            chips=chips,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            model_flops=mf,
+            hlo_flops_global=hlo_flops_global,
+            useful_flops_ratio=(
+                mf / hlo_flops_global if hlo_flops_global else 0.0),
+            **analysis,
+        )
+        print(f"[ok] {arch} {shape} {mesh_kind}: "
+              f"compute={analysis['compute_s']:.4f}s "
+              f"memory={analysis['memory_s']:.4f}s "
+              f"collective={analysis['collective_s']:.4f}s "
+              f"bound={analysis['bottleneck']} "
+              f"hbm/dev={analysis['hbm_per_device_gib']:.2f}GiB "
+              f"(compile {t_compile:.0f}s)")
+    except Exception as e:  # noqa: BLE001 — record failures per cell
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[error] {arch} {shape} {mesh_kind}: {e}")
+    path.write_text(json.dumps(rec, indent=2, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ALL_ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "pod", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--set", action="append", default=[],
+                    help="perf-variant knob key=value (repeatable)")
+    args = ap.parse_args()
+    for kv in args.set:
+        k, _, v = kv.partition("=")
+        VARIANT[k] = v
+
+    outdir = pathlib.Path(args.out)
+    meshes = ["single", "pod"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch in ALL_ARCHS:
+            for shape in SHAPES:
+                for mk in meshes:
+                    cells.append((arch, shape, mk))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for mk in meshes:
+            cells.append((args.arch, args.shape, mk))
+
+    n_ok = n_err = 0
+    for arch, shape, mk in cells:
+        rec = run_cell(arch, shape, mk, outdir, force=args.force)
+        n_ok += rec.get("status") in ("ok", "skipped")
+        n_err += rec.get("status") == "error"
+    print(f"done: {n_ok} ok/skipped, {n_err} errors")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

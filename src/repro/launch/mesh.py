@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run sets
+XLA_FLAGS before any jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The production mesh: one pod = 16x16 (256 chips, v5e pod),
+    multi-pod = 2 pods = 512 chips with a leading 'pod' DP axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-process debug mesh over whatever devices exist (tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def make_mesh_from_devices(devices, *, model_parallel: int):
+    """Elastic variant: build a (data, model) mesh from a surviving device
+    list (runtime/elastic.py re-meshes after failures)."""
+    import numpy as np
+
+    n = len(devices)
+    mp = min(model_parallel, n)
+    dp = n // mp
+    usable = devices[: dp * mp]
+    arr = np.array(usable).reshape(dp, mp)
+    from jax.sharding import Mesh
+
+    return Mesh(arr, ("data", "model"))

@@ -1,0 +1,13 @@
+"""Model zoo: every assigned architecture built from ABFT-protected layers."""
+
+from repro.models.layers import LayerCtx, ModelFault
+from repro.models.model import Model, build_model, layer_tags, seg_plan
+
+__all__ = [
+    "LayerCtx",
+    "Model",
+    "ModelFault",
+    "build_model",
+    "layer_tags",
+    "seg_plan",
+]

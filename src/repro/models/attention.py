@@ -1,0 +1,349 @@
+"""Attention sublayers: GQA (llama/qwen/stablelm/jamba/vlm), absorbed MLA
+(deepseek-v3), and cross-attention (whisper decoder / vlm image layers).
+
+All projections run through the ABFT-protected dense().  Decode paths
+write/read a KV cache passed explicitly (functional style).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (
+    LayerCtx,
+    apply_rope,
+    chunked_attention,
+    decode_attention,
+    dense,
+    or_flags,
+    rms_norm,
+    rope_tables,
+)
+
+F32 = jnp.float32
+
+
+def _init(key, shape, scale=0.02, dtype=jnp.bfloat16):
+    return (scale * jax.random.normal(key, shape, F32)).astype(dtype)
+
+
+# ================================================================ GQA
+
+def eff_counts(cfg: ModelConfig) -> tuple:
+    """(H_eff, KV_eff): head counts after TP padding (DESIGN/§Perf).
+    Padding preserves the kv-major (kv, group) head layout so the padded
+    model is mathematically identical to the logical one (padded wo rows
+    are zero)."""
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    Hp = max(cfg.pad_heads_to, H)
+    KVp = max(cfg.pad_kv_heads_to, KV)
+    G = H // max(KV, 1)
+    Gp = Hp // max(KVp, 1)
+    assert KVp * Gp == Hp and Gp >= G, (
+        f"invalid head padding H={H}->{Hp}, KV={KV}->{KVp}")
+    return Hp, KVp
+
+
+def _pad_heads_in(w, d, KV, G, hd, KVp, Gp):
+    """(d, KV*G*hd) -> (d, KVp*Gp*hd), zero-padding in kv-major layout."""
+    if KV == KVp and G == Gp:
+        return w
+    w4 = w.reshape(d, KV, G, hd)
+    w4 = jnp.pad(w4, ((0, 0), (0, KVp - KV), (0, Gp - G), (0, 0)))
+    return w4.reshape(d, KVp * Gp * hd)
+
+
+def _pad_heads_out(w, KV, G, hd, d, KVp, Gp):
+    """(KV*G*hd, d) -> (KVp*Gp*hd, d) with ZERO rows for padded heads —
+    padded-head attention garbage never reaches the residual stream."""
+    if KV == KVp and G == Gp:
+        return w
+    w4 = w.reshape(KV, G, hd, d)
+    w4 = jnp.pad(w4, ((0, KVp - KV), (0, Gp - G), (0, 0), (0, 0)))
+    return w4.reshape(KVp * Gp * hd, d)
+
+
+def _pad_bias(b, KV, G, hd, KVp, Gp):
+    if KV == KVp and G == Gp:
+        return b
+    b3 = b.reshape(KV, G, hd)
+    b3 = jnp.pad(b3, ((0, KVp - KV), (0, Gp - G), (0, 0)))
+    return b3.reshape(KVp * Gp * hd)
+
+
+def init_gqa(cfg: ModelConfig, key, dtype) -> dict:
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    Hp, KVp = eff_counts(cfg)
+    G, Gp = H // KV, Hp // KVp
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": _pad_heads_in(
+            _init(ks[0], (cfg.d_model, H * hd), dtype=dtype),
+            cfg.d_model, KV, G, hd, KVp, Gp),
+        "wk": _pad_heads_in(
+            _init(ks[1], (cfg.d_model, KV * hd), dtype=dtype),
+            cfg.d_model, KV, 1, hd, KVp, 1),
+        "wv": _pad_heads_in(
+            _init(ks[2], (cfg.d_model, KV * hd), dtype=dtype),
+            cfg.d_model, KV, 1, hd, KVp, 1),
+        "wo": _pad_heads_out(
+            _init(ks[3], (H * hd, cfg.d_model), dtype=dtype),
+            KV, G, hd, cfg.d_model, KVp, Gp),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = _pad_bias(jnp.zeros((H * hd,), dtype), KV, G, hd, KVp, Gp)
+        p["bk"] = _pad_bias(jnp.zeros((KV * hd,), dtype), KV, 1, hd, KVp, 1)
+        p["bv"] = _pad_bias(jnp.zeros((KV * hd,), dtype), KV, 1, hd, KVp, 1)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _qkv(x, p, cfg: ModelConfig, ctx: LayerCtx, positions):
+    B, L, _ = x.shape
+    hd = cfg.resolved_head_dim
+    Hp, KVp = eff_counts(cfg)
+    q, f1 = dense(x, p["wq"], ctx, "qkv", b=p.get("bq"))
+    k, f2 = dense(x, p["wk"], ctx, "qkv", b=p.get("bk"))
+    v, f3 = dense(x, p["wv"], ctx, "qkv", b=p.get("bv"))
+    q = q.reshape(B, L, Hp, hd)
+    k = k.reshape(B, L, KVp, hd)
+    v = v.reshape(B, L, KVp, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope_theta:
+        cos, sin, rot = rope_tables(
+            positions, hd, cfg.rope_theta, cfg.rope_pct)
+        q = apply_rope(q, cos, sin, rot)
+        k = apply_rope(k, cos, sin, rot)
+    return q, k, v, or_flags(f1, f2, f3)
+
+
+def _attend_full(q, k, v, ctx: LayerCtx, causal: bool):
+    """Full-sequence attention core: fused-ABFT flash kernel when the
+    policy enables it (protects the attention GEMMs themselves), else the
+    XLA chunked path (GEMM projections still ABFT-protected)."""
+    if ctx.abft.flash_attention:
+        from repro.kernels.flash_ops import flash_attention
+
+        out, chk = flash_attention(q, k, v, causal=causal)
+        return out, chk.flag
+    return chunked_attention(q, k, v, causal=causal), jnp.zeros((), bool)
+
+
+def gqa_forward(x, p, cfg: ModelConfig, ctx: LayerCtx, positions,
+                causal: bool = True):
+    """Full-sequence attention (train / encoder).  x: (B, L, D)."""
+    B, L, _ = x.shape
+    q, k, v, flag = _qkv(x, p, cfg, ctx, positions)
+    out, f_attn = _attend_full(q, k, v, ctx, causal)
+    out = out.reshape(B, L, -1)
+    out, f = dense(out, p["wo"], ctx, "attn_out")
+    return out, or_flags(flag, f_attn, f)
+
+
+def gqa_prefill(x, p, cfg: ModelConfig, ctx: LayerCtx, positions, cache):
+    """Prefill: run full attention AND fill the cache.  cache: dict with
+    'k','v' of shape (B, S_max, KV, hd) and scalar 'len'."""
+    B, L, _ = x.shape
+    q, k, v, flag = _qkv(x, p, cfg, ctx, positions)
+    out = chunked_attention(q, k, v, causal=True)
+    out = out.reshape(B, L, -1)
+    out, f = dense(out, p["wo"], ctx, "attn_out")
+    new_cache = {
+        "k": jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+    }
+    return out, new_cache, or_flags(flag, f)
+
+
+def gqa_decode(x, p, cfg: ModelConfig, ctx: LayerCtx, pos, cache):
+    """One-token decode.  x: (B, 1, D); pos: scalar current position;
+    cache k/v: (B, S_max, KV, hd)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v, flag = _qkv(x, p, cfg, ctx, positions)
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    out = decode_attention(q, ck, cv, pos + 1)
+    out = out.reshape(B, 1, -1)
+    out, f = dense(out, p["wo"], ctx, "attn_out")
+    return out, {"k": ck, "v": cv}, or_flags(flag, f)
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    hd = cfg.resolved_head_dim
+    _, KVp = eff_counts(cfg)
+    return {
+        "k": jnp.zeros((batch, max_len, KVp, hd), dtype),
+        "v": jnp.zeros((batch, max_len, KVp, hd), dtype),
+    }
+
+
+# ================================================================ cross-attn
+
+def init_cross(cfg: ModelConfig, key, dtype, kv_dim: int | None = None):
+    hd = cfg.resolved_head_dim
+    kv_dim = kv_dim or cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _init(ks[0], (cfg.d_model, cfg.n_heads * hd), dtype=dtype),
+        "wk": _init(ks[1], (kv_dim, cfg.n_kv_heads * hd), dtype=dtype),
+        "wv": _init(ks[2], (kv_dim, cfg.n_kv_heads * hd), dtype=dtype),
+        "wo": _init(ks[3], (cfg.n_heads * hd, cfg.d_model), dtype=dtype),
+    }
+
+
+def cross_kv(mem, p, cfg: ModelConfig, ctx: LayerCtx):
+    """Project encoder/vision memory to K/V once (reused every decode)."""
+    B, S, _ = mem.shape
+    hd = cfg.resolved_head_dim
+    k, f1 = dense(mem, p["wk"], ctx, "cross_qkv")
+    v, f2 = dense(mem, p["wv"], ctx, "cross_qkv")
+    return (
+        k.reshape(B, S, cfg.n_kv_heads, hd),
+        v.reshape(B, S, cfg.n_kv_heads, hd),
+        or_flags(f1, f2),
+    )
+
+
+def cross_forward(x, k, v, p, cfg: ModelConfig, ctx: LayerCtx):
+    """Cross-attention: queries from x, K/V precomputed from memory."""
+    B, L, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q, f1 = dense(x, p["wq"], ctx, "cross_qkv")
+    q = q.reshape(B, L, cfg.n_heads, hd)
+    out = chunked_attention(q, k, v, causal=False)
+    out = out.reshape(B, L, -1)
+    out, f2 = dense(out, p["wo"], ctx, "cross_out")
+    return out, or_flags(f1, f2)
+
+
+# ================================================================ MLA
+# Absorbed formulation (DESIGN.md §4): attention becomes MQA with one
+# shared latent key space  k' = [c_kv ; k_pe]  (dim kv_lora + rope),
+# v' = c_kv, per-head query  q' = [q_nope @ W_uk ; q_pe].
+
+def init_mla(cfg: ModelConfig, key, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "wq_a": _init(ks[0], (cfg.d_model, cfg.q_lora_rank), dtype=dtype),
+        "q_a_norm": jnp.ones((cfg.q_lora_rank,), dtype),
+        "wq_b": _init(ks[1], (cfg.q_lora_rank, H * (dn + dr)), dtype=dtype),
+        "wkv_a": _init(
+            ks[2], (cfg.d_model, cfg.kv_lora_rank + dr), dtype=dtype),
+        "kv_a_norm": jnp.ones((cfg.kv_lora_rank,), dtype),
+        # up-projections, stored head-major for the absorbed form
+        "w_uk": _init(ks[3], (H, dn, cfg.kv_lora_rank), dtype=dtype),
+        "w_uv": _init(ks[4], (H, cfg.kv_lora_rank, dv), dtype=dtype),
+        "wo": _init(ks[5], (H * dv, cfg.d_model), dtype=dtype),
+    }
+
+
+def _mla_q(x, p, cfg: ModelConfig, ctx: LayerCtx, positions):
+    """Absorbed queries: (B, L, H, kv_lora + rope)."""
+    B, L, _ = x.shape
+    H = cfg.n_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    qa, f1 = dense(x, p["wq_a"], ctx, "q_a")
+    qa = rms_norm(qa, p["q_a_norm"], cfg.norm_eps)
+    q, f2 = dense(qa, p["wq_b"], ctx, "qkv")
+    q = q.reshape(B, L, H, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    cos, sin, rot = rope_tables(positions, dr, cfg.rope_theta)
+    q_pe = apply_rope(q_pe, cos, sin, rot)
+    # absorb W_uk:  (B,L,H,dn) @ (H,dn,c) -> (B,L,H,c)
+    q_abs = jnp.einsum(
+        "blhd,hdc->blhc", q_nope.astype(F32), p["w_uk"].astype(F32),
+        preferred_element_type=F32).astype(x.dtype)
+    q_full = jnp.concatenate([q_abs, q_pe], axis=-1)
+    # scale uses the *pre-absorption* head dim (dn + dr)
+    scale = (dn + dr) ** -0.5
+    return q_full, scale, or_flags(f1, f2)
+
+
+def _mla_latent_kv(x, p, cfg: ModelConfig, ctx: LayerCtx, positions):
+    """Latent K/V: c_kv (B, L, c) + roped k_pe (B, L, dr)."""
+    dr = cfg.qk_rope_head_dim
+    kv, f = dense(x, p["wkv_a"], ctx, "kv_a")
+    c_kv, k_pe = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    c_kv = rms_norm(c_kv, p["kv_a_norm"], cfg.norm_eps)
+    cos, sin, rot = rope_tables(positions, dr, cfg.rope_theta)
+    k_pe = apply_rope(k_pe[:, :, None, :], cos, sin, rot)[:, :, 0, :]
+    return c_kv, k_pe, f
+
+
+def _mla_attend(q_full, scale, latent, p, cfg, ctx, B, L, decode_len=None):
+    """latent: concatenated [c_kv ; k_pe] (B, S, c+dr).  Values are the
+    first c dims of the same buffer — attention reads ONE cache tensor
+    (no per-step concat of the 32k-deep cache; §Perf iteration C2)."""
+    c = cfg.kv_lora_rank
+    kv = latent[:, :, None, :]                       # KV=1 (MQA)
+    vv = latent[:, :, None, :c]
+    if decode_len is None:
+        ctxv = chunked_attention(
+            q_full, kv, vv, causal=True, scale=scale)
+    else:
+        ctxv = decode_attention(q_full, kv, vv, decode_len, scale=scale)
+    # un-absorb values: (B,L,H,c) @ (H,c,dv) -> (B,L,H,dv)
+    out = jnp.einsum(
+        "blhc,hcv->blhv", ctxv.astype(F32), p["w_uv"].astype(F32),
+        preferred_element_type=F32).astype(q_full.dtype)
+    out = out.reshape(B, L, -1)
+    return dense(out, p["wo"], ctx, "attn_out")
+
+
+def mla_forward(x, p, cfg: ModelConfig, ctx: LayerCtx, positions):
+    B, L, _ = x.shape
+    q_full, scale, f1 = _mla_q(x, p, cfg, ctx, positions)
+    c_kv, k_pe, f2 = _mla_latent_kv(x, p, cfg, ctx, positions)
+    latent = jnp.concatenate([c_kv, k_pe], axis=-1)
+    out, f3 = _mla_attend(q_full, scale, latent, p, cfg, ctx, B, L)
+    return out, or_flags(f1, f2, f3)
+
+
+def mla_prefill(x, p, cfg: ModelConfig, ctx: LayerCtx, positions, cache):
+    B, L, _ = x.shape
+    q_full, scale, f1 = _mla_q(x, p, cfg, ctx, positions)
+    c_kv, k_pe, f2 = _mla_latent_kv(x, p, cfg, ctx, positions)
+    latent = jnp.concatenate([c_kv, k_pe], axis=-1)
+    out, f3 = _mla_attend(q_full, scale, latent, p, cfg, ctx, B, L)
+    new_cache = {
+        "latent": jax.lax.dynamic_update_slice(
+            cache["latent"], latent.astype(cache["latent"].dtype),
+            (0, 0, 0)),
+    }
+    return out, new_cache, or_flags(f1, f2, f3)
+
+
+def mla_decode(x, p, cfg: ModelConfig, ctx: LayerCtx, pos, cache):
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_full, scale, f1 = _mla_q(x, p, cfg, ctx, positions)
+    c_kv, k_pe, f2 = _mla_latent_kv(x, p, cfg, ctx, positions)
+    latent_new = jnp.concatenate([c_kv, k_pe], axis=-1)  # (B, 1, c+dr)
+    lat = jax.lax.dynamic_update_slice(
+        cache["latent"], latent_new.astype(cache["latent"].dtype),
+        (0, pos, 0))
+    out, f3 = _mla_attend(
+        q_full, scale, lat, p, cfg, ctx, B, 1, decode_len=pos + 1)
+    return out, {"latent": lat}, or_flags(f1, f2, f3)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return {
+        "latent": jnp.zeros(
+            (batch, max_len, cfg.kv_lora_rank + cfg.qk_rope_head_dim),
+            dtype),
+    }

@@ -1,0 +1,175 @@
+"""Analytic accounting: parameter counts, per-layer GEMM dims, model FLOPs.
+
+Used by (i) the roofline's MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE),
+(ii) the paper-figure benchmarks (aggregate/per-layer arithmetic intensity),
+and (iii) the intensity-guided selection report.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.core.intensity import GemmDims
+from repro.models.model import layer_tags
+
+
+def _attn_params(cfg: ModelConfig) -> int:
+    hd = cfg.resolved_head_dim
+    if cfg.attention == "mla":
+        dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+        return (
+            cfg.d_model * cfg.q_lora_rank
+            + cfg.q_lora_rank * cfg.n_heads * (dn + dr)
+            + cfg.d_model * (cfg.kv_lora_rank + dr)
+            + cfg.n_heads * dn * cfg.kv_lora_rank
+            + cfg.n_heads * cfg.kv_lora_rank * dv
+            + cfg.n_heads * dv * cfg.d_model
+        )
+    q = cfg.d_model * cfg.n_heads * hd
+    kv = 2 * cfg.d_model * cfg.n_kv_heads * hd
+    o = cfg.n_heads * hd * cfg.d_model
+    return q + kv + o
+
+
+def _mamba_params(cfg: ModelConfig) -> int:
+    d_in, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    proj_out = 2 * d_in + 2 * n + h
+    return (
+        cfg.d_model * proj_out
+        + cfg.ssm_conv_width * (d_in + 2 * n)
+        + 3 * h            # A_log, D, dt_bias
+        + d_in             # out_norm
+        + d_in * cfg.d_model
+    )
+
+
+def _dense_ffn_params(cfg: ModelConfig) -> int:
+    mult = 3 if cfg.act == "silu" else 2
+    return mult * cfg.d_model * cfg.d_ff
+
+
+def _moe_params(cfg: ModelConfig) -> tuple:
+    """(total, active) params of one MoE FFN."""
+    per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+    router = cfg.d_model * cfg.n_experts
+    shared = 3 * cfg.d_model * cfg.moe_d_ff * cfg.n_shared_experts
+    total = cfg.n_experts * per_expert + router + shared
+    active = cfg.experts_per_token * per_expert + router + shared
+    return total, active
+
+
+def _cross_params(cfg: ModelConfig) -> int:
+    hd = cfg.resolved_head_dim
+    return (
+        cfg.d_model * cfg.n_heads * hd
+        + 2 * cfg.d_model * cfg.n_kv_heads * hd
+        + cfg.n_heads * hd * cfg.d_model
+    )
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    total = cfg.vocab_size * cfg.d_model            # embedding
+    if not cfg.tie_embeddings:
+        total += cfg.d_model * cfg.vocab_size       # head
+    for tag in layer_tags(cfg):
+        mixer, ffn, cross = tag.split(":")
+        if mixer in ("attn", "mla"):
+            total += _attn_params(cfg)
+        else:
+            total += _mamba_params(cfg)
+        if cross == "1":
+            total += _cross_params(cfg)
+        if ffn == "dense":
+            total += _dense_ffn_params(cfg)
+        elif ffn == "moe":
+            t, a = _moe_params(cfg)
+            total += a if active_only else t
+    if cfg.is_encoder_decoder:
+        total += cfg.n_enc_layers * (
+            _attn_params(cfg) + _dense_ffn_params(cfg))
+    if cfg.vision_dim:
+        total += cfg.vision_dim * cfg.d_model
+    return total
+
+
+def model_flops(cfg: ModelConfig, n_tokens: int, training: bool) -> float:
+    """MODEL_FLOPS = 6*N*D (training) or 2*N*D (inference), with N the
+    *active* parameter count (MoE counts only routed-in experts)."""
+    n_active = count_params(cfg, active_only=True)
+    mult = 6.0 if training else 2.0
+    return mult * n_active * n_tokens
+
+
+def layer_gemms(
+    cfg: ModelConfig, n_tokens: int, phase: str = "prefill",
+    dtype_bytes: int = 2,
+) -> dict:
+    """Per-GEMM-site dims for one representative layer of each kind plus the
+    head, scaled by site multiplicity.  ``n_tokens`` is the GEMM M dim
+    (batch*seq for full passes; batch for decode)."""
+    hd = cfg.resolved_head_dim
+    sites: dict = {}
+    m = n_tokens
+
+    def g(k, n):
+        return GemmDims(m=m, k=k, n=n, dtype_bytes=dtype_bytes)
+
+    tags = layer_tags(cfg)
+    n_attn = sum(1 for t in tags if t.split(":")[0] in ("attn", "mla"))
+    n_mamba = sum(1 for t in tags if t.split(":")[0] == "mamba")
+    n_dense_ffn = sum(1 for t in tags if t.split(":")[1] == "dense")
+    n_moe = sum(1 for t in tags if t.split(":")[1] == "moe")
+    n_cross = sum(1 for t in tags if t.split(":")[2] == "1")
+
+    if n_attn:
+        if cfg.attention == "mla":
+            dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+            sites["mla.q_a"] = (g(cfg.d_model, cfg.q_lora_rank), n_attn)
+            sites["mla.q_b"] = (
+                g(cfg.q_lora_rank, cfg.n_heads * (dn + dr)), n_attn)
+            sites["mla.kv_a"] = (
+                g(cfg.d_model, cfg.kv_lora_rank + dr), n_attn)
+            sites["mla.out"] = (
+                g(cfg.n_heads * cfg.v_head_dim, cfg.d_model), n_attn)
+        else:
+            sites["attn.q"] = (g(cfg.d_model, cfg.n_heads * hd), n_attn)
+            sites["attn.k"] = (g(cfg.d_model, cfg.n_kv_heads * hd), n_attn)
+            sites["attn.v"] = (g(cfg.d_model, cfg.n_kv_heads * hd), n_attn)
+            sites["attn.o"] = (g(cfg.n_heads * hd, cfg.d_model), n_attn)
+    if n_mamba:
+        d_in = cfg.d_inner
+        proj = 2 * d_in + 2 * cfg.ssm_state + cfg.ssm_heads
+        sites["ssm.in"] = (g(cfg.d_model, proj), n_mamba)
+        sites["ssm.out"] = (g(d_in, cfg.d_model), n_mamba)
+    if n_dense_ffn:
+        mult = 2 if cfg.act == "silu" else 1
+        sites["mlp.up"] = (g(cfg.d_model, cfg.d_ff), n_dense_ffn * mult)
+        sites["mlp.down"] = (g(cfg.d_ff, cfg.d_model), n_dense_ffn)
+    if n_moe:
+        sites["moe.router"] = (g(cfg.d_model, cfg.n_experts), n_moe)
+        # per-expert GEMM: tokens-per-expert is the M dim
+        m_e = max(1, m * cfg.experts_per_token // cfg.n_experts)
+        ge = GemmDims(m=m_e, k=cfg.d_model, n=cfg.moe_d_ff,
+                      dtype_bytes=dtype_bytes)
+        gd = GemmDims(m=m_e, k=cfg.moe_d_ff, n=cfg.d_model,
+                      dtype_bytes=dtype_bytes)
+        sites["moe.expert_up"] = (ge, n_moe * 2 * cfg.n_experts)
+        sites["moe.expert_down"] = (gd, n_moe * cfg.n_experts)
+        if cfg.n_shared_experts:
+            fs = cfg.moe_d_ff * cfg.n_shared_experts
+            sites["moe.shared_up"] = (g(cfg.d_model, fs), n_moe * 2)
+            sites["moe.shared_down"] = (
+                GemmDims(m=m, k=fs, n=cfg.d_model, dtype_bytes=dtype_bytes),
+                n_moe)
+    if n_cross:
+        sites["cross.q"] = (g(cfg.d_model, cfg.n_heads * hd), n_cross)
+        sites["cross.o"] = (g(cfg.n_heads * hd, cfg.d_model), n_cross)
+    sites["lm_head"] = (g(cfg.d_model, cfg.vocab_size), 1)
+    return sites
+
+
+def aggregate_ai(cfg: ModelConfig, n_tokens: int, phase: str = "prefill"):
+    """Aggregate arithmetic intensity over all linear layers (paper §3.2)."""
+    sites = layer_gemms(cfg, n_tokens, phase)
+    flops = sum(d.flops * c for d, c in sites.values())
+    bytes_ = sum(d.bytes_total * c for d, c in sites.values())
+    return flops / max(bytes_, 1.0)

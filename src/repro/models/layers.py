@@ -1,0 +1,296 @@
+"""Shared NN building blocks.  Every GEMM routes through the ABFT-protected
+matmul (core/protected.py) — the paper's technique as a first-class layer
+feature.  All functions are pure; params are plain pytrees (dicts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.checksums import CheckResult
+from repro.core.faults import FaultSpec
+from repro.core.protected import ABFTConfig, protected_matmul
+
+F32 = jnp.float32
+
+# ---------------------------------------------------------------- fault plumbing
+# Injection sites (static ids) — where in a layer a campaign can corrupt a
+# GEMM output.  The paper's fault model is one faulty output value per
+# linear layer; campaigns pick (layer, site, row, col).
+
+SITES = {
+    "qkv": 0, "attn_out": 1, "mlp_up": 2, "mlp_down": 3,
+    "router": 4, "expert_up": 5, "expert_down": 6,
+    "lm_head": 7, "ssm_in": 8, "ssm_out": 9,
+    "cross_qkv": 10, "cross_out": 11, "q_a": 12, "kv_a": 13,
+}
+
+
+class ModelFault(NamedTuple):
+    """A single-fault campaign target inside a full model."""
+
+    layer: jnp.ndarray          # global layer index (int32 scalar)
+    site: jnp.ndarray           # SITES id (int32 scalar)
+    spec: FaultSpec
+
+    @staticmethod
+    def none() -> "ModelFault":
+        z = jnp.zeros((), jnp.int32)
+        return ModelFault(layer=z, site=z, spec=FaultSpec.none())
+
+    @staticmethod
+    def at(layer: int, site: str, spec: FaultSpec) -> "ModelFault":
+        return ModelFault(
+            layer=jnp.asarray(layer, jnp.int32),
+            site=jnp.asarray(SITES[site], jnp.int32),
+            spec=spec,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingHints:
+    """Static annotation hints for with_sharding_constraint inside layers
+    (only where GSPMD propagation needs help, e.g. MoE dispatch buffers).
+    ``dp``: data-parallel axes for token dims; ``dp_size``: their product
+    (the MoE group count); ``ep``: expert axes; ``moe_mode``: 'ep'
+    (experts sharded) or 'tp' (expert ffn dim sharded)."""
+
+    dp: tuple = ("data",)
+    dp_size: int = 1
+    ep: tuple = ("model",)
+    tp: str = "model"
+    moe_mode: str = "ep"
+
+    def constrain(self, x, *spec):
+        from jax.sharding import PartitionSpec as P
+
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def constrain(ctx, x, *spec):
+    """Apply a sharding constraint if hints are active (no-op on CPU/tests)."""
+    if ctx.hints is None:
+        return x
+    return ctx.hints.constrain(x, *spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCtx:
+    """Per-forward context: static ABFT policy + traced fault target +
+    traced current layer index (set inside scanned stacks)."""
+
+    abft: ABFTConfig = ABFTConfig()
+    fault: ModelFault | None = None
+    layer_idx: jnp.ndarray | None = None   # traced global layer index
+    hints: ShardingHints | None = None
+
+    def with_layer(self, idx) -> "LayerCtx":
+        return dataclasses.replace(self, layer_idx=idx)
+
+
+def dense(x, w, ctx: LayerCtx, site: str, b=None, out_dtype=None):
+    """ABFT-protected ``x @ w (+ b)``.  Returns (y, flag: scalar bool)."""
+    fault = None
+    if ctx.fault is not None:
+        here = ctx.fault.site == SITES[site]
+        if ctx.layer_idx is not None:
+            here = here & (ctx.fault.layer == ctx.layer_idx)
+        spec = ctx.fault.spec
+        fault = spec._replace(
+            enabled=(spec.enabled.astype(bool) & here).astype(jnp.int32))
+    y, chk = protected_matmul(
+        x, w, ctx.abft, out_dtype=out_dtype or x.dtype, fault=fault)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y, chk.flag
+
+
+# ---------------------------------------------------------------- norms
+
+def rms_norm(x, w, eps: float = 1e-6):
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w.astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    xf = x.astype(F32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return out.astype(x.dtype) * w.astype(x.dtype) + b.astype(x.dtype)
+
+
+def norm(x, p, kind: str, eps: float):
+    if kind == "layernorm":
+        return layer_norm(x, p["w"], p["b"], eps)
+    return rms_norm(x, p["w"], eps)
+
+
+def gated_rms_norm(x, z, w, eps: float = 1e-6):
+    """Mamba2 output norm: RMSNorm(x * silu(z))."""
+    return rms_norm(x * jax.nn.silu(z.astype(F32)).astype(x.dtype), w, eps)
+
+
+# ---------------------------------------------------------------- rope
+
+def rope_tables(positions, head_dim: int, theta: float, pct: float = 1.0):
+    """positions: (..., L) int32 -> (cos, sin) of shape (..., L, rot/2)."""
+    rot = int(head_dim * pct) // 2 * 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, rot, 2, dtype=F32) / rot))
+    ang = positions.astype(F32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang), rot
+
+
+def apply_rope(x, cos, sin, rot: int):
+    """x: (B, L, H, D); rotate first ``rot`` dims (split-half convention)."""
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return jnp.concatenate([out, xp], axis=-1) if rot < x.shape[-1] else out
+
+
+# ---------------------------------------------------------------- attention
+
+NEG_INF = -1e30
+
+
+def chunked_attention(
+    q, k, v, *, causal: bool, q_offset=0, q_chunk: int = 512,
+    k_chunk: int = 1024, scale: float | None = None,
+):
+    """Memory-bounded attention (pure-JAX flash style): nested scans over
+    query and key chunks with online softmax.  Avoids materializing the
+    (Lq, Lk) score matrix — required for the 32k prefill shapes.
+
+    q: (B, Lq, H, Dk); k: (B, Lk, KV, Dk); v: (B, Lk, KV, Dv).
+    GQA: H must be a multiple of KV; KV == 1 is MQA (used by absorbed MLA).
+    Returns (B, Lq, H, Dv).
+    """
+    B, Lq, H, Dk = q.shape
+    _, Lk, KV, Dv = v.shape[0], v.shape[1], v.shape[2], v.shape[3]
+    groups = H // KV
+    scale = scale if scale is not None else Dk ** -0.5
+
+    q_chunk = min(q_chunk, Lq)
+    k_chunk = min(k_chunk, Lk)
+    # pad to chunk multiples
+    pq = -Lq % q_chunk
+    pk = -Lk % k_chunk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // q_chunk, kp.shape[1] // k_chunk
+
+    qc = qp.reshape(B, nq, q_chunk, H, Dk).transpose(1, 0, 2, 3, 4)
+    kc = kp.reshape(B, nk, k_chunk, KV, Dk).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(B, nk, k_chunk, KV, Dv).transpose(1, 0, 2, 3, 4)
+
+    kv_valid = Lk  # positions >= Lk are padding
+
+    def q_step(_, qi_q):
+        qi, qblk = qi_q
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def k_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_kv
+            k_pos = ki * k_chunk + jnp.arange(k_chunk)
+            # scores: (B, qc, H, kc) = qblk @ kblk^T (kv-head broadcast).
+            # NOTE: operands stay in their storage dtype — XLA computes
+            # bf16 x bf16 -> f32 natively on the MXU; an explicit
+            # .astype(F32) would materialize f32 copies of every k/v
+            # chunk to HBM (measured: dominant memory-term contributor,
+            # EXPERIMENTS.md §Perf iteration A2/C2).
+            qg = qblk.reshape(B, q_chunk, KV, groups, Dk)
+            s = jnp.einsum(
+                "bqkgd,bskd->bqkgs", qg, kblk,
+                preferred_element_type=F32) * scale
+            mask = k_pos[None, :] < kv_valid
+            if causal:
+                mask = mask & (q_pos[:, None] >= k_pos[None, :])
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            # probs stay f32 into PV: bf16 probs regressed the backward
+            # pass by 18% (extra convert round-trips in dp/dv), measured
+            # in §Perf iteration B3 -> B4.
+            pv = jnp.einsum(
+                "bqkgs,bskv->bqkgv", p, vblk,
+                preferred_element_type=F32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, q_chunk, KV, groups), NEG_INF, F32)
+        l0 = jnp.zeros((B, q_chunk, KV, groups), F32)
+        a0 = jnp.zeros((B, q_chunk, KV, groups, Dv), F32)
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, a0), (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.reshape(B, q_chunk, H, Dv).astype(q.dtype)
+
+    _, out = jax.lax.scan(q_step, None, (jnp.arange(nq), qc))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_chunk, H, Dv)
+    return out[:, :Lq]
+
+
+def decode_attention(q, k_cache, v_cache, length, scale=None):
+    """Single-token attention against a (B, S, KV, D) cache.
+
+    q: (B, 1, H, Dk); ``length``: number of valid cache positions
+    (scalar or (B,)).  Returns (B, 1, H, Dv).
+    """
+    B, _, H, Dk = q.shape
+    S, KV, Dv = k_cache.shape[1], k_cache.shape[2], v_cache.shape[3]
+    groups = H // KV
+    scale = scale if scale is not None else Dk ** -0.5
+    qg = q.reshape(B, KV, groups, Dk)
+    # storage-dtype operands: no materialized f32 cache copy (see above)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=F32) * scale
+    pos = jnp.arange(S)
+    valid = pos[None, :] < jnp.reshape(length, (-1, 1))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskv->bkgv", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=F32)
+    return out.reshape(B, 1, H, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------- mlp
+
+def mlp(x, p, ctx: LayerCtx, act: str = "silu"):
+    """SwiGLU (silu) or plain GELU MLP; GEMMs are ABFT-protected."""
+    flags = []
+    if act == "silu":
+        up, f1 = dense(x, p["up"], ctx, "mlp_up")
+        gate, f2 = dense(x, p["gate"], ctx, "mlp_up")
+        h = jax.nn.silu(gate.astype(F32)).astype(x.dtype) * up
+        flags += [f1, f2]
+    else:
+        h, f1 = dense(x, p["up"], ctx, "mlp_up", b=p.get("up_b"))
+        h = jax.nn.gelu(h.astype(F32)).astype(x.dtype)
+        flags.append(f1)
+    out, f3 = dense(h, p["down"], ctx, "mlp_down", b=p.get("down_b"))
+    flags.append(f3)
+    return out, _or(flags)
+
+
+def _or(flags):
+    out = flags[0]
+    for f in flags[1:]:
+        out = jnp.logical_or(out, f)
+    return out
+
+
+def or_flags(*flags):
+    return _or(list(flags))

@@ -1,0 +1,489 @@
+"""Model assembly: builds every assigned architecture from the layer zoo.
+
+Heterogeneous stacks (jamba's 1:7 mamba:attention interleave, deepseek's
+3-dense + 58-MoE split, the VLM's every-5th cross-attention layer) are
+expressed as a *segment plan*: the per-layer tag sequence is factored into
+segments of repeating units, each segment scanned with stacked params so
+HLO size stays bounded at 512-way SPMD (DESIGN.md §5).
+
+Tags are "mixer:ffn:cross" with mixer in {attn, mla, mamba},
+ffn in {dense, moe, none}, cross in {0, 1}.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models import moe as moe_mod
+from repro.models.layers import LayerCtx, dense, mlp, norm, or_flags
+
+F32 = jnp.float32
+
+
+def _init(key, shape, scale=0.02, dtype=jnp.bfloat16):
+    return (scale * jax.random.normal(key, shape, F32)).astype(dtype)
+
+
+# ---------------------------------------------------------------- plan
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    unit: tuple    # tags of one repeating unit
+    repeats: int
+
+
+def layer_tags(cfg: ModelConfig) -> list:
+    tags = []
+    for i in range(cfg.n_layers):
+        mixer = cfg.layer_kind(i)            # attn | mamba
+        if mixer == "attn" and cfg.attention == "mla":
+            mixer = "mla"
+        if cfg.d_ff or cfg.n_experts:
+            ffn = cfg.ffn_kind(i)
+        else:
+            ffn = "none"
+        cross = (
+            "1"
+            if cfg.cross_attn_every
+            and i % cfg.cross_attn_every == cfg.cross_attn_every - 2
+            else "0"
+        )
+        tags.append(f"{mixer}:{ffn}:{cross}")
+    return tags
+
+
+def seg_plan(cfg: ModelConfig) -> list:
+    tags = layer_tags(cfg)
+    n = len(tags)
+    if n == 0:
+        return []
+    # (a) smallest period p such that the whole stack is p-periodic
+    for p in range(1, min(12, n) + 1):
+        if n % p == 0 and all(tags[i] == tags[i % p] for i in range(n)):
+            return [Segment(unit=tuple(tags[:p]), repeats=n // p)]
+    # (b) contiguous uniform runs (deepseek: 3 dense + 58 moe)
+    segs = []
+    start = 0
+    for i in range(1, n + 1):
+        if i == n or tags[i] != tags[start]:
+            segs.append(Segment(unit=(tags[start],), repeats=i - start))
+            start = i
+    if len(segs) <= 4:
+        return segs
+    # (c) fallback: one unrolled segment
+    return [Segment(unit=tuple(tags), repeats=1)]
+
+
+# ---------------------------------------------------------------- layer init
+
+def init_layer(cfg: ModelConfig, tag: str, key, dtype) -> dict:
+    mixer, ffn, cross = tag.split(":")
+    ks = jax.random.split(key, 4)
+    norm_p = (
+        lambda: {"w": jnp.ones((cfg.d_model,), dtype), "b": jnp.zeros(
+            (cfg.d_model,), dtype)}
+        if cfg.norm == "layernorm"
+        else {"w": jnp.ones((cfg.d_model,), dtype)}
+    )
+    p: dict = {"mixer_norm": norm_p()}
+    if mixer == "attn":
+        p["mixer"] = attn.init_gqa(cfg, ks[0], dtype)
+    elif mixer == "mla":
+        p["mixer"] = attn.init_mla(cfg, ks[0], dtype)
+    elif mixer == "mamba":
+        p["mixer"] = mb.init_mamba(cfg, ks[0], dtype)
+    if cross == "1":
+        p["cross"] = attn.init_cross(cfg, ks[1], dtype)
+        p["cross_norm"] = norm_p()
+        p["cross_gate"] = jnp.zeros((), F32)
+    if ffn == "dense":
+        fk = jax.random.split(ks[2], 3)
+        p["ffn"] = {
+            "up": _init(fk[0], (cfg.d_model, cfg.d_ff), dtype=dtype),
+            "gate": _init(fk[1], (cfg.d_model, cfg.d_ff), dtype=dtype),
+            "down": _init(fk[2], (cfg.d_ff, cfg.d_model), dtype=dtype),
+        }
+        if cfg.act == "gelu":
+            del p["ffn"]["gate"]
+            p["ffn"]["up_b"] = jnp.zeros((cfg.d_ff,), dtype)
+            p["ffn"]["down_b"] = jnp.zeros((cfg.d_model,), dtype)
+        p["ffn_norm"] = norm_p()
+    elif ffn == "moe":
+        p["ffn"] = moe_mod.init_moe(cfg, ks[2], dtype)
+        p["ffn_norm"] = norm_p()
+    return p
+
+
+def init_layer_cache(cfg: ModelConfig, tag: str, batch: int, max_len: int,
+                     mem_len: int, dtype) -> dict:
+    mixer, _, cross = tag.split(":")
+    c: dict = {}
+    if mixer == "attn":
+        c["attn"] = attn.init_gqa_cache(cfg, batch, max_len, dtype)
+    elif mixer == "mla":
+        c["attn"] = attn.init_mla_cache(cfg, batch, max_len, dtype)
+    elif mixer == "mamba":
+        c["attn"] = mb.init_mamba_cache(cfg, batch, dtype)
+    if cross == "1":
+        hd = cfg.resolved_head_dim
+        c["cross"] = {
+            "k": jnp.zeros((batch, mem_len, cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((batch, mem_len, cfg.n_kv_heads, hd), dtype),
+        }
+    return c
+
+
+# ---------------------------------------------------------------- layer apply
+
+def apply_layer(
+    x, lp, tag: str, cfg: ModelConfig, ctx: LayerCtx, positions,
+    mode: str, cache, pos, mem, causal: bool = True,
+):
+    """One transformer/mamba layer.  mode: full | prefill | decode.
+    Returns (x, new_cache, flag, aux)."""
+    mixer, ffn, cross = tag.split(":")
+    flags = []
+    aux = jnp.zeros((), F32)
+    new_cache: dict = {}
+
+    h = norm(x, lp["mixer_norm"], cfg.norm, cfg.norm_eps)
+    if mixer in ("attn", "mla"):
+        fwd = attn.gqa_forward if mixer == "attn" else attn.mla_forward
+        pre = attn.gqa_prefill if mixer == "attn" else attn.mla_prefill
+        dec = attn.gqa_decode if mixer == "attn" else attn.mla_decode
+        if mode == "full":
+            if mixer == "attn":
+                a, f = fwd(h, lp["mixer"], cfg, ctx, positions, causal=causal)
+            else:
+                a, f = fwd(h, lp["mixer"], cfg, ctx, positions)
+        elif mode == "prefill":
+            a, nc, f = pre(h, lp["mixer"], cfg, ctx, positions, cache["attn"])
+            new_cache["attn"] = nc
+        else:
+            a, nc, f = dec(h, lp["mixer"], cfg, ctx, pos, cache["attn"])
+            new_cache["attn"] = nc
+    else:  # mamba
+        if mode == "full":
+            a, f = mb.mamba_forward(h, lp["mixer"], cfg, ctx)
+        elif mode == "prefill":
+            a, nc, f = mb.mamba_prefill(h, lp["mixer"], cfg, ctx,
+                                        cache["attn"])
+            new_cache["attn"] = nc
+        else:
+            a, nc, f = mb.mamba_decode(h, lp["mixer"], cfg, ctx,
+                                       cache["attn"])
+            new_cache["attn"] = nc
+    x = x + a
+    flags.append(f)
+
+    if cross == "1":
+        h = norm(x, lp["cross_norm"], cfg.norm, cfg.norm_eps)
+        if mode == "decode":
+            ck, cv = cache["cross"]["k"], cache["cross"]["v"]
+            fkv = jnp.zeros((), bool)
+            new_cache["cross"] = cache["cross"]
+        else:
+            ck, cv, fkv = attn.cross_kv(mem, lp["cross"], cfg, ctx)
+            if mode == "prefill":
+                new_cache["cross"] = {
+                    "k": ck.astype(cache["cross"]["k"].dtype),
+                    "v": cv.astype(cache["cross"]["v"].dtype),
+                }
+        a, f = attn.cross_forward(h, ck, cv, lp["cross"], cfg, ctx)
+        gate = jnp.tanh(lp["cross_gate"]).astype(x.dtype)
+        x = x + gate * a
+        flags += [fkv, f]
+
+    if ffn != "none":
+        h = norm(x, lp["ffn_norm"], cfg.norm, cfg.norm_eps)
+        if ffn == "moe":
+            o, f, a_loss = moe_mod.moe_forward(h, lp["ffn"], cfg, ctx)
+            aux = aux + a_loss
+        else:
+            o, f = mlp(h, lp["ffn"], ctx, act=cfg.act)
+        x = x + o
+        flags.append(f)
+
+    return x, new_cache, or_flags(*flags), aux
+
+
+# ---------------------------------------------------------------- stacks
+
+def run_stack(
+    x, segments_params, plan, cfg: ModelConfig, ctx: LayerCtx, positions,
+    mode: str, caches, pos, mem, causal: bool = True, remat: bool = False,
+    layer_offset: int = 0,
+):
+    """Apply all segments.  caches: list aligned with plan (or None).
+    Returns (x, new_caches, flag, aux)."""
+    flag = jnp.zeros((), bool)
+    aux = jnp.zeros((), F32)
+    new_caches = []
+    offset = layer_offset
+    for si, seg in enumerate(plan):
+        sp = segments_params[si]
+        sc = caches[si] if caches is not None else None
+        p = len(seg.unit)
+        seg_off = offset
+
+        def unit_body(carry, xs, _unit=seg.unit, _off=seg_off, _p=p):
+            xx, fl, au = carry
+            if sc is not None:
+                up, uc, rep = xs
+            else:
+                up, rep = xs
+                uc = None
+            new_uc = {}
+            for q, tag in enumerate(_unit):
+                idx = _off + rep * _p + q
+                lctx = ctx.with_layer(jnp.asarray(idx, jnp.int32))
+                xx, ncq, f, a = apply_layer(
+                    xx, up[f"pos{q}"], tag, cfg, lctx, positions, mode,
+                    uc[f"pos{q}"] if uc is not None else None, pos, mem,
+                    causal=causal,
+                )
+                new_uc[f"pos{q}"] = ncq
+                fl = jnp.logical_or(fl, f)
+                au = au + a
+            return (xx, fl, au), new_uc if sc is not None else None
+
+        body = jax.checkpoint(unit_body) if remat else unit_body
+
+        if seg.repeats == 1:
+            # single unit: apply directly (no scan) with unstacked params
+            sp1 = jax.tree_util.tree_map(lambda a: a[0], sp)
+            sc1 = (
+                jax.tree_util.tree_map(lambda a: a[0], sc)
+                if sc is not None else None
+            )
+            xs = (sp1, sc1, jnp.zeros((), jnp.int32)) if sc is not None \
+                else (sp1, jnp.zeros((), jnp.int32))
+            (x, flag, aux), nc = body((x, flag, aux), xs)
+            new_caches.append(
+                jax.tree_util.tree_map(lambda a: a[None], nc)
+                if nc is not None else None)
+        else:
+            reps = jnp.arange(seg.repeats, dtype=jnp.int32)
+            xs = (sp, sc, reps) if sc is not None else (sp, reps)
+            (x, flag, aux), nc = jax.lax.scan(body, (x, flag, aux), xs)
+            new_caches.append(nc)
+        offset += p * seg.repeats
+    return x, new_caches, flag, aux
+
+
+# ---------------------------------------------------------------- model
+
+class ForwardOut(NamedTuple):
+    logits: jnp.ndarray
+    flag: jnp.ndarray
+    aux_loss: jnp.ndarray
+    mtp_logits: Any = None
+
+
+def sinusoid_pos(positions, d_model: int):
+    """Whisper-style sinusoidal position encoding.  positions: (B, L)."""
+    half = d_model // 2
+    freqs = jnp.exp(
+        -jnp.log(10000.0) * jnp.arange(half, dtype=F32) / max(half - 1, 1))
+    ang = positions.astype(F32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class Model:
+    """Functional model wrapper for one architecture."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.plan = seg_plan(cfg)
+        self.enc_plan = (
+            [Segment(unit=("attn:dense:0",), repeats=cfg.n_enc_layers)]
+            if cfg.is_encoder_decoder else []
+        )
+
+    # -------------------------------------------------- init
+    def init_params(self, key, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        k_emb, k_seg, k_enc, k_head, k_misc = jax.random.split(key, 5)
+        params: dict = {
+            "embed": _init(k_emb, (cfg.vocab_size, cfg.d_model), dtype=dtype),
+            "final_norm": (
+                {"w": jnp.ones((cfg.d_model,), dtype),
+                 "b": jnp.zeros((cfg.d_model,), dtype)}
+                if cfg.norm == "layernorm"
+                else {"w": jnp.ones((cfg.d_model,), dtype)}
+            ),
+            "segments": self._init_segments(self.plan, k_seg, dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = _init(
+                k_head, (cfg.d_model, cfg.vocab_size), dtype=dtype)
+        if cfg.is_encoder_decoder:
+            params["encoder"] = {
+                "segments": self._init_segments(self.enc_plan, k_enc, dtype),
+                "final_norm": {
+                    "w": jnp.ones((cfg.d_model,), dtype),
+                    "b": jnp.zeros((cfg.d_model,), dtype)},
+            }
+        if cfg.vision_dim:
+            params["vision_proj"] = _init(
+                k_misc, (cfg.vision_dim, cfg.d_model), dtype=dtype)
+        if cfg.mtp_depth:
+            mk = jax.random.split(k_misc, 3)
+            params["mtp"] = {
+                "proj": _init(mk[0], (2 * cfg.d_model, cfg.d_model),
+                              dtype=dtype),
+                "layer": init_layer(
+                    cfg, layer_tags(cfg)[-1], mk[1], dtype),
+                "norm": {"w": jnp.ones((cfg.d_model,), dtype)},
+            }
+        return params
+
+    def _init_segments(self, plan, key, dtype):
+        cfg = self.cfg
+        segs = []
+        keys = jax.random.split(key, max(len(plan), 1))
+        for seg, k in zip(plan, keys):
+            rkeys = jax.random.split(k, seg.repeats)
+
+            def one(kk, _unit=seg.unit):
+                uks = jax.random.split(kk, len(_unit))
+                return {
+                    f"pos{q}": init_layer(cfg, tag, uks[q], dtype)
+                    for q, tag in enumerate(_unit)
+                }
+
+            segs.append(jax.vmap(one)(rkeys))
+        return segs
+
+    # -------------------------------------------------- cache
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   mem_len: int | None = None):
+        cfg = self.cfg
+        mem_len = mem_len or (
+            cfg.enc_seq_len if cfg.is_encoder_decoder else cfg.n_image_tokens)
+        caches = []
+        for seg in self.plan:
+            def one(_=None, _unit=seg.unit):
+                return {
+                    f"pos{q}": init_layer_cache(
+                        cfg, tag, batch, max_len, mem_len, dtype)
+                    for q, tag in enumerate(_unit)
+                }
+            # stack over repeats
+            caches.append(
+                jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(
+                        a[None], (seg.repeats,) + a.shape), one()))
+        return caches
+
+    # -------------------------------------------------- memory (enc / vision)
+    def _memory(self, params, batch, ctx):
+        """Encoder output (whisper) or projected vision tokens (vlm)."""
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            frames = batch["enc_input"]          # (B, S_enc, d_model) stub
+            B, S, _ = frames.shape
+            pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            h = frames + sinusoid_pos(pos, cfg.d_model).astype(frames.dtype)
+            h, _, flag, _ = run_stack(
+                h, params["encoder"]["segments"], self.enc_plan, cfg, ctx,
+                pos, "full", None, None, None, causal=False)
+            h = norm(h, params["encoder"]["final_norm"], "layernorm",
+                     cfg.norm_eps)
+            return h, flag
+        if cfg.vision_dim:
+            img = batch["images"]                # (B, n_img, vision_dim)
+            mem, f = dense(img, params["vision_proj"], ctx, "cross_qkv")
+            return mem, f
+        return None, jnp.zeros((), bool)
+
+    # -------------------------------------------------- forward (train)
+    def forward(self, params, batch, ctx: LayerCtx) -> ForwardOut:
+        cfg = self.cfg
+        tokens = batch["tokens"]                 # (B, L)
+        B, L = tokens.shape
+        mem, mem_flag = self._memory(params, batch, ctx)
+        x = params["embed"][tokens]
+        positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+        if cfg.is_encoder_decoder:
+            x = x + sinusoid_pos(positions, cfg.d_model).astype(x.dtype)
+        x, _, flag, aux = run_stack(
+            x, params["segments"], self.plan, cfg, ctx, positions,
+            "full", None, None, mem, remat=True)
+        x = norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+        logits, f_head = self._head(params, x, ctx)
+        flag = or_flags(flag, f_head, mem_flag)
+
+        mtp_logits = None
+        if cfg.mtp_depth and "mtp" in params:
+            mtp_logits, f_mtp = self._mtp(params, x, tokens, ctx, positions)
+            flag = or_flags(flag, f_mtp)
+        return ForwardOut(
+            logits=logits, flag=flag, aux_loss=aux, mtp_logits=mtp_logits)
+
+    def _head(self, params, x, ctx):
+        cfg = self.cfg
+        w = (
+            params["embed"].T.astype(x.dtype)
+            if cfg.tie_embeddings else params["lm_head"]
+        )
+        return dense(x, w, ctx, "lm_head", out_dtype=jnp.float32)
+
+    def _mtp(self, params, h, tokens, ctx, positions):
+        """DeepSeek-V3 multi-token prediction head (depth 1)."""
+        cfg = self.cfg
+        emb_next = params["embed"][jnp.roll(tokens, -1, axis=1)]
+        comb = jnp.concatenate(
+            [norm(h, params["mtp"]["norm"], "rmsnorm", cfg.norm_eps),
+             emb_next], axis=-1)
+        hm, f1 = dense(comb, params["mtp"]["proj"], ctx, "mlp_up")
+        hm, _, f2, _ = apply_layer(
+            hm, params["mtp"]["layer"], layer_tags(cfg)[-1], cfg, ctx,
+            positions, "full", None, None, None)
+        logits, f3 = self._head(params, hm, ctx)
+        return logits, or_flags(f1, f2, f3)
+
+    # -------------------------------------------------- prefill / decode
+    def prefill(self, params, batch, cache, ctx: LayerCtx):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, L = tokens.shape
+        mem, mem_flag = self._memory(params, batch, ctx)
+        x = params["embed"][tokens]
+        positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+        if cfg.is_encoder_decoder:
+            x = x + sinusoid_pos(positions, cfg.d_model).astype(x.dtype)
+        x, new_cache, flag, _ = run_stack(
+            x, params["segments"], self.plan, cfg, ctx, positions,
+            "prefill", cache, None, mem)
+        x = norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+        logits, f_head = self._head(params, x[:, -1:, :], ctx)
+        return logits, new_cache, or_flags(flag, f_head, mem_flag)
+
+    def decode(self, params, token, cache, pos, ctx: LayerCtx):
+        """token: (B, 1) int32; pos: scalar int32 current position."""
+        cfg = self.cfg
+        B = token.shape[0]
+        x = params["embed"][token]
+        if cfg.is_encoder_decoder:
+            positions = jnp.full((B, 1), pos, jnp.int32)
+            x = x + sinusoid_pos(positions, cfg.d_model).astype(x.dtype)
+        x, new_cache, flag, _ = run_stack(
+            x, params["segments"], self.plan, cfg, ctx, None,
+            "decode", cache, pos, None)
+        x = norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+        logits, f_head = self._head(params, x, ctx)
+        return logits, new_cache, or_flags(flag, f_head)
+
+
+@functools.lru_cache(maxsize=64)
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

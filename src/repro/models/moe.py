@@ -1,0 +1,158 @@
+"""Mixture-of-Experts FFN: top-k routing, sort-based grouped-GEMM dispatch
+(capacity-bounded, EP-shardable), optional shared experts.
+
+Dispatch is the production pattern: tokens are argsorted by expert id,
+packed into an (E, C, D) buffer (C = capacity), the expert GEMMs run as one
+batched einsum (expert dim shardable over the mesh => expert parallelism;
+the scatter/gather become all-to-alls under GSPMD), and outputs are
+combined back with routing weights.  Tokens over capacity are dropped
+(standard switch-style), contributing only their residual path.
+
+Expert GEMMs are ABFT-protected per expert via vmap — each expert's GEMM is
+its own "linear layer" in the paper's sense, with its own arithmetic
+intensity (thin per-expert GEMMs at low batch are exactly the
+bandwidth-bound case where block-level ABFT wins; DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import LayerCtx, constrain, dense, mlp, or_flags
+
+F32 = jnp.float32
+
+
+def _init(key, shape, scale=0.02, dtype=jnp.bfloat16):
+    return (scale * jax.random.normal(key, shape, F32)).astype(dtype)
+
+
+def init_moe(cfg: ModelConfig, key, dtype) -> dict:
+    E, D, Fd = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _init(ks[0], (D, E), dtype=dtype),
+        "w_up": _init(ks[1], (E, D, Fd), dtype=dtype),
+        "w_gate": _init(ks[2], (E, D, Fd), dtype=dtype),
+        "w_down": _init(ks[3], (E, Fd, D), dtype=dtype),
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.moe_d_ff * cfg.n_shared_experts
+        sk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "up": _init(sk[0], (D, Fs), dtype=dtype),
+            "gate": _init(sk[1], (D, Fs), dtype=dtype),
+            "down": _init(sk[2], (Fs, D), dtype=dtype),
+        }
+    return p
+
+
+def _batched_dense(x_e, w_e, ctx: LayerCtx, site: str):
+    """Per-expert protected GEMM: x_e (E, C, D) @ w_e (E, D, F)."""
+    y, flags = jax.vmap(
+        lambda xb, wb: dense(xb, wb, ctx, site))(x_e, w_e)
+    return y, jnp.any(flags)
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(
+        math.ceil(
+            n_tokens * cfg.experts_per_token / cfg.n_experts
+            * cfg.capacity_factor))
+    # round to a lane-friendly multiple, bounded by the token count
+    c = max(8, -(-c // 8) * 8)
+    return min(c, n_tokens)
+
+
+def moe_forward(x, p, cfg: ModelConfig, ctx: LayerCtx):
+    """x: (B, L, D) -> (B, L, D).  Returns (y, flag, aux_loss).
+
+    Group-local dispatch: tokens are split into G = dp_size groups aligned
+    with the data-parallel shards; each group sorts/scatters its own tokens
+    locally (small argsort, local scatter), the (G, E, C, D) buffer is
+    sharded [G->data, E->model], and the group->expert resharding is the
+    all-to-all GSPMD emits.  Keeps every dispatch intermediate sharded —
+    a global sort/scatter would be replicated per device (DESIGN.md §5).
+    """
+    Bsz, L, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = Bsz * L
+    G = ctx.hints.dp_size if ctx.hints else 1
+    if T % G or G <= 0:
+        G = 1
+    Tl = T // G
+    C = capacity(cfg, Tl)
+    xf = x.reshape(G, Tl, D)
+    xf = constrain(ctx, xf, ctx.hints.dp, None, None) if ctx.hints else xf
+
+    # --- routing (router GEMM is protected; softmax in f32)
+    logits, f_router = dense(xf, p["router"], ctx, "router",
+                             out_dtype=jnp.float32)
+    probs = jax.nn.softmax(logits.astype(F32), axis=-1)       # (G, Tl, E)
+    topk_w, topk_i = jax.lax.top_k(probs, K)                  # (G, Tl, K)
+    topk_w = topk_w / jnp.sum(topk_w, axis=-1, keepdims=True)
+
+    # --- load-balancing aux loss (switch-style, global means)
+    me = jnp.mean(probs, axis=(0, 1))                         # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(topk_i, E, dtype=F32), axis=2), axis=(0, 1))
+    aux = E * jnp.sum(me * ce) / K
+
+    # --- group-local sort-based dispatch into (E, C, D) buffers
+    def dispatch(xg, ig):
+        flat_e = ig.reshape(-1)                               # (Tl*K,)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        pos_in_e = (
+            jnp.arange(Tl * K, dtype=jnp.int32)
+            - jnp.searchsorted(
+                sorted_e, sorted_e, side="left").astype(jnp.int32))
+        keep = pos_in_e < C
+        slot = jnp.where(keep, sorted_e * C + pos_in_e, E * C)
+        tok = order // K
+        buf = jnp.zeros((E * C + 1, D), x.dtype).at[slot].set(xg[tok])
+        return buf[:-1].reshape(E, C, D), slot, tok, keep, order
+
+    buf, slot, tok, keep, order = jax.vmap(dispatch)(xf, topk_i)
+    e_ax = "model" if (ctx.hints and ctx.hints.moe_mode == "ep") else None
+    if ctx.hints is not None:
+        buf = constrain(ctx, buf, ctx.hints.dp, e_ax, None, None)
+
+    # --- expert GEMMs (SwiGLU) per (group, expert); E shardable over model
+    def expert_gemm(b, w, site):
+        return jax.vmap(lambda bg: _batched_dense(bg, w, ctx, site))(b)
+
+    up, f1 = expert_gemm(buf, p["w_up"], "expert_up")
+    gate, f2 = expert_gemm(buf, p["w_gate"], "expert_up")
+    h = jax.nn.silu(gate.astype(F32)).astype(x.dtype) * up
+    out_buf, f3 = expert_gemm(h, p["w_down"], "expert_down")
+    if ctx.hints is not None:
+        out_buf = constrain(
+            ctx, out_buf, ctx.hints.dp, e_ax, None, None)
+
+    # --- group-local combine
+    def combine(ob, sl, tk, kp, od, wk):
+        flat_out = ob.reshape(E * C, D)
+        gathered = flat_out[jnp.minimum(sl, E * C - 1)]       # (Tl*K, D)
+        w_sorted = wk.reshape(-1)[od]
+        contrib = gathered.astype(F32) * (
+            w_sorted * kp.astype(F32))[:, None]
+        return jnp.zeros((Tl, D), F32).at[tk].add(contrib)
+
+    y = jax.vmap(combine)(out_buf, slot, tok, keep, order, topk_w)
+    y = constrain(ctx, y, ctx.hints.dp, None, None) if ctx.hints else y
+    y = y.astype(x.dtype)
+
+    flag = or_flags(f_router, jnp.any(f1), jnp.any(f2), jnp.any(f3))
+
+    # --- shared experts (dense path, always on)
+    if cfg.n_shared_experts:
+        ys, fs = mlp(xf, p["shared"], ctx, act="silu")
+        y = y + ys
+        flag = or_flags(flag, fs)
+
+    return y.reshape(Bsz, L, D), flag, aux

@@ -1,0 +1,157 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh):
+
+  compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory     = HLO_bytes / (chips * HBM_bw)
+  collective = collective_bytes / (chips * link_bw)
+
+cost_analysis() reports the per-device partitioned module, so the per-chip
+division is already applied; collective bytes are parsed from the post-SPMD
+HLO text (per-device payloads of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute).
+"""
+
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+from repro.core.hardware import TPU_V5E, HardwareSpec
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-op per-device payload bytes, summed over the module.
+
+    Counts the *result* shapes of each collective op start (handles both
+    sync ops and -start/-done async pairs, counting starts only)."""
+    out = {op: 0 for op in COLLECTIVE_OPS}
+    counts = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        for op in COLLECTIVE_OPS:
+            # match ` = <type> op(` and async starts; skip -done ops
+            if f" {op}(" in s or f" {op}-start(" in s:
+                lhs, _, rhs = s.partition("=")
+                # result type(s): between '=' and the op name
+                idx = rhs.find(op)
+                result_seg = rhs[:idx]
+                nbytes = sum(
+                    _shape_bytes(d, dims)
+                    for d, dims in _SHAPE_RE.findall(result_seg)
+                )
+                out[op] += nbytes
+                counts[op] += 1
+                break
+    out["_counts"] = counts
+    return out
+
+
+def roofline_terms(
+    flops_per_device: float,
+    bytes_per_device: float,
+    collective_bytes_per_device: float,
+    hw: HardwareSpec = TPU_V5E,
+) -> dict:
+    t_compute = flops_per_device / hw.peak_flops
+    t_memory = bytes_per_device / hw.hbm_bw
+    t_collective = collective_bytes_per_device / hw.ici_bw
+    terms = {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_collective,
+    }
+    dom = max(terms, key=terms.get)
+    bound = {"compute_s": "compute", "memory_s": "memory",
+             "collective_s": "collective"}[dom]
+    t_bound = max(terms.values())
+    total = sum(terms.values())
+    return dict(
+        terms,
+        bottleneck=bound,
+        t_bound_s=t_bound,
+        # roofline fraction: how much of the step the dominant term is of a
+        # perfectly-overlapped ideal (1.0 = at the dominant roof)
+        roofline_fraction=(t_bound / total) if total > 0 else 0.0,
+    )
+
+
+def analyze_compiled(compiled, hw: HardwareSpec = TPU_V5E) -> dict:
+    """Extract flops / bytes / collective payloads from one compiled
+    executable (per-device post-SPMD module).
+
+    Primary numbers come from the scan-corrected HLO parser
+    (roofline/hlo_parser.py) — XLA's cost_analysis counts while bodies
+    once, undercounting scanned layer stacks; both are recorded."""
+    from repro.roofline.hlo_parser import analyze_hlo
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+
+    hlo = compiled.as_text()
+    parsed = analyze_hlo(hlo)
+    flops = max(parsed["flops"], xla_flops)
+    bytes_ = max(parsed["bytes"], xla_bytes)
+    colls = dict(parsed["collectives"])
+    colls["_counts"] = parsed["collective_op_counts"]
+    coll_total = parsed["collective_bytes"]
+
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    for attr in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        if hasattr(mem, attr):
+            mem_rec[attr] = int(getattr(mem, attr))
+
+    rec = {
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_,
+        "collective_bytes_per_device": coll_total,
+        "collectives": colls,
+        "xla_cost_flops": xla_flops,      # raw (while bodies counted once)
+        "xla_cost_bytes": xla_bytes,
+        "memory": mem_rec,
+        "hbm_per_device_gib": (
+            (mem_rec.get("argument_size_in_bytes", 0)
+             + mem_rec.get("output_size_in_bytes", 0)
+             + mem_rec.get("temp_size_in_bytes", 0)
+             - mem_rec.get("alias_size_in_bytes", 0)) / 2**30
+        ),
+    }
+    rec.update(roofline_terms(flops, bytes_, coll_total, hw))
+    return rec

@@ -1,0 +1,384 @@
+"""Scan-corrected HLO cost analysis.
+
+XLA's built-in HloCostAnalysis counts each ``while`` body ONCE, which
+undercounts scanned layer stacks by the trip count (a 61-layer scan counts
+as one layer).  This parser rebuilds the cost from the post-SPMD HLO text:
+
+  1. split the module into computations;
+  2. build the call graph with multiplicities — ``while`` bodies multiply
+     by their trip count (XLA annotates ``known_trip_count`` in
+     backend_config; fallback: the constant bound in the loop condition),
+     fusions/calls/conditionals multiply by 1;
+  3. cost each computation:
+       * FLOPs: dot ops (2 * output_elems * contraction_size), found in any
+         computation (including fused ones);
+       * bytes: at *fusion granularity* for top-level ops (operands +
+         outputs of fusions, dots, copies, slices — elementwise chains
+         inside a fusion are free, which is the fusion memory model);
+         plumbing ops (tuple/gte/bitcast/parameter/while) are free;
+       * collective payloads: result bytes of all-gather / all-reduce /
+         reduce-scatter / all-to-all / collective-permute starts;
+  4. total = sum over computations of cost x path multiplicity from entry.
+
+All shapes in the post-SPMD module are per-device, so totals are per-chip.
+Validated against hand-computed scanned-GEMM modules in
+tests/test_roofline.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "token": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_TOKEN = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_KIND_RE = re.compile(r"\s([a-z][a-z0-9\-]*)\(")
+_CALL_ATTR = re.compile(r"(?:condition|body|to_apply|calls)=%?([\w\.\-]+)")
+_BRANCH_ATTR = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count.....n...(\d+)')
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops whose operand/result bytes do not represent HBM traffic
+_FREE_OPS = {
+    "tuple", "get-tuple-element", "bitcast", "parameter", "constant",
+    "while", "conditional", "after-all", "partition-id", "replica-id",
+    "call", "opt-barrier",
+}
+
+
+def _dims(s: str):
+    return [int(d) for d in s.split(",")] if s else []
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    bpe = _DTYPE_BYTES.get(dtype)
+    if bpe is None:
+        return 0
+    n = 1
+    for d in _dims(dims):
+        n *= d
+    return n * bpe
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_bytes: int
+    operand_bytes: int
+    flops: float
+    callees: list
+    trip_count: int
+    line: str
+    result_dims: list = dataclasses.field(default_factory=list)
+    operand_names: list = dataclasses.field(default_factory=list)
+    is_root: bool = False
+    traffic_override: float = -1.0   # >=0: use this instead of res+ops
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+
+
+def parse_module(text: str):
+    """Returns ({computation_name: Computation}, entry_name)."""
+    comps: dict = {}
+    cur: Computation | None = None
+    entry = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{") and "->" in stripped and (
+                    stripped.startswith("%") or stripped.startswith("ENTRY")):
+                is_entry = stripped.startswith("ENTRY")
+                name = stripped.split()[1 if is_entry else 0]
+                name = name.lstrip("%").split("(")[0].rstrip()
+                cur = Computation(name=name, ops=[])
+                if is_entry:
+                    entry = name
+            continue
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        op = _parse_op(name, rhs, stripped)
+        op.is_root = stripped.startswith("ROOT")
+        cur.ops.append(op)
+    for comp in comps.values():
+        _resolve_flops(comp)
+        _resolve_dus(comp)
+    return comps, entry
+
+
+def _resolve_dus(comp: "Computation") -> None:
+    """dynamic-update-slice writes only the update slice in place; traffic
+    is ~2x the update operand, not the full aliased buffer."""
+    by_name = {op.name: op for op in comp.ops}
+    for op in comp.ops:
+        if op.kind != "dynamic-update-slice" or len(op.operand_names) < 2:
+            continue
+        upd = by_name.get(op.operand_names[1])
+        if upd is not None:
+            op.traffic_override = 2.0 * upd.result_bytes
+
+
+def _resolve_flops(comp: "Computation") -> None:
+    """Second pass: dot FLOPs need the lhs operand's shape, which in
+    scheduled HLO lives on the operand's *defining op*, not inline."""
+    by_name = {op.name: op for op in comp.ops}
+    for op in comp.ops:
+        if op.kind != "dot":
+            continue
+        out_elems = 1
+        for d in (op.result_dims[0] if op.result_dims else []):
+            out_elems *= d
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+        lhs = by_name.get(op.operand_names[0]) if op.operand_names else None
+        contract = 1
+        if m and lhs is not None and lhs.result_dims:
+            lhs_dims = lhs.result_dims[0]
+            for ci in _dims(m.group(1)):
+                if ci < len(lhs_dims):
+                    contract *= lhs_dims[ci]
+        op.flops = 2.0 * out_elems * contract
+
+
+def _parse_op(name: str, rhs: str, line: str) -> Op:
+    km = _KIND_RE.search(" " + rhs)
+    kind = km.group(1) if km else rhs.split("(")[0].split()[-1]
+    idx = rhs.find(f"{kind}(") if km else -1
+    result_seg = rhs[:idx] if idx >= 0 else rhs
+    result_bytes = sum(
+        _shape_bytes(d, s) for d, s in _SHAPE_TOKEN.findall(result_seg))
+
+    operand_bytes = 0
+    if idx >= 0:
+        paren = rhs.find("(", idx)
+        depth, end = 0, paren
+        for i in range(paren, len(rhs)):
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_bytes = sum(
+            _shape_bytes(d, s)
+            for d, s in _SHAPE_TOKEN.findall(rhs[paren:end]))
+
+    callees = _CALL_ATTR.findall(line)
+    bm = _BRANCH_ATTR.search(line)
+    if bm:
+        callees += [c.strip().lstrip("%") for c in bm.group(1).split(",")]
+    tm = _TRIP_RE.search(line)
+    trips = int(tm.group(1)) if tm else 0
+    result_dims = [
+        _dims(s_) for _, s_ in _SHAPE_TOKEN.findall(result_seg)]
+    operand_names = []
+    if idx >= 0:
+        operand_names = re.findall(r"%([\w\.\-]+)", rhs[idx:end + 1])
+    return Op(name=name, kind=kind, result_bytes=result_bytes,
+              operand_bytes=operand_bytes, flops=0.0, callees=callees,
+              trip_count=trips, line=line, result_dims=result_dims,
+              operand_names=operand_names)
+
+
+def _trip_from_condition(cond: Computation) -> int:
+    consts = {}
+    for op in cond.ops:
+        if op.kind == "constant":
+            m = re.search(r"constant\((\d+)\)", op.line)
+            if m:
+                consts[op.name] = int(m.group(1))
+    for op in cond.ops:
+        if "direction=LT" in op.line:
+            for cname, val in consts.items():
+                if re.search(rf"%{re.escape(cname)}\b", op.line):
+                    return val
+    if len(consts) == 1:
+        return next(iter(consts.values()))
+    return 1
+
+
+def analyze_hlo(text: str) -> dict:
+    comps, entry = parse_module(text)
+    if entry is None or entry not in comps:
+        entry = max(comps, key=lambda c: len(comps[c].ops))
+
+    mult = defaultdict(float)
+    fusion_children = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.kind == "fusion":
+                fusion_children.update(
+                    c for c in op.callees if c != comp.name)
+
+    def visit(name: str, k: float, depth=0):
+        comp = comps.get(name)
+        if comp is None or depth > 64:
+            return
+        mult[name] += k
+        for op in comp.ops:
+            if op.kind == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", op.line)
+                cm = re.search(r"condition=%?([\w\.\-]+)", op.line)
+                trips = op.trip_count
+                if not trips and cm and cm.group(1) in comps:
+                    trips = _trip_from_condition(comps[cm.group(1)])
+                trips = max(trips, 1)
+                if bm:
+                    visit(bm.group(1), k * trips, depth + 1)
+                if cm:
+                    visit(cm.group(1), k * trips, depth + 1)
+            else:
+                for c in op.callees:
+                    visit(c, k, depth + 1)
+
+    visit(entry, 1.0)
+
+    # Effective per-parameter read bytes for fused computations: a
+    # parameter consumed ONLY by dynamic-slice/gather ops is read at the
+    # slice size per call, not the full buffer (layer-stacked weights in a
+    # scan, embedding tables) — charging the whole buffer per iteration
+    # would overcount weight traffic by the layer count.  Consumption is
+    # chased through convert/bitcast/copy chains: the CPU backend wraps
+    # bf16 buffers in f32 converts around slice/update ops.
+    _CHAIN = ("convert", "bitcast", "copy", "reshape")
+
+    def _eff_consumers(comp, pname):
+        """Ops that actually consume pname, transitively through chains.
+        Returns list of (op, via) where via is the immediate operand name
+        feeding the consumer."""
+        out, frontier, seen = [], [pname], set()
+        while frontier:
+            cur = frontier.pop()
+            if cur in seen:
+                continue
+            seen.add(cur)
+            for o in comp.ops:
+                if cur in o.operand_names and o.kind != "parameter":
+                    if o.kind in _CHAIN:
+                        frontier.append(o.name)
+                    else:
+                        out.append((o, cur))
+        return out
+
+    eff_params: dict = {}
+    for name, comp in comps.items():
+        params = {}
+        for op in comp.ops:
+            if op.kind == "parameter":
+                m = re.search(r"parameter\((\d+)\)", op.line)
+                if m:
+                    params[op.name] = (int(m.group(1)), op.result_bytes)
+        if not params:
+            continue
+        eff = {}
+        for pname, (pidx, pbytes) in params.items():
+            consumers = _eff_consumers(comp, pname)
+            if consumers and all(
+                    o.kind in ("dynamic-slice", "gather")
+                    for o, _ in consumers):
+                eff[pidx] = sum(o.result_bytes for o, _ in consumers)
+            elif consumers and all(
+                    o.kind == "dynamic-update-slice"
+                    and o.operand_names and o.operand_names[0] == via
+                    for o, via in consumers):
+                eff[pidx] = 0.0   # aliased in-place carry (cache buffer)
+            else:
+                eff[pidx] = pbytes
+        eff_params[name] = eff
+
+    def _fusion_bytes(op: Op) -> float:
+        """result + effective operand reads for a fusion op."""
+        target = next((c for c in op.callees if c in eff_params), None)
+        if target is None:
+            return op.result_bytes + op.operand_bytes
+        comp = comps[target]
+        result = op.result_bytes
+        # in-place stacked-buffer update: if the fusion contains a
+        # dynamic-update-slice whose destination is a parameter (the
+        # aliased carry/stack) and whose result is (close to) the fusion
+        # result size, the write is only the update slice — even when a
+        # convert/bitcast sits between the DUS and the root.
+        by_name = {o.name: o for o in comp.ops}
+
+        def _origin(nm, depth=0):
+            o = by_name.get(nm)
+            while o is not None and o.kind in _CHAIN and o.operand_names \
+                    and depth < 16:
+                o = by_name.get(o.operand_names[0])
+                depth += 1
+            return o
+
+        dus = []
+        for o in comp.ops:
+            if o.kind != "dynamic-update-slice" or o.traffic_override < 0 \
+                    or not o.operand_names:
+                continue
+            dst = _origin(o.operand_names[0])
+            if dst is not None and dst.kind == "parameter":
+                dus.append(o)
+        if dus:
+            biggest = max(dus, key=lambda o: o.result_bytes)
+            if biggest.result_bytes >= 0.5 * max(result, 1):
+                result = biggest.traffic_override / 2.0
+        return result + sum(eff_params[target].values())
+
+    flops = 0.0
+    bytes_ = 0.0
+    coll = {c: 0.0 for c in COLLECTIVES}
+    coll_counts = {c: 0.0 for c in COLLECTIVES}
+
+    for name, comp in comps.items():
+        k = mult.get(name, 0.0)
+        if k == 0.0:
+            continue
+        in_fusion = name in fusion_children
+        for op in comp.ops:
+            if op.flops:
+                flops += k * op.flops
+            is_coll = False
+            for c in COLLECTIVES:
+                if op.kind.startswith(c) and not op.kind.endswith("-done"):
+                    coll[c] += k * op.result_bytes
+                    coll_counts[c] += k
+                    is_coll = True
+                    break
+            if in_fusion or is_coll or op.kind in _FREE_OPS:
+                continue
+            if op.traffic_override >= 0:
+                bytes_ += k * op.traffic_override
+            elif op.kind == "fusion":
+                bytes_ += k * _fusion_bytes(op)
+            elif op.kind in ("dynamic-slice", "gather"):
+                bytes_ += k * 2.0 * op.result_bytes
+            else:
+                bytes_ += k * (op.result_bytes + op.operand_bytes)
+
+    return {
+        "flops": flops,
+        "bytes": bytes_,
+        "collectives": coll,
+        "collective_bytes": sum(coll.values()),
+        "collective_op_counts": coll_counts,
+        "n_computations": len(comps),
+        "entry": entry,
+    }

@@ -1,0 +1,87 @@
+"""Per-op HBM-traffic profile of a compiled dry-run cell — the "profiler"
+of the perf loop (§Perf): ranks byte/flop contributors with loop
+multiplicities applied.
+
+  PYTHONPATH=src python -m repro.roofline.profile \
+      results/dryrun/llama3.2-1b__train_4k__single.hlo.txt.gz [topN]
+"""
+
+from __future__ import annotations
+
+import gzip
+import re
+import sys
+from collections import defaultdict
+
+from repro.roofline import hlo_parser as hp
+
+
+def top_contributors(text: str, n: int = 20) -> list:
+    comps, entry = hp.parse_module(text)
+    if entry is None or entry not in comps:
+        entry = max(comps, key=lambda c: len(comps[c].ops))
+
+    mult = defaultdict(float)
+
+    def visit(name, k, depth=0):
+        comp = comps.get(name)
+        if comp is None or depth > 64:
+            return
+        mult[name] += k
+        for op in comp.ops:
+            if op.kind == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", op.line)
+                cm = re.search(r"condition=%?([\w\.\-]+)", op.line)
+                trips = op.trip_count
+                if not trips and cm and cm.group(1) in comps:
+                    trips = hp._trip_from_condition(comps[cm.group(1)])
+                trips = max(trips, 1)
+                if bm:
+                    visit(bm.group(1), k * trips, depth + 1)
+                if cm:
+                    visit(cm.group(1), k * trips, depth + 1)
+            else:
+                for c in op.callees:
+                    visit(c, k, depth + 1)
+
+    visit(entry, 1.0)
+    fusion_children = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.kind == "fusion":
+                fusion_children.update(op.callees)
+
+    rows = []
+    for name, comp in comps.items():
+        k = mult.get(name, 0.0)
+        if k == 0 or name in fusion_children:
+            continue
+        for op in comp.ops:
+            if op.kind in hp._FREE_OPS:
+                continue
+            if any(op.kind.startswith(c) for c in hp.COLLECTIVES):
+                rows.append((k * op.result_bytes, k, f"[coll]{op.kind}",
+                             name, op.line))
+                continue
+            b = (op.traffic_override if op.traffic_override >= 0
+                 else op.result_bytes + op.operand_bytes)
+            rows.append((k * b, k, op.kind, name, op.line))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def main():
+    path = sys.argv[1]
+    n = int(sys.argv[2]) if len(sys.argv) > 2 else 20
+    opener = gzip.open if path.endswith(".gz") else open
+    text = opener(path, "rt").read()
+    rows = top_contributors(text, n)
+    total = sum(r[0] for r in rows)
+    print(f"top-{n} contributors (sum {total:.3e} B):")
+    for b, k, kind, comp, line in rows:
+        print(f"{b:10.3e}  x{k:7.0f}  {kind:20s} {comp[:28]:28s} "
+              f"{line[:80]}")
+
+
+if __name__ == "__main__":
+    main()

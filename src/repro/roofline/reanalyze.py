@@ -1,0 +1,64 @@
+"""Re-derive roofline terms for every saved dry-run cell from its gzipped
+HLO — lets parser improvements apply without recompiling.
+
+  PYTHONPATH=src python -m repro.roofline.reanalyze [results/dryrun ...]
+"""
+
+from __future__ import annotations
+
+import gzip
+import json
+import pathlib
+import sys
+
+from repro.core.hardware import TPU_V5E
+from repro.roofline.analysis import roofline_terms
+from repro.roofline.hlo_parser import analyze_hlo
+
+
+def reanalyze_dir(d: pathlib.Path) -> int:
+    n = 0
+    for hlo_path in sorted(d.glob("*.hlo.txt.gz")):
+        json_path = hlo_path.with_name(
+            hlo_path.name.replace(".hlo.txt.gz", ".json"))
+        if not json_path.exists():
+            continue
+        rec = json.loads(json_path.read_text())
+        if rec.get("status") != "ok":
+            continue
+        parsed = analyze_hlo(gzip.open(hlo_path, "rt").read())
+        flops = max(parsed["flops"], rec.get("xla_cost_flops", 0.0))
+        bytes_ = max(parsed["bytes"], rec.get("xla_cost_bytes", 0.0))
+        coll = parsed["collective_bytes"]
+        rec.update(
+            flops_per_device=flops,
+            bytes_per_device=bytes_,
+            collective_bytes_per_device=coll,
+            collectives=dict(parsed["collectives"],
+                             _counts=parsed["collective_op_counts"]),
+            **roofline_terms(flops, bytes_, coll, TPU_V5E),
+        )
+        chips = rec.get("chips", 256)
+        rec["hlo_flops_global"] = flops * chips
+        if rec.get("model_flops"):
+            rec["useful_flops_ratio"] = (
+                rec["model_flops"] / rec["hlo_flops_global"])
+        json_path.write_text(json.dumps(rec, indent=2, default=str))
+        n += 1
+    return n
+
+
+def main():
+    dirs = [pathlib.Path(p) for p in (sys.argv[1:] or ["results/dryrun",
+                                                       "results/perf"])]
+    total = 0
+    for d in dirs:
+        if d.exists():
+            n = reanalyze_dir(d)
+            print(f"{d}: reanalyzed {n} cells")
+            total += n
+    return 0 if total else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,89 @@
+"""Failure detection + straggler mitigation primitives.
+
+Real multi-host TPU deployments detect failures via heartbeat timeouts at
+the coordinator; this module implements the same control logic against a
+pluggable clock/transport so it is deterministic under test (this container
+has one host).  The trainer consumes:
+
+* ``HeartbeatMonitor`` — per-worker liveness with a deadline; workers that
+  miss the deadline are declared dead, triggering elastic re-mesh
+  (runtime/elastic.py).
+* ``StragglerPolicy`` — per-step duration tracking; a worker persistently
+  slower than median * threshold is flagged for replacement with a hot
+  spare *before* it fails hard (tail-latency mitigation at scale).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict, deque
+
+
+@dataclasses.dataclass
+class WorkerState:
+    last_beat: float
+    alive: bool = True
+
+
+class HeartbeatMonitor:
+    def __init__(self, workers, timeout_s: float = 60.0, clock=time.monotonic):
+        self.timeout = timeout_s
+        self.clock = clock
+        self.workers = {
+            w: WorkerState(last_beat=self.clock()) for w in workers}
+
+    def beat(self, worker) -> None:
+        st = self.workers.get(worker)
+        if st is not None:
+            st.last_beat = self.clock()
+            st.alive = True
+
+    def check(self) -> list:
+        """Returns newly-dead workers (deadline exceeded)."""
+        now = self.clock()
+        dead = []
+        for w, st in self.workers.items():
+            if st.alive and now - st.last_beat > self.timeout:
+                st.alive = False
+                dead.append(w)
+        return dead
+
+    @property
+    def alive(self) -> list:
+        return [w for w, st in self.workers.items() if st.alive]
+
+    def remove(self, worker) -> None:
+        self.workers.pop(worker, None)
+
+    def add(self, worker) -> None:
+        self.workers[worker] = WorkerState(last_beat=self.clock())
+
+
+class StragglerPolicy:
+    """Flags workers whose step time is persistently above
+    median * threshold over a sliding window."""
+
+    def __init__(self, threshold: float = 1.5, window: int = 8,
+                 min_samples: int = 4):
+        self.threshold = threshold
+        self.window = window
+        self.min_samples = min_samples
+        self.times: dict = defaultdict(lambda: deque(maxlen=window))
+
+    def record(self, worker, step_time_s: float) -> None:
+        self.times[worker].append(step_time_s)
+
+    def stragglers(self) -> list:
+        medians = {}
+        for w, ts in self.times.items():
+            if len(ts) >= self.min_samples:
+                s = sorted(ts)
+                medians[w] = s[len(s) // 2]
+        if len(medians) < 2:
+            return []
+        global_median = sorted(medians.values())[len(medians) // 2]
+        return [
+            w for w, m in medians.items()
+            if m > self.threshold * max(global_median, 1e-9)
+        ]

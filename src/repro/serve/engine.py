@@ -1,0 +1,175 @@
+"""Serving engine: continuous-batched decode with ABFT detect->recompute
+recovery.
+
+The engine owns a fixed-capacity slot table (the batch dimension of the KV
+cache).  Requests are admitted into free slots (continuous batching), each
+step decodes one token for every active slot, and the per-step ABFT flag
+drives the recovery policy:
+
+  detect (paper's contribution) -> re-execute the step from the pre-step
+  cache state (kept until the flag is read back) -> if the flag persists,
+  surface a hard fault to the caller.
+
+A fault-injection campaign hook lets tests corrupt a chosen layer GEMM and
+verify detection + recovery end to end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.protected import ABFTConfig
+from repro.models.layers import LayerCtx, ModelFault
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (L,) int32
+    max_new_tokens: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    tokens: int = 0
+    faults_detected: int = 0
+    retries: int = 0
+    hard_faults: int = 0
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, slots: int, max_len: int,
+                 abft: ABFTConfig = ABFTConfig(), dtype=jnp.bfloat16,
+                 greedy: bool = True, hints=None):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.abft = abft
+        self.ctx = LayerCtx(abft=abft, hints=hints)
+        self.stats = EngineStats()
+        self.cache = model.init_cache(slots, max_len, dtype=dtype)
+        self.pos = np.zeros((slots,), np.int32)      # per-slot write cursor
+        self.active: dict = {}                        # slot -> Request
+        self.greedy = greedy
+
+        self._decode = jax.jit(
+            lambda p, tok, cache, pos, fault: model.decode(
+                p, tok, cache, pos,
+                dataclasses.replace(self.ctx, fault=fault)))
+
+    # ------------------------------------------------------------ admission
+    def free_slots(self) -> list:
+        return [s for s in range(self.slots) if s not in self.active]
+
+    def admit(self, req: Request) -> bool:
+        """Prefill is executed per request (single-slot batch) and written
+        into the slot's cache rows.  Returns False when full."""
+        free = self.free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        L = len(req.prompt)
+        # per-request prefill on a 1-deep batch, then splice into the slot
+        tmp_cache = self.model.init_cache(1, self.max_len,
+                                          dtype=jnp.bfloat16)
+        batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+        logits, tmp_cache, flag = self.model.prefill(
+            self.params, batch, tmp_cache, self.ctx)
+        if bool(flag):
+            self.stats.faults_detected += 1
+            # retry once
+            logits, tmp_cache, flag = self.model.prefill(
+                self.params, batch, tmp_cache, self.ctx)
+            self.stats.retries += 1
+            if bool(flag):
+                self.stats.hard_faults += 1
+                return False
+        self.cache = _splice_cache(self.cache, tmp_cache, slot)
+        self.pos[slot] = L
+        first = int(jnp.argmax(logits[0, -1]))
+        req.generated.append(first)
+        self.active[slot] = req
+        return True
+
+    # ------------------------------------------------------------ decoding
+    def step(self, fault: ModelFault | None = None) -> dict:
+        """One decode step for all active slots.  Returns {uid: token}."""
+        if not self.active:
+            return {}
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s, req in self.active.items():
+            toks[s, 0] = req.generated[-1]
+        pos = int(max(self.pos[s] for s in self.active))
+        f = fault if fault is not None else ModelFault.none()
+
+        prev_cache = self.cache
+        logits, new_cache, flag = self._decode(
+            self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(pos, jnp.int32), f)
+        self.stats.steps += 1
+        if bool(flag):
+            # ABFT detection -> recompute from pre-step state (clean run)
+            self.stats.faults_detected += 1
+            self.stats.retries += 1
+            logits, new_cache, flag = self._decode(
+                self.params, jnp.asarray(toks), prev_cache,
+                jnp.asarray(pos, jnp.int32), ModelFault.none())
+            if bool(flag):
+                self.stats.hard_faults += 1
+                raise RuntimeError("persistent fault after retry")
+        self.cache = new_cache
+
+        out = {}
+        next_tok = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        finished = []
+        for s, req in list(self.active.items()):
+            t = int(next_tok[s])
+            req.generated.append(t)
+            self.pos[s] = pos + 1
+            out[req.uid] = t
+            self.stats.tokens += 1
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                finished.append(s)
+        for s in finished:
+            del self.active[s]
+        return out
+
+    def run(self, requests: list, fault_at: tuple | None = None) -> dict:
+        """Drive admission + decode to completion (continuous batching).
+        ``fault_at``: (step_idx, ModelFault) for campaign injection."""
+        pending = list(requests)
+        results = {}
+        step_i = 0
+        while pending or self.active:
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            fault = None
+            if fault_at is not None and step_i == fault_at[0]:
+                fault = fault_at[1]
+            self.step(fault)
+            step_i += 1
+            for req in requests:
+                if req.done and req.uid not in results:
+                    results[req.uid] = req.generated
+        return results
+
+
+def _splice_cache(dst, src, slot: int):
+    """Write a 1-deep cache into row ``slot`` of the engine cache.  Handles
+    both (reps, B, ...) stacked leaves and mamba f32 states."""
+    def one(d, s):
+        # batch dim is axis 1 for stacked leaves (reps, B, ...)
+        return jax.lax.dynamic_update_slice_in_dim(
+            d, s.astype(d.dtype), slot, axis=1)
+
+    return jax.tree_util.tree_map(one, dst, src)

@@ -1,0 +1,121 @@
+"""Train-step construction: CE loss (+ MoE aux + MTP), microbatched gradient
+accumulation, ABFT flag aggregation, optimizer update.
+
+The returned step function is pjit-ready: pure, params/opt-state in-out,
+metrics as scalars.  The ABFT flag of the *forward* pass is surfaced in the
+metrics — the trainer (train/trainer.py) re-executes the step when a fault
+was detected (detect -> retry recovery, paper §1's detection goal plus a
+recovery policy at the framework level).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.protected import ABFTConfig
+from repro.models.layers import LayerCtx, ModelFault
+from repro.models.model import Model
+from repro.train import optimizer as opt_lib
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: opt_lib.OptConfig = opt_lib.OptConfig()
+    aux_loss_coef: float = 0.01
+    mtp_loss_coef: float = 0.3
+    z_loss_coef: float = 1e-4
+    microbatches: int = 1        # gradient accumulation steps
+
+
+def make_loss_fn(model: Model, abft: ABFTConfig,
+                 tcfg: TrainConfig, hints=None) -> Callable:
+    def loss_fn(params, batch, fault=None):
+        ctx = LayerCtx(abft=abft, fault=fault, hints=hints)
+        out = model.forward(params, batch, ctx)
+        logits = out.logits.astype(F32)
+        labels = batch["labels"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        logp = jnp.take_along_axis(
+            logits, labels[..., None], axis=-1)[..., 0] - logz
+        mask = (labels >= 0).astype(F32)
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        nll = -jnp.sum(logp * mask) / denom
+        loss = nll
+        loss = loss + tcfg.z_loss_coef * jnp.sum(
+            (logz ** 2) * mask) / denom
+        loss = loss + tcfg.aux_loss_coef * out.aux_loss
+        if out.mtp_logits is not None:
+            # predict token t+2: labels shifted one more step
+            l2 = jnp.roll(labels, -1, axis=1)
+            m2 = mask * jnp.roll(mask, -1, axis=1)
+            lg2 = out.mtp_logits.astype(F32)
+            lp2 = jnp.take_along_axis(
+                jax.nn.log_softmax(lg2, -1), l2[..., None], -1)[..., 0]
+            loss = loss - tcfg.mtp_loss_coef * jnp.sum(lp2 * m2) / denom
+        metrics = {
+            "loss": nll,
+            "aux_loss": out.aux_loss,
+            "abft_flag": out.flag,
+        }
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(model: Model, abft: ABFTConfig,
+                    tcfg: TrainConfig, hints=None) -> Callable:
+    """Returns step(params, opt_state, batch, fault=None) ->
+    (params, opt_state, metrics)."""
+    loss_fn = make_loss_fn(model, abft, tcfg, hints=hints)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch, fault):
+        (loss, metrics), grads = grad_fn(params, batch, fault)
+        return loss, metrics, grads
+
+    def step(params, opt_state, batch, fault=None):
+        if fault is None:
+            fault = ModelFault.none()
+        if tcfg.microbatches > 1:
+            # gradient accumulation: split the batch on the leading dim
+            def split(x):
+                b = x.shape[0]
+                mb = tcfg.microbatches
+                return x.reshape((mb, b // mb) + x.shape[1:])
+
+            mb_batch = {k: split(v) for k, v in batch.items()}
+
+            def acc_step(carry, mb):
+                g_acc, l_acc, f_acc = carry
+                loss, metrics, grads = single(params, mb, fault)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(F32), g_acc, grads)
+                return (g_acc, l_acc + loss,
+                        jnp.logical_or(f_acc, metrics["abft_flag"])), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, F32), params)
+            (grads, loss_sum, flag), _ = jax.lax.scan(
+                acc_step, (g0, jnp.zeros((), F32), jnp.zeros((), bool)),
+                mb_batch)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / tcfg.microbatches, grads)
+            loss = loss_sum / tcfg.microbatches
+            metrics = {"loss": loss, "abft_flag": flag,
+                       "aux_loss": jnp.zeros((), F32)}
+        else:
+            loss, metrics, grads = single(params, batch, fault)
+
+        new_params, new_opt, opt_metrics = opt_lib.update(
+            grads, opt_state, params, tcfg.opt)
+        metrics = dict(metrics, **opt_metrics, total_loss=loss)
+        return new_params, new_opt, metrics
+
+    return step

@@ -1,0 +1,127 @@
+"""Trainer: the fault-tolerant training loop.
+
+Integrates every FT mechanism in the framework:
+  * ABFT forward protection — a flagged step is retried (detect->recompute)
+    before the optimizer consumes the gradients;
+  * async sharded checkpointing on a cadence, checksummed at rest;
+  * heartbeat failure detection + elastic re-mesh + reshard-restore;
+  * straggler demotion with hot-spare promotion;
+  * deterministic, restart-safe data (step index is the only data state).
+
+On this container the loop runs single-host; the failure/straggler paths
+are exercised by tests through the simulation hooks (``simulate``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpoint import Checkpointer
+from repro.core.protected import ABFTConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.model import Model
+from repro.runtime.elastic import ElasticState
+from repro.runtime.heartbeat import HeartbeatMonitor, StragglerPolicy
+from repro.train.optimizer import init_opt_state
+from repro.train.train_step import TrainConfig, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 25
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    retry_on_abft_flag: bool = True
+    max_retries: int = 2
+
+
+class Trainer:
+    def __init__(self, model: Model, params, tcfg: TrainConfig,
+                 dcfg: DataConfig, rcfg: TrainerConfig,
+                 abft: ABFTConfig = ABFTConfig(), hints=None,
+                 workers=None, spares=None):
+        self.model = model
+        self.params = params
+        self.tcfg = tcfg
+        self.rcfg = rcfg
+        self.data = SyntheticLM(dcfg)
+        self.opt_state = init_opt_state(params, tcfg.opt)
+        self.step_fn = jax.jit(make_train_step(model, abft, tcfg,
+                                               hints=hints))
+        self.ckpt = Checkpointer(rcfg.ckpt_dir)
+        self.step = 0
+        self.history: list = []
+        # control plane (simulated single-host)
+        workers = workers or ["w0"]
+        self.heartbeat = HeartbeatMonitor(workers, timeout_s=60.0)
+        self.stragglers = StragglerPolicy()
+        self.elastic = ElasticState(
+            model_parallel=1, spares=list(spares or []),
+            active=list(workers))
+        self.events: list = []
+
+    # ------------------------------------------------------------ restore
+    def maybe_restore(self) -> bool:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return False
+        state = {"params": self.params, "opt": self.opt_state}
+        restored, step = self.ckpt.restore(state)
+        self.params = restored["params"]
+        self.opt_state = restored["opt"]
+        self.step = step
+        self.events.append(("restored", step))
+        return True
+
+    # ------------------------------------------------------------ loop
+    def run(self, simulate: dict | None = None) -> list:
+        """simulate: {step: callable(trainer)} fault-injection hooks."""
+        simulate = simulate or {}
+        while self.step < self.rcfg.steps:
+            if self.step in simulate:
+                simulate[self.step](self)
+            batch = self.data.batch(self.step)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            t0 = time.monotonic()
+            retries = 0
+            while True:
+                new_params, new_opt, metrics = self.step_fn(
+                    self.params, self.opt_state, batch)
+                if (not self.rcfg.retry_on_abft_flag
+                        or not bool(metrics["abft_flag"])
+                        or retries >= self.rcfg.max_retries):
+                    break
+                retries += 1
+                self.events.append(("abft_retry", self.step))
+            if bool(metrics["abft_flag"]) and retries >= self.rcfg.max_retries:
+                self.events.append(("abft_hard_fault", self.step))
+            self.params, self.opt_state = new_params, new_opt
+            dt = time.monotonic() - t0
+            for w in self.heartbeat.alive:
+                self.heartbeat.beat(w)
+                self.stragglers.record(w, dt)
+            self.history.append(
+                {"step": self.step, "loss": float(metrics["loss"]),
+                 "time_s": dt, "retries": retries})
+            if self.step and self.step % self.rcfg.ckpt_every == 0:
+                self.ckpt.save_async(
+                    self.step, {"params": self.params, "opt": self.opt_state})
+                self.events.append(("checkpoint", self.step))
+            self.step += 1
+        self.ckpt.wait()
+        return self.history
+
+    # ------------------------------------------------- failure simulation
+    def on_worker_failure(self, dead: list):
+        """Heartbeat-detected failure: re-mesh + restore from checkpoint."""
+        plan = self.elastic.on_failure(dead)
+        self.events.append(("remesh", tuple(plan.shape)))
+        restored = self.maybe_restore()
+        if not restored:
+            self.events.append(("cold_restart", self.step))
+        return plan

@@ -1,0 +1,159 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one gradient step on CPU, asserting output shapes and no NaNs.
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config, scaled_down
+from repro.core import ABFTConfig, Scheme
+from repro.models import LayerCtx, build_model
+
+ABFT = ABFTConfig(scheme=Scheme.AUTO, use_pallas=False)
+CTX = LayerCtx(abft=ABFT)
+
+
+def _batch(cfg, B=2, L=16, dtype=jnp.float32):
+    batch = {"tokens": jnp.ones((B, L), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        batch["enc_input"] = (
+            0.1 * jnp.ones((B, cfg.enc_seq_len, cfg.d_model), dtype))
+    if cfg.vision_dim:
+        batch["images"] = (
+            0.1 * jnp.ones((B, cfg.n_image_tokens, cfg.vision_dim), dtype))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_shapes_no_nans(arch):
+    cfg = scaled_down(get_config(arch))
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)
+    B, L = 2, 16
+    out = model.forward(params, _batch(cfg, B, L), CTX)
+    assert out.logits.shape == (B, L, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(out.logits)))
+    assert not bool(out.flag)  # clean run: no ABFT flag
+    if cfg.mtp_depth:
+        assert out.mtp_logits is not None
+        assert out.mtp_logits.shape == (B, L, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_grad_step(arch):
+    cfg = scaled_down(get_config(arch))
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)
+    B, L = 2, 8
+    batch = _batch(cfg, B, L)
+    labels = jnp.ones((B, L), jnp.int32)
+
+    def loss_fn(p):
+        out = model.forward(p, batch, CTX)
+        logp = jax.nn.log_softmax(out.logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.mean(
+            jnp.take_along_axis(logp, labels[..., None], axis=-1))
+        return nll + 0.01 * out.aux_loss
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert leaves, "no gradients produced"
+    for g in leaves:
+        assert not bool(jnp.any(jnp.isnan(g)))
+    # gradient actually flows to the embedding
+    gnorm = float(
+        sum(jnp.sum(jnp.abs(g)) for g in leaves))
+    assert gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_prefill_decode_consistency(arch):
+    """decode(pos=L) after prefill matches forward() on L+1 tokens (up to
+    MoE capacity effects for routed archs)."""
+    cfg = scaled_down(get_config(arch))
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(1), dtype=jnp.float32)
+    B, L, S = 2, 12, 24
+    batch = _batch(cfg, B, L)
+    cache = model.init_cache(B, S, dtype=jnp.float32)
+    logits, cache, flag = model.prefill(params, batch, cache, CTX)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert not bool(flag)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    logits2, cache, flag2 = model.decode(
+        params, tok, cache, jnp.asarray(L, jnp.int32), CTX)
+    assert logits2.shape == (B, 1, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits2)))
+
+    batch2 = dict(batch, tokens=jnp.concatenate([batch["tokens"], tok], 1))
+    full = model.forward(params, batch2, CTX)
+    tol = 0.05 if cfg.n_experts else 1e-3   # capacity effects for MoE
+    np.testing.assert_allclose(
+        np.asarray(full.logits[:, -1]), np.asarray(logits2[:, 0]),
+        rtol=tol, atol=tol)
+
+
+def test_exact_published_configs_registered():
+    """The ten assigned architectures carry the exact published dims."""
+    c = get_config("qwen3-14b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 5120, 40, 8, 17408, 151936)
+    assert c.qk_norm
+    c = get_config("stablelm-1.6b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (24, 2048, 32, 32, 5632, 100352)
+    c = get_config("llama3.2-1b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (16, 2048, 32, 8, 8192, 128256)
+    c = get_config("qwen1.5-32b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (64, 5120, 40, 40, 27392, 152064)
+    assert c.qkv_bias
+    c = get_config("jamba-v0.1-52b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (32, 4096, 32, 8, 14336, 65536)
+    assert (c.n_experts, c.experts_per_token) == (16, 2)
+    assert (c.attn_every, c.moe_every) == (8, 2)
+    c = get_config("whisper-tiny")
+    assert (c.n_layers, c.n_enc_layers, c.d_model, c.n_heads, c.d_ff,
+            c.vocab_size) == (4, 4, 384, 6, 1536, 51865)
+    assert c.is_encoder_decoder
+    c = get_config("mamba2-1.3b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab_size, c.ssm_state) == (
+        48, 2048, 0, 50280, 128)
+    c = get_config("deepseek-v3-671b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab_size) == (
+        61, 7168, 128, 129280)
+    assert (c.n_experts, c.experts_per_token, c.moe_d_ff,
+            c.n_shared_experts) == (256, 8, 2048, 1)
+    assert c.attention == "mla" and c.mtp_depth == 1
+    c = get_config("qwen2-moe-a2.7b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab_size) == (
+        24, 2048, 16, 151936)
+    assert (c.n_experts, c.experts_per_token, c.moe_d_ff,
+            c.n_shared_experts) == (60, 4, 1408, 4)
+    c = get_config("llama-3.2-vision-11b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 4096, 32, 8, 14336, 128256)
+    assert c.cross_attn_every == 5
+
+
+def test_fault_injection_detected_in_model():
+    """End-to-end: a fault injected into one layer's MLP GEMM flags."""
+    from repro.core import FaultSpec
+    from repro.models import ModelFault
+
+    cfg = scaled_down(get_config("llama3.2-1b"))
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)
+    fault = ModelFault.at(1, "mlp_down", FaultSpec.value(0, 3, 1e4))
+    ctx = LayerCtx(abft=ABFT, fault=fault)
+    out = model.forward(params, _batch(cfg), ctx)
+    assert bool(out.flag)
+    # same graph, fault disabled -> clean
+    ctx2 = LayerCtx(abft=ABFT, fault=ModelFault.none())
+    out2 = model.forward(params, _batch(cfg), ctx2)
+    assert not bool(out2.flag)

@@ -1,0 +1,207 @@
+"""Unit + property tests for the core ABFT library (checksums, selector,
+intensity model, protected_matmul dispatch)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ABFTConfig,
+    FaultSpec,
+    GemmDims,
+    NVIDIA_T4,
+    Scheme,
+    SelectorConfig,
+    TPU_V5E,
+    aggregate_intensity,
+    overhead_pct,
+    precompute_weight_checksums,
+    protected_matmul,
+    select_scheme,
+    selection_report,
+)
+from repro.core.checksums import global_row_check, global_scalar_check
+from repro.core.faults import inject_output_fault, flip_bit
+
+
+# ---------------------------------------------------------------- intensity
+
+def test_arithmetic_intensity_matches_paper_formula():
+    # paper §3.1: AI = FLOPs / bytes;  FP16 square GEMM of size s:
+    # 2 s^3 / (2 * 3 s^2) = s / 3
+    d = GemmDims(m=2048, k=2048, n=2048, dtype_bytes=2, out_dtype_bytes=2)
+    assert d.arithmetic_intensity == pytest.approx(2048 / 3)
+
+
+def test_paper_fig12_crossover_square_sizes():
+    """Paper Fig. 12: sizes with AI below the device CMR favor the fused
+    (thread/block-level) scheme; above it, global ABFT."""
+    for s in (32, 64, 128, 256, 512):
+        d = GemmDims(m=s, k=s, n=s)
+        if d.arithmetic_intensity < TPU_V5E.cmr:
+            sel = select_scheme(d, TPU_V5E)
+            assert sel.scheme == Scheme.BLOCK_1S, (s, sel)
+    for s in (2048, 4096):
+        d = GemmDims(m=s, k=s, n=s)
+        assert d.arithmetic_intensity > TPU_V5E.cmr
+        sel = select_scheme(d, TPU_V5E)
+        assert sel.scheme == Scheme.GLOBAL, (s, sel)
+
+
+def test_dlrm_like_aggregate_intensity():
+    """Paper §3.2: DLRM MLPs at batch 1 have aggregate AI ~ 7 (fp16)."""
+    # MLP-Bottom: 13 -> 512 -> 256 -> 64 (batch 1)
+    layers = [
+        GemmDims(m=1, k=13, n=512),
+        GemmDims(m=1, k=512, n=256),
+        GemmDims(m=1, k=256, n=64),
+    ]
+    ai = aggregate_intensity(layers)
+    assert 0.5 < ai < 3  # thin GEMMs: bandwidth-bound by orders of magnitude
+    # and at batch 256 the AI rises by ~2 orders (paper: 7 -> 70-109)
+    layers_b = [
+        GemmDims(m=256, k=13, n=512),
+        GemmDims(m=256, k=512, n=256),
+        GemmDims(m=256, k=256, n=64),
+    ]
+    assert aggregate_intensity(layers_b) > 20 * ai
+
+
+def test_overhead_model_orderings():
+    """Qualitative orderings from the paper, under the v5e roofline model."""
+    thin = GemmDims(m=16, k=4096, n=4096)     # bandwidth-bound
+    fat = GemmDims(m=8192, k=8192, n=8192)    # compute-bound
+    # bandwidth-bound: fused block ABFT beats global
+    assert overhead_pct(Scheme.BLOCK_1S, thin, TPU_V5E) < overhead_pct(
+        Scheme.GLOBAL, thin, TPU_V5E)
+    # compute-bound: global beats replication by a wide margin
+    assert overhead_pct(Scheme.GLOBAL, fat, TPU_V5E) < overhead_pct(
+        Scheme.REPLICA, fat, TPU_V5E)
+    # replication doubles compute-bound time (paper §6.5 spike)
+    assert overhead_pct(Scheme.REPLICA, fat, TPU_V5E) > 80.0
+
+
+def test_t4_cmr_matches_paper():
+    assert NVIDIA_T4.cmr == pytest.approx(203, rel=0.01)
+
+
+# ---------------------------------------------------------------- selector
+
+def test_selection_report_structure():
+    rows = selection_report(
+        {"up": GemmDims(m=16, k=2048, n=8192),
+         "down": GemmDims(m=16384, k=8192, n=2048)})
+    assert rows[0]["scheme"] == "block_1s"        # thin -> fused
+    assert rows[1]["scheme"] == "global"          # fat -> global
+    assert rows[0]["bound"] == "bandwidth"
+    assert rows[1]["bound"] == "compute"
+
+
+def test_fixed_mode_override():
+    cfg = SelectorConfig(mode="fixed", fixed_scheme=Scheme.REPLICA)
+    sel = select_scheme(GemmDims(m=4096, k=4096, n=4096), config=cfg)
+    assert sel.scheme == Scheme.REPLICA
+
+
+def test_profile_table_override():
+    d = GemmDims(m=64, k=64, n=64)
+    sel = select_scheme(
+        d, config=SelectorConfig(mode="profile"),
+        profile_table={d: Scheme.GLOBAL})
+    assert sel.scheme == Scheme.GLOBAL
+
+
+# ------------------------------------------------------------ global checks
+
+def test_global_row_check_clean_and_faulty(rng):
+    x = jnp.asarray(rng.standard_normal((64, 256)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((256, 128)), jnp.float32)
+    ws = precompute_weight_checksums(w)
+    y = jnp.matmul(x, w)
+    chk = global_row_check(x, ws.w_sum, ws.w_abs_sum, y)
+    assert not bool(chk.flag)
+    y_bad = inject_output_fault(y, FaultSpec.value(10, 10, 25.0))
+    chk = global_row_check(x, ws.w_sum, ws.w_abs_sum, y_bad)
+    assert bool(chk.flag)
+    # row location: residual argmax identifies the faulty row
+    assert int(jnp.argmax(chk.residual - chk.threshold)) == 10
+
+
+def test_global_scalar_check(rng):
+    x = jnp.asarray(rng.standard_normal((32, 128)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((128, 64)), jnp.float32)
+    ws = precompute_weight_checksums(w)
+    y = jnp.matmul(x, w)
+    assert not bool(global_scalar_check(x, ws.w_sum, ws.w_abs_sum, y).flag)
+    y_bad = inject_output_fault(y, FaultSpec.value(0, 0, 100.0))
+    assert bool(global_scalar_check(x, ws.w_sum, ws.w_abs_sum, y_bad).flag)
+
+
+def test_global_check_bf16_quantization_term(rng):
+    """bf16 outputs must not false-positive from downcast rounding."""
+    x = jnp.asarray(rng.standard_normal((128, 512)), jnp.bfloat16)
+    w = jnp.asarray(rng.standard_normal((512, 256)), jnp.bfloat16)
+    ws = precompute_weight_checksums(w)
+    y = jnp.matmul(
+        x, w, preferred_element_type=jnp.float32).astype(jnp.bfloat16)
+    chk = global_row_check(x, ws.w_sum, ws.w_abs_sum, y)
+    assert not bool(chk.flag)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 256),
+    n=st.integers(1, 128),
+    scale=st.sampled_from([1e-2, 1.0, 1e2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_global_check_no_false_positive(m, k, n, scale, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((m, k)) * scale, jnp.float32)
+    w = jnp.asarray(r.standard_normal((k, n)) * scale, jnp.float32)
+    ws = precompute_weight_checksums(w)
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    assert not bool(global_row_check(x, ws.w_sum, ws.w_abs_sum, y).flag)
+
+
+# --------------------------------------------------------- protected_matmul
+
+@pytest.mark.parametrize("scheme", [
+    Scheme.NONE, Scheme.GLOBAL, Scheme.BLOCK_1S, Scheme.BLOCK_2S,
+    Scheme.REPLICA, Scheme.AUTO,
+])
+def test_protected_matmul_all_schemes(rng, scheme):
+    x = jnp.asarray(rng.standard_normal((32, 128)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((128, 64)), jnp.float32)
+    cfg = ABFTConfig(scheme=scheme)
+    y, chk = protected_matmul(x, w, cfg, out_dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(jnp.matmul(x, w)), rtol=1e-4)
+    assert not bool(chk.flag)
+
+
+@pytest.mark.parametrize("scheme", [Scheme.GLOBAL, Scheme.BLOCK_1S])
+def test_protected_matmul_detects_fault(rng, scheme):
+    x = jnp.asarray(rng.standard_normal((32, 128)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((128, 64)), jnp.float32)
+    y, chk = protected_matmul(
+        x, w, ABFTConfig(scheme=scheme), out_dtype=jnp.float32,
+        fault=FaultSpec.value(5, 6, 50.0))
+    assert bool(chk.flag)
+
+
+def test_abft_off_is_clean_dot(rng):
+    x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    y, chk = protected_matmul(x, w, ABFTConfig.off(), out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=1e-6)
+    assert not bool(chk.flag)
+
+
+def test_flip_bit_roundtrip(rng):
+    x = jnp.asarray(rng.standard_normal((4, 4)), jnp.float32)
+    b = jnp.asarray(30, jnp.int32)
+    assert bool(jnp.all(flip_bit(flip_bit(x, b), b) == x))

@@ -1,0 +1,221 @@
+"""Fault-tolerance substrate tests: checkpoint/restart, elastic re-mesh,
+heartbeat failure detection, straggler mitigation, trainer recovery."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import Checkpointer
+from repro.runtime.elastic import ElasticState, plan_remesh, rescale_batch
+from repro.runtime.heartbeat import HeartbeatMonitor, StragglerPolicy
+
+
+# ---------------------------------------------------------------- checkpoint
+
+def _tree(seed=0):
+    r = np.random.default_rng(seed)
+    return {
+        "params": {
+            "w": jnp.asarray(r.standard_normal((8, 16)), jnp.float32),
+            "b": jnp.asarray(r.standard_normal((16,)), jnp.float32),
+        },
+        "opt": {"step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(tmp_path)
+    tree = _tree()
+    ck.save(5, tree)
+    restored, step = ck.restore(tree)
+    assert step == 5
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(tree["params"]["w"]))
+    assert int(restored["opt"]["step"]) == 7
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    ck = Checkpointer(tmp_path)
+    tree = _tree()
+    path = ck.save(1, tree)
+    # flip bytes in one leaf blob
+    blob = sorted(path.glob("leaf_*.npy"))[0]
+    raw = bytearray(blob.read_bytes())
+    raw[-1] ^= 0xFF
+    blob.write_bytes(bytes(raw))
+    with pytest.raises(IOError, match="checksum mismatch"):
+        ck.restore(tree)
+
+
+def test_checkpoint_atomic_and_gc(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree)
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert steps == ["step_000000003", "step_000000004"]
+    assert ck.latest_step() == 4
+    assert not list(tmp_path.glob(".tmp_*"))  # no partial writes left
+
+
+def test_checkpoint_async_overlap(tmp_path):
+    ck = Checkpointer(tmp_path)
+    tree = _tree()
+    ck.save_async(10, tree)
+    ck.wait()
+    _, step = ck.restore(tree)
+    assert step == 10
+
+
+def test_checkpoint_reshard_on_restore(tmp_path):
+    """Restore places leaves onto new shardings (elastic restart path)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    ck = Checkpointer(tmp_path)
+    tree = _tree()
+    ck.save(2, tree)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), tree)
+    restored, _ = ck.restore(tree, shardings=sh)
+    assert restored["params"]["w"].sharding == NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------- elastic
+
+def test_plan_remesh_keeps_model_width():
+    plan = plan_remesh(512, model_parallel=16)
+    assert plan.shape == (32, 16)
+    plan = plan_remesh(500, model_parallel=16)   # 12 dead
+    assert plan.shape == (31, 16)
+    assert plan.devices_idle == 500 - 31 * 16
+
+
+def test_plan_remesh_insufficient():
+    with pytest.raises(RuntimeError):
+        plan_remesh(8, model_parallel=16)
+
+
+def test_rescale_batch_preserves_global():
+    r = rescale_batch(256, old_data=16, new_data=15)
+    assert r["per_replica"] * 15 >= 256
+    assert r["pad"] == r["padded_global"] - 256
+    assert 0 < r["grad_scale"] <= 1.0
+
+
+def test_elastic_failure_promotes_spares():
+    st = ElasticState(model_parallel=4,
+                      spares=[f"s{i}" for i in range(4)],
+                      active=[f"w{i}" for i in range(16)])
+    plan = st.on_failure(["w3", "w7"])
+    # 14 alive + spares promoted to keep multiples of model_parallel
+    assert len(st.active) % 4 == 0
+    assert plan.model == 4
+    assert plan.data == len(st.active) // 4
+
+
+def test_elastic_straggler_replacement():
+    st = ElasticState(model_parallel=2, spares=["s0"],
+                      active=["w0", "w1", "w2", "w3"])
+    plan = st.on_straggler("w2")
+    assert "w2" not in st.active
+    assert "s0" in st.active
+    assert plan.shape == (2, 2)
+
+
+# ---------------------------------------------------------------- heartbeat
+
+def test_heartbeat_detects_timeout():
+    clock = [0.0]
+    hb = HeartbeatMonitor(["a", "b"], timeout_s=10.0,
+                          clock=lambda: clock[0])
+    clock[0] = 5.0
+    hb.beat("a")
+    clock[0] = 12.0
+    dead = hb.check()
+    assert dead == ["b"]
+    assert hb.alive == ["a"]
+
+
+def test_straggler_policy_flags_slow_worker():
+    sp = StragglerPolicy(threshold=1.5, window=8, min_samples=4)
+    for _ in range(6):
+        for w in ("a", "b", "c", "d"):
+            sp.record(w, 1.0)
+        sp.record("slow", 2.5)
+    assert sp.stragglers() == ["slow"]
+
+
+def test_straggler_policy_no_false_positive_on_uniform():
+    sp = StragglerPolicy()
+    for _ in range(6):
+        for w in ("a", "b", "c"):
+            sp.record(w, 1.0 + 0.01 * hash(w) % 3 / 100)
+    assert sp.stragglers() == []
+
+
+# ---------------------------------------------------------------- trainer
+
+def test_trainer_end_to_end_with_restart(tmp_path):
+    """Loss decreases; checkpoint restart resumes exactly."""
+    from repro.configs import get_config, scaled_down
+    from repro.core import ABFTConfig, Scheme
+    from repro.data.pipeline import DataConfig
+    from repro.models import build_model
+    from repro.train import OptConfig, TrainConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = scaled_down(get_config("llama3.2-1b"), n_layers=2)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)
+    tcfg = TrainConfig(opt=OptConfig(lr=5e-3, name="adamw"))
+    dcfg = DataConfig(global_batch=4, seq_len=32, vocab_size=cfg.vocab_size)
+    rcfg = TrainerConfig(steps=12, ckpt_every=5, log_every=100,
+                         ckpt_dir=str(tmp_path))
+    abft = ABFTConfig(scheme=Scheme.AUTO, use_pallas=False)
+
+    tr = Trainer(model, params, tcfg, dcfg, rcfg, abft=abft)
+    hist = tr.run()
+    assert len(hist) == 12
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    assert np.isfinite(first) and np.isfinite(last)
+    assert last < first  # learning on synthetic data
+
+    # simulate crash + restart: new trainer restores from checkpoint
+    tr2 = Trainer(model, params, tcfg, dcfg, rcfg, abft=abft)
+    assert tr2.maybe_restore()
+    assert tr2.step == 10  # latest checkpoint cadence multiple
+    hist2 = tr2.run()
+    assert tr2.step == 12
+
+
+def test_trainer_elastic_failure_hook(tmp_path):
+    from repro.configs import get_config, scaled_down
+    from repro.core import ABFTConfig
+    from repro.data.pipeline import DataConfig
+    from repro.models import build_model
+    from repro.train import OptConfig, TrainConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = scaled_down(get_config("llama3.2-1b"), n_layers=1)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)
+    tr = Trainer(
+        model, params,
+        TrainConfig(opt=OptConfig(lr=1e-3)),
+        DataConfig(global_batch=2, seq_len=16, vocab_size=cfg.vocab_size),
+        TrainerConfig(steps=4, ckpt_every=2, ckpt_dir=str(tmp_path)),
+        abft=ABFTConfig.off(),
+        workers=[f"w{i}" for i in range(8)], spares=["s0", "s1"],
+    )
+
+    def kill_w3(trainer):
+        plan = trainer.on_worker_failure(["w3"])
+        assert plan.data * plan.model <= 8 + 1
+
+    tr.run(simulate={2: kill_w3})
+    kinds = [e[0] for e in tr.events]
+    assert "remesh" in kinds

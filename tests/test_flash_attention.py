@@ -1,0 +1,92 @@
+"""Fused-ABFT flash attention kernel: interpret-mode validation against a
+naive softmax-attention oracle + fault detection through the online
+softmax rescaling."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.faults import FaultSpec
+from repro.kernels.flash_ops import flash_attention
+
+F32 = jnp.float32
+
+
+def _naive(q, k, v, causal=True):
+    B, Lq, H, D = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(F32), k.astype(F32))
+    s = s * (D ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((Lq, k.shape[1]), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhv->bqhv", p, v.astype(F32))
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("shape", [
+    (1, 64, 2, 16, 2),      # (B, L, H, D, KV) — GQA
+    (2, 96, 4, 32, 4),      # MHA, ragged-ish length
+])
+def test_matches_naive_attention(rng, shape, causal):
+    B, L, H, D, KV = shape
+    q = jnp.asarray(rng.standard_normal((B, L, H, D)), F32)
+    k = jnp.asarray(rng.standard_normal((B, L, KV, D)), F32)
+    v = jnp.asarray(rng.standard_normal((B, L, KV, D)), F32)
+    o, chk = flash_attention(q, k, v, causal=causal, bq=32, bk=32)
+    ref = _naive(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(o), np.asarray(ref), rtol=2e-4, atol=2e-4)
+    assert not bool(chk.flag), (
+        float(chk.residual[0]), float(chk.threshold[0]),
+        float(chk.residual[1]), float(chk.threshold[1]))
+
+
+def test_bf16_no_false_positive(rng):
+    q = jnp.asarray(rng.standard_normal((1, 64, 2, 16)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 64, 2, 16)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 64, 2, 16)), jnp.bfloat16)
+    o, chk = flash_attention(q, k, v, causal=True, bq=32, bk=32)
+    assert not bool(chk.flag)
+    ref = _naive(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(ref), rtol=5e-2, atol=5e-2)
+
+
+def test_fault_in_output_accumulator_detected(rng):
+    """A corruption of the PV accumulator must trip the rescaled checksum
+    (the invariant survives the online softmax)."""
+    q = jnp.asarray(rng.standard_normal((1, 64, 2, 16)), F32)
+    k = jnp.asarray(rng.standard_normal((1, 64, 2, 16)), F32)
+    v = jnp.asarray(rng.standard_normal((1, 64, 2, 16)), F32)
+    o, chk = flash_attention(
+        q, k, v, causal=True, bq=32, bk=32,
+        fault=FaultSpec.value(row=10, col=3, delta=50.0))
+    assert bool(chk.flag)
+
+
+def test_clean_fault_disabled(rng):
+    q = jnp.asarray(rng.standard_normal((1, 32, 1, 16)), F32)
+    k = jnp.asarray(rng.standard_normal((1, 32, 1, 16)), F32)
+    v = jnp.asarray(rng.standard_normal((1, 32, 1, 16)), F32)
+    o, chk = flash_attention(q, k, v, fault=FaultSpec.none(), bq=16, bk=16)
+    assert not bool(chk.flag)
+
+
+def test_padded_lengths(rng):
+    """Lq not a block multiple: causal padding path."""
+    q = jnp.asarray(rng.standard_normal((1, 40, 2, 16)), F32)
+    k = jnp.asarray(rng.standard_normal((1, 40, 2, 16)), F32)
+    v = jnp.asarray(rng.standard_normal((1, 40, 2, 16)), F32)
+    o, chk = flash_attention(q, k, v, causal=True, bq=16, bk=16)
+    ref = _naive(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(o), np.asarray(ref), rtol=2e-4, atol=2e-4)
+    assert o.shape == (1, 40, 2, 16)
+    assert not bool(chk.flag)

@@ -1,0 +1,101 @@
+"""MoE dispatch correctness: the sort-based grouped-GEMM dispatch must
+match a dense all-experts reference when capacity is sufficient."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, scaled_down
+from repro.core import ABFTConfig
+from repro.models.layers import LayerCtx
+from repro.models.moe import capacity, init_moe, moe_forward
+
+CTX = LayerCtx(abft=ABFTConfig.off())
+
+
+def _cfg(n_experts=8, k=2, shared=0, cap=8.0):
+    base = get_config("qwen2-moe-a2.7b")
+    return scaled_down(
+        base, n_experts=n_experts, experts_per_token=k,
+        n_shared_experts=shared, moe_d_ff=16, d_model=32)
+
+
+def _dense_reference(x, p, cfg):
+    """All experts compute all tokens; combine with normalized top-k."""
+    B, L, D = x.shape
+    xf = x.reshape(-1, D)
+    logits = xf @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_w, topk_i = jax.lax.top_k(probs, cfg.experts_per_token)
+    topk_w = topk_w / topk_w.sum(-1, keepdims=True)
+    up = jnp.einsum("td,edf->tef", xf, p["w_up"])
+    gate = jnp.einsum("td,edf->tef", xf, p["w_gate"])
+    h = jax.nn.silu(gate) * up
+    out = jnp.einsum("tef,efd->ted", h, p["w_down"])  # (T, E, D)
+    y = jnp.zeros_like(xf)
+    for slot in range(cfg.experts_per_token):
+        sel = jnp.take_along_axis(
+            out, topk_i[:, slot][:, None, None], axis=1)[:, 0]
+        y = y + sel * topk_w[:, slot][:, None]
+    return y.reshape(B, L, D)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_dispatch_matches_dense_reference(seed):
+    cfg = dataclasses.replace(_cfg(), capacity_factor=8.0)  # no drops
+    rng = np.random.default_rng(seed)
+    p = init_moe(cfg, jax.random.PRNGKey(seed), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((2, 8, cfg.d_model)), jnp.float32)
+    y, flag, aux = moe_forward(x, p, cfg, CTX)
+    y_ref = _dense_reference(x, p, cfg)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(y_ref), rtol=2e-3, atol=2e-3)
+    assert not bool(flag)
+    assert float(aux) > 0
+
+
+def test_capacity_drops_are_bounded():
+    """With capacity_factor 1.0 and adversarially-identical tokens, drops
+    happen but the residual path keeps outputs finite."""
+    cfg = dataclasses.replace(_cfg(), capacity_factor=1.0)
+    p = init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jnp.ones((2, 16, cfg.d_model), jnp.float32)  # all tokens identical
+    y, flag, aux = moe_forward(x, p, cfg, CTX)
+    assert not bool(jnp.any(jnp.isnan(y)))
+    # identical tokens all route to the same experts -> capacity binds
+    C = capacity(cfg, 32)
+    assert C < 32 * cfg.experts_per_token / cfg.n_experts * 8
+
+
+def test_shared_experts_add_dense_path():
+    cfg = dataclasses.replace(_cfg(shared=2), capacity_factor=8.0)
+    p = init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal((1, 4, cfg.d_model)),
+        jnp.float32)
+    y, flag, aux = moe_forward(x, p, cfg, CTX)
+    y_routed = _dense_reference(x, p, cfg)
+    # shared path contributes beyond the routed reference
+    assert float(jnp.max(jnp.abs(y - y_routed))) > 1e-4
+
+
+def test_grouped_dispatch_group_invariance():
+    """dp_size-grouped dispatch equals ungrouped when tokens divide."""
+    from repro.models.layers import ShardingHints
+
+    cfg = dataclasses.replace(_cfg(), capacity_factor=8.0)
+    p = init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jnp.asarray(
+        np.random.default_rng(3).standard_normal((4, 8, cfg.d_model)),
+        jnp.float32)
+    y1, _, _ = moe_forward(x, p, cfg, CTX)
+    # hints with dp_size=4 but no mesh: constrain() would need a mesh, so
+    # emulate grouping by reshaping batch (the dispatch path is identical)
+    y2, _, _ = moe_forward(
+        x.reshape(8, 4, cfg.d_model), p, cfg, CTX)
+    np.testing.assert_allclose(
+        np.asarray(y1).reshape(-1), np.asarray(y2).reshape(-1),
+        rtol=2e-3, atol=2e-3)

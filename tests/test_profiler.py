@@ -1,0 +1,23 @@
+"""Empirical profiler (paper §5.3 pre-deployment integration) tests."""
+
+import jax.numpy as jnp
+
+from repro.core import GemmDims, Scheme, SelectorConfig, select_scheme
+from repro.core.profiler import build_profile_table, profile_layer
+
+
+def test_profile_layer_returns_times():
+    dims = GemmDims(m=16, k=64, n=32)
+    times = profile_layer(dims, dtype=jnp.float32, use_pallas=False)
+    assert set(times) == {Scheme.GLOBAL, Scheme.BLOCK_1S}
+    assert all(t > 0 for t in times.values())
+
+
+def test_profile_table_feeds_selector():
+    dims = GemmDims(m=8, k=32, n=16)
+    table = build_profile_table([dims], dtype=jnp.float32, use_pallas=False)
+    assert dims in table
+    sel = select_scheme(
+        dims, config=SelectorConfig(mode="profile"), profile_table=table)
+    assert sel.scheme == table[dims]
+    assert sel.reason == "empirical profile table"
