@@ -124,6 +124,140 @@ def _kernel(
         bnd_s_ref[0, :] = bnds_ref[...]
 
 
+def _decode_kernel(
+    q_ref, k_ref, v_ref, len_ref,                  # inputs
+    o_ref, res_s_ref, bnd_s_ref, res_pv_ref, bnd_pv_ref,   # outputs
+    m_ref, l_ref, acc_ref, chk_ref, bndc_ref, ress_ref, bnds_ref,  # scratch
+    *, gk: int, bk: int, scale: float,
+):
+    """Single-query decode tile: one q row against a length-masked KV
+    cache, K-blocks innermost, with the same two fused ABFT checks as the
+    full kernel (scores vs K-tile checksum; PV via the rescaled checksum
+    accumulator).  ``len_ref`` holds the per-row valid cache length — the
+    vectorized serving cursor lands here, so slots with different prompt
+    lengths read only their own prefix."""
+    ki = pl.program_id(0)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        chk_ref[...] = jnp.zeros_like(chk_ref)
+        bndc_ref[...] = jnp.zeros_like(bndc_ref)
+        ress_ref[...] = jnp.zeros_like(ress_ref)
+        bnds_ref[...] = jnp.zeros_like(bnds_ref)
+
+    q = q_ref[...]                                 # (1, d)
+    k = k_ref[...]                                 # (bk, d)
+    v = v_ref[...]                                 # (bk, dv)
+    qf = q.astype(F32)
+    kf = k.astype(F32)
+    vf = v.astype(F32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=F32) * scale
+
+    # ABFT check #1 on the unmasked scores (masking is not part of the GEMM)
+    k_sum = jnp.sum(kf, axis=0)
+    k_abs = jnp.sum(jnp.abs(kf), axis=0)
+    chk_s = jnp.sum(qf * k_sum[None, :], axis=1) * scale
+    bnd_s = jnp.sum(jnp.abs(qf) * k_abs[None, :], axis=1) * abs(scale)
+    res_here = jnp.abs(chk_s - jnp.sum(s, axis=1))
+    ress_ref[...] = jnp.maximum(ress_ref[...], res_here)
+    bnds_ref[...] = jnp.maximum(bnds_ref[...], bnd_s)
+
+    # per-row length mask: only the slot's own valid prefix participates
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    s = jnp.where(k_pos < len_ref[0], s, NEG_INF)
+
+    m_new = jnp.maximum(m_ref[...], jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_ref[...] - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    m_ref[...] = m_new
+
+    pv = jax.lax.dot_general(
+        p, vf, (((1,), (0,)), ((), ())), preferred_element_type=F32)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    v_sum = jnp.sum(vf, axis=1)
+    v_abs = jnp.sum(jnp.abs(vf), axis=1)
+    chk_ref[...] = chk_ref[...] * corr + jnp.sum(p * v_sum[None, :], axis=1)
+    bndc_ref[...] = bndc_ref[...] * corr + jnp.sum(p * v_abs[None, :],
+                                                   axis=1)
+
+    @pl.when(ki == gk - 1)
+    def _finalize():
+        acc = acc_ref[...]
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+        res_pv_ref[...] = jnp.abs(chk_ref[...] - jnp.sum(acc, axis=1))
+        bnd_pv_ref[...] = bndc_ref[...]
+        res_s_ref[...] = ress_ref[...]
+        bnd_s_ref[...] = bnds_ref[...]
+
+
+def flash_decode_kernel(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    length: jnp.ndarray,
+    *,
+    bk: int,
+    scale: float | None = None,
+    out_dtype=None,
+    interpret: bool = True,
+):
+    """Single-head fused-ABFT decode attention.
+
+    q: (1, d); k: (S, d); v: (S, dv) — S padded to a bk multiple;
+    length: (1,) int32 valid cache length for this row.
+    Returns (o (1, dv), res_s, bnd_s, res_pv, bnd_pv), each check vector
+    of shape (1,).
+    """
+    _, d = q.shape
+    S, dv = v.shape
+    assert S % bk == 0, (S, bk)
+    gk = S // bk
+    scale = scale if scale is not None else d ** -0.5
+    out_dtype = out_dtype or q.dtype
+
+    kernel = functools.partial(_decode_kernel, gk=gk, bk=bk, scale=scale)
+    vec_spec = pl.BlockSpec((1,), lambda j: (0,))
+    o, rs, bs, rp, bp = pl.pallas_call(
+        kernel,
+        grid=(gk,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda j: (0, 0)),
+            pl.BlockSpec((bk, d), lambda j: (j, 0)),
+            pl.BlockSpec((bk, dv), lambda j: (j, 0)),
+            pl.BlockSpec((1,), lambda j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, dv), lambda j: (0, 0)),
+            vec_spec, vec_spec, vec_spec, vec_spec,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, dv), out_dtype),
+            jax.ShapeDtypeStruct((1,), F32),
+            jax.ShapeDtypeStruct((1,), F32),
+            jax.ShapeDtypeStruct((1,), F32),
+            jax.ShapeDtypeStruct((1,), F32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1,), F32),        # m
+            pltpu.VMEM((1,), F32),        # l
+            pltpu.VMEM((1, dv), F32),     # acc
+            pltpu.VMEM((1,), F32),        # pv checksum
+            pltpu.VMEM((1,), F32),        # pv bound
+            pltpu.VMEM((1,), F32),        # scores residual (max over k)
+            pltpu.VMEM((1,), F32),        # scores bound
+        ],
+        interpret=interpret,
+    )(q, k, v, length)
+    return o, rs, bs, rp, bp
+
+
 def flash_attention_kernel(
     q: jnp.ndarray,
     k: jnp.ndarray,

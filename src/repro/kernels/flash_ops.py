@@ -7,7 +7,11 @@ import jax.numpy as jnp
 
 from repro.core.checksums import ATOL, CheckResult, flag_from, tolerance_scale
 from repro.core.faults import FaultSpec
-from repro.kernels.flash_attention import F32, flash_attention_kernel
+from repro.kernels.flash_attention import (
+    F32,
+    flash_attention_kernel,
+    flash_decode_kernel,
+)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -82,3 +86,58 @@ def flash_attention(
     residual = jnp.stack([jnp.max(rs), jnp.max(rp)])
     threshold = jnp.stack([jnp.min(tau_s), jnp.min(tau_pv)])
     return o, CheckResult(flag=flag, residual=residual, threshold=threshold)
+
+
+def flash_decode(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    bk: int = 128,
+    interpret: bool | None = None,
+    c_factor: float = 16.0,
+):
+    """Fused-ABFT decode attention against a ragged KV cache.
+
+    q: (B, 1, H, D); k_cache/v_cache: (B, S, KV, D[v]); lengths: (B,)
+    int32 per-row valid cache length (the serving engine's vectorized
+    cursor + 1).  Each batch row attends only its own valid prefix, so
+    mixed-length continuous batching is exact.  Returns
+    (out (B, 1, H, Dv), CheckResult) covering both attention GEMMs.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, _, H, D = q.shape
+    S, KV, Dv = k_cache.shape[1], k_cache.shape[2], v_cache.shape[3]
+    if KV != H:
+        rep = H // KV
+        k_cache = jnp.repeat(k_cache, rep, axis=2)
+        v_cache = jnp.repeat(v_cache, rep, axis=2)
+
+    bk_eff = min(bk, _round_up(S, 8))
+    pk = _round_up(S, bk_eff) - S
+    kp = jnp.pad(k_cache, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v_cache, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    lengths = jnp.broadcast_to(
+        jnp.asarray(lengths, jnp.int32), (B,))[:, None]    # (B, 1)
+
+    def one_head(qh, kh, vh, ln):
+        return flash_decode_kernel(
+            qh, kh, vh, ln, bk=bk_eff, interpret=interpret,
+            out_dtype=q.dtype)
+
+    f = jax.vmap(jax.vmap(one_head, in_axes=(0, 0, 0, None)),
+                 in_axes=(0, 0, 0, 0))
+    o, rs, bs, rp, bp = f(
+        jnp.moveaxis(q, 2, 1), jnp.moveaxis(kp, 2, 1),
+        jnp.moveaxis(vp, 2, 1), lengths)
+    out = jnp.moveaxis(o, 1, 2)                            # (B, 1, H, Dv)
+
+    tau_s = ATOL + tolerance_scale(D, c=c_factor) * bs
+    tau_pv = ATOL + tolerance_scale(S, c=c_factor) * bp
+    flag = jnp.logical_or(flag_from(rs, tau_s), flag_from(rp, tau_pv))
+    residual = jnp.stack([jnp.max(rs), jnp.max(rp)])
+    threshold = jnp.stack([jnp.min(tau_s), jnp.min(tau_pv)])
+    return out, CheckResult(flag=flag, residual=residual,
+                            threshold=threshold)

@@ -19,7 +19,7 @@ from repro.core.protected import ABFTConfig
 from repro.core.faults import FaultSpec
 from repro.core.schemes import Scheme
 from repro.models import ModelFault, build_model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import RecoveryPolicy, Request, ServeEngine
 
 
 def main(argv=None) -> int:
@@ -33,6 +33,10 @@ def main(argv=None) -> int:
     ap.add_argument("--abft", default="auto",
                     choices=["auto", "global", "block_1s", "off"])
     ap.add_argument("--inject-faults", action="store_true")
+    ap.add_argument("--max-retries", type=int, default=1,
+                    help="clean recomputes after an ABFT detection")
+    ap.add_argument("--raise-on-hard-fault", action="store_true",
+                    help="crash instead of evicting on persistent faults")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -46,9 +50,12 @@ def main(argv=None) -> int:
             scheme=Scheme.AUTO if args.abft == "auto" else Scheme(args.abft),
             use_pallas=False)
     )
+    policy = RecoveryPolicy(
+        max_retries=args.max_retries,
+        evict_on_hard_fault=not args.raise_on_hard_fault)
     engine = ServeEngine(model, params, slots=args.slots,
                          max_len=args.max_len, abft=abft,
-                         dtype=jnp.float32)
+                         dtype=jnp.float32, policy=policy)
     rng = np.random.default_rng(0)
     reqs = [
         Request(uid=i,
@@ -72,6 +79,8 @@ def main(argv=None) -> int:
         "faults_detected": engine.stats.faults_detected,
         "retries": engine.stats.retries,
         "hard_faults": engine.stats.hard_faults,
+        "evictions": engine.stats.evictions,
+        "errors": {r.uid: r.error for r in reqs if r.error},
     }))
     return 0
 

@@ -147,37 +147,77 @@ def gqa_forward(x, p, cfg: ModelConfig, ctx: LayerCtx, positions,
     return out, or_flags(flag, f_attn, f)
 
 
-def gqa_prefill(x, p, cfg: ModelConfig, ctx: LayerCtx, positions, cache):
+def _row_scatter(cache_leaf, new, pos):
+    """Per-row KV scatter: write ``new[b]`` into ``cache_leaf[b]`` at its
+    own row position ``pos[b]`` (vectorized decode cursor)."""
+    def one(c, n, p):
+        start = (p,) + (0,) * (c.ndim - 1)
+        return jax.lax.dynamic_update_slice(c, n, start)
+
+    return jax.vmap(one)(cache_leaf, new.astype(cache_leaf.dtype), pos)
+
+
+def _slot_prefill_write(cache_leaf, new, slots, L):
+    """Write ``new`` (A, L, ...) into rows ``slots`` of the engine cache
+    (B_engine, S_max, ...) at positions [0, L)."""
+    return cache_leaf.at[slots, :L].set(new.astype(cache_leaf.dtype))
+
+
+def _vec_positions(pos, B):
+    """Normalize a decode cursor to a (B,) vector of positions."""
+    return jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+
+
+def gqa_prefill(x, p, cfg: ModelConfig, ctx: LayerCtx, positions, cache,
+                slots=None, lengths=None):
     """Prefill: run full attention AND fill the cache.  cache: dict with
-    'k','v' of shape (B, S_max, KV, hd) and scalar 'len'."""
+    'k','v' of shape (B, S_max, KV, hd).
+
+    ``slots``/``lengths`` (continuous-batching path): x is the admission
+    batch (A, L, D) padded to a common L; k/v rows are scattered into the
+    engine cache rows ``slots`` and attention is masked per-row at
+    ``lengths`` so ragged prompts never attend into padding."""
     B, L, _ = x.shape
     q, k, v, flag = _qkv(x, p, cfg, ctx, positions)
-    out = chunked_attention(q, k, v, causal=True)
+    out = chunked_attention(q, k, v, causal=True, lengths=lengths)
     out = out.reshape(B, L, -1)
     out, f = dense(out, p["wo"], ctx, "attn_out")
-    new_cache = {
-        "k": jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
-        "v": jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
-    }
+    if slots is None:
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+        }
+    else:
+        new_cache = {
+            "k": _slot_prefill_write(cache["k"], k, slots, L),
+            "v": _slot_prefill_write(cache["v"], v, slots, L),
+        }
     return out, new_cache, or_flags(flag, f)
 
 
 def gqa_decode(x, p, cfg: ModelConfig, ctx: LayerCtx, pos, cache):
-    """One-token decode.  x: (B, 1, D); pos: scalar current position;
-    cache k/v: (B, S_max, KV, hd)."""
+    """One-token decode.  x: (B, 1, D); pos: scalar or (B,) per-slot
+    position vector; cache k/v: (B, S_max, KV, hd).  Each row writes its
+    new k/v at its own cursor and attends its own valid prefix."""
     B = x.shape[0]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos = _vec_positions(pos, B)
+    positions = pos[:, None]
     q, k, v, flag = _qkv(x, p, cfg, ctx, positions)
-    ck = jax.lax.dynamic_update_slice(
-        cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
-    cv = jax.lax.dynamic_update_slice(
-        cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
-    out = decode_attention(q, ck, cv, pos + 1)
+    ck = _row_scatter(cache["k"], k, pos)
+    cv = _row_scatter(cache["v"], v, pos)
+    if ctx.abft.flash_attention:
+        from repro.kernels.flash_ops import flash_decode
+
+        out, chk = flash_decode(q, ck, cv, pos + 1)
+        f_attn = chk.flag
+    else:
+        out = decode_attention(q, ck, cv, pos + 1)
+        f_attn = jnp.zeros((), bool)
     out = out.reshape(B, 1, -1)
     out, f = dense(out, p["wo"], ctx, "attn_out")
-    return out, {"k": ck, "v": cv}, or_flags(flag, f)
+    return out, {"k": ck, "v": cv}, or_flags(flag, f_attn, f)
 
 
 def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
@@ -284,7 +324,8 @@ def _mla_latent_kv(x, p, cfg: ModelConfig, ctx: LayerCtx, positions):
     return c_kv, k_pe, f
 
 
-def _mla_attend(q_full, scale, latent, p, cfg, ctx, B, L, decode_len=None):
+def _mla_attend(q_full, scale, latent, p, cfg, ctx, B, L, decode_len=None,
+                lengths=None):
     """latent: concatenated [c_kv ; k_pe] (B, S, c+dr).  Values are the
     first c dims of the same buffer — attention reads ONE cache tensor
     (no per-step concat of the 32k-deep cache; §Perf iteration C2)."""
@@ -293,7 +334,7 @@ def _mla_attend(q_full, scale, latent, p, cfg, ctx, B, L, decode_len=None):
     vv = latent[:, :, None, :c]
     if decode_len is None:
         ctxv = chunked_attention(
-            q_full, kv, vv, causal=True, scale=scale)
+            q_full, kv, vv, causal=True, scale=scale, lengths=lengths)
     else:
         ctxv = decode_attention(q_full, kv, vv, decode_len, scale=scale)
     # un-absorb values: (B,L,H,c) @ (H,c,dv) -> (B,L,H,dv)
@@ -313,29 +354,31 @@ def mla_forward(x, p, cfg: ModelConfig, ctx: LayerCtx, positions):
     return out, or_flags(f1, f2, f3)
 
 
-def mla_prefill(x, p, cfg: ModelConfig, ctx: LayerCtx, positions, cache):
+def mla_prefill(x, p, cfg: ModelConfig, ctx: LayerCtx, positions, cache,
+                slots=None, lengths=None):
     B, L, _ = x.shape
     q_full, scale, f1 = _mla_q(x, p, cfg, ctx, positions)
     c_kv, k_pe, f2 = _mla_latent_kv(x, p, cfg, ctx, positions)
     latent = jnp.concatenate([c_kv, k_pe], axis=-1)
-    out, f3 = _mla_attend(q_full, scale, latent, p, cfg, ctx, B, L)
-    new_cache = {
-        "latent": jax.lax.dynamic_update_slice(
+    out, f3 = _mla_attend(
+        q_full, scale, latent, p, cfg, ctx, B, L, lengths=lengths)
+    if slots is None:
+        new_latent = jax.lax.dynamic_update_slice(
             cache["latent"], latent.astype(cache["latent"].dtype),
-            (0, 0, 0)),
-    }
-    return out, new_cache, or_flags(f1, f2, f3)
+            (0, 0, 0))
+    else:
+        new_latent = _slot_prefill_write(cache["latent"], latent, slots, L)
+    return out, {"latent": new_latent}, or_flags(f1, f2, f3)
 
 
 def mla_decode(x, p, cfg: ModelConfig, ctx: LayerCtx, pos, cache):
     B = x.shape[0]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos = _vec_positions(pos, B)
+    positions = pos[:, None]
     q_full, scale, f1 = _mla_q(x, p, cfg, ctx, positions)
     c_kv, k_pe, f2 = _mla_latent_kv(x, p, cfg, ctx, positions)
     latent_new = jnp.concatenate([c_kv, k_pe], axis=-1)  # (B, 1, c+dr)
-    lat = jax.lax.dynamic_update_slice(
-        cache["latent"], latent_new.astype(cache["latent"].dtype),
-        (0, pos, 0))
+    lat = _row_scatter(cache["latent"], latent_new, pos)
     out, f3 = _mla_attend(
         q_full, scale, lat, p, cfg, ctx, B, 1, decode_len=pos + 1)
     return out, {"latent": lat}, or_flags(f1, f2, f3)

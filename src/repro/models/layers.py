@@ -164,7 +164,7 @@ NEG_INF = -1e30
 
 def chunked_attention(
     q, k, v, *, causal: bool, q_offset=0, q_chunk: int = 512,
-    k_chunk: int = 1024, scale: float | None = None,
+    k_chunk: int = 1024, scale: float | None = None, lengths=None,
 ):
     """Memory-bounded attention (pure-JAX flash style): nested scans over
     query and key chunks with online softmax.  Avoids materializing the
@@ -172,6 +172,8 @@ def chunked_attention(
 
     q: (B, Lq, H, Dk); k: (B, Lk, KV, Dk); v: (B, Lk, KV, Dv).
     GQA: H must be a multiple of KV; KV == 1 is MQA (used by absorbed MLA).
+    ``lengths``: optional (B,) int32 per-row valid key count — keys at
+    positions >= lengths[b] are masked for row b (ragged batched prefill).
     Returns (B, Lq, H, Dv).
     """
     B, Lq, H, Dk = q.shape
@@ -217,6 +219,9 @@ def chunked_attention(
             if causal:
                 mask = mask & (q_pos[:, None] >= k_pos[None, :])
             s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            if lengths is not None:
+                row_ok = k_pos[None, :] < lengths[:, None]     # (B, kc)
+                s = jnp.where(row_ok[:, None, None, None, :], s, NEG_INF)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)

@@ -158,22 +158,46 @@ def mamba_forward(x, p, cfg: ModelConfig, ctx: LayerCtx):
     return out, or_flags(f1, f2)
 
 
-def mamba_prefill(x, p, cfg: ModelConfig, ctx: LayerCtx, cache):
-    """Prefill: full-sequence forward + final (conv, ssm) states."""
+def mamba_prefill(x, p, cfg: ModelConfig, ctx: LayerCtx, cache,
+                  slots=None, lengths=None):
+    """Prefill: full-sequence forward + final (conv, ssm) states.
+
+    ``slots``/``lengths`` (continuous-batching path): x is the admission
+    batch (A, L, D) padded to a common L.  Padded positions are masked out
+    of the recurrence (dt := 0 there, so the state neither decays nor
+    accumulates past lengths[b]); the conv window is taken per-row at the
+    true prompt end; states scatter into engine cache rows ``slots``."""
     Bsz, L, _ = x.shape
     H, P, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
     W = cfg.ssm_conv_width
     z, xs, Bm, Cm, dt, f1 = _project_in(x, p, cfg, ctx)
     bc_in = jnp.concatenate([Bm, Cm], axis=-1)
-    # conv states: last W-1 raw inputs of each stream
-    conv_x_state = jax.lax.dynamic_slice_in_dim(
-        jnp.pad(xs, ((0, 0), (W - 1, 0), (0, 0))), L, W - 1, axis=1)
-    conv_bc_state = jax.lax.dynamic_slice_in_dim(
-        jnp.pad(bc_in, ((0, 0), (W - 1, 0), (0, 0))), L, W - 1, axis=1)
+    valid = None
+    if lengths is not None:
+        valid = (jnp.arange(L)[None, :] < lengths[:, None])   # (A, L)
+        vz = valid[..., None].astype(xs.dtype)
+        xs = xs * vz
+        bc_in = bc_in * vz.astype(bc_in.dtype)
+    # conv states: last W-1 raw inputs of each stream (per-row window
+    # ending at the true prompt length when ragged)
+    pad_xs = jnp.pad(xs, ((0, 0), (W - 1, 0), (0, 0)))
+    pad_bc = jnp.pad(bc_in, ((0, 0), (W - 1, 0), (0, 0)))
+    if lengths is None:
+        conv_x_state = jax.lax.dynamic_slice_in_dim(pad_xs, L, W - 1, axis=1)
+        conv_bc_state = jax.lax.dynamic_slice_in_dim(pad_bc, L, W - 1, axis=1)
+    else:
+        row_slice = jax.vmap(
+            lambda r, s: jax.lax.dynamic_slice_in_dim(r, s, W - 1, axis=0))
+        conv_x_state = row_slice(pad_xs, lengths)
+        conv_bc_state = row_slice(pad_bc, lengths)
     xs2 = _causal_conv(xs, p["conv_x_w"], p["conv_x_b"])
     bc = _causal_conv(bc_in, p["conv_bc_w"], p["conv_bc_b"])
     Bm2, Cm2 = bc[..., :n], bc[..., n:]
     dt2 = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])
+    if valid is not None:
+        # dt == 0 past the prompt end: exp(0)=1 decay, zero input term —
+        # the state is frozen at its lengths[b]-token value through padding
+        dt2 = dt2 * valid.astype(F32)[..., None]
     A = -jnp.exp(p["A_log"])
     xh = xs2.reshape(Bsz, L, H, P)
     y, S_final = _ssd_chunked(xh, dt2, A, Bm2, Cm2, cfg.ssm_chunk)
@@ -181,11 +205,18 @@ def mamba_prefill(x, p, cfg: ModelConfig, ctx: LayerCtx, cache):
     y = y.reshape(Bsz, L, cfg.d_inner).astype(x.dtype)
     y = gated_rms_norm(y, z, p["out_norm"], cfg.norm_eps)
     out, f2 = dense(y, p["out_proj"], ctx, "ssm_out")
-    new_cache = {
-        "conv_x": conv_x_state.astype(cache["conv_x"].dtype),
-        "conv_bc": conv_bc_state.astype(cache["conv_bc"].dtype),
-        "ssm": S_final.astype(cache["ssm"].dtype),
-    }
+    conv_x_state = conv_x_state.astype(cache["conv_x"].dtype)
+    conv_bc_state = conv_bc_state.astype(cache["conv_bc"].dtype)
+    S_final = S_final.astype(cache["ssm"].dtype)
+    if slots is None:
+        new_cache = {
+            "conv_x": conv_x_state, "conv_bc": conv_bc_state, "ssm": S_final}
+    else:
+        new_cache = {
+            "conv_x": cache["conv_x"].at[slots].set(conv_x_state),
+            "conv_bc": cache["conv_bc"].at[slots].set(conv_bc_state),
+            "ssm": cache["ssm"].at[slots].set(S_final),
+        }
     return out, new_cache, or_flags(f1, f2)
 
 

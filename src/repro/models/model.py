@@ -146,8 +146,12 @@ def init_layer_cache(cfg: ModelConfig, tag: str, batch: int, max_len: int,
 def apply_layer(
     x, lp, tag: str, cfg: ModelConfig, ctx: LayerCtx, positions,
     mode: str, cache, pos, mem, causal: bool = True,
+    slots=None, lengths=None,
 ):
     """One transformer/mamba layer.  mode: full | prefill | decode.
+    ``pos`` (decode): scalar or (B,) per-slot cursor vector.
+    ``slots``/``lengths`` (prefill): scatter targets + ragged valid lengths
+    for continuous-batching admission into an engine-deep cache.
     Returns (x, new_cache, flag, aux)."""
     mixer, ffn, cross = tag.split(":")
     flags = []
@@ -165,7 +169,8 @@ def apply_layer(
             else:
                 a, f = fwd(h, lp["mixer"], cfg, ctx, positions)
         elif mode == "prefill":
-            a, nc, f = pre(h, lp["mixer"], cfg, ctx, positions, cache["attn"])
+            a, nc, f = pre(h, lp["mixer"], cfg, ctx, positions, cache["attn"],
+                           slots=slots, lengths=lengths)
             new_cache["attn"] = nc
         else:
             a, nc, f = dec(h, lp["mixer"], cfg, ctx, pos, cache["attn"])
@@ -175,7 +180,8 @@ def apply_layer(
             a, f = mb.mamba_forward(h, lp["mixer"], cfg, ctx)
         elif mode == "prefill":
             a, nc, f = mb.mamba_prefill(h, lp["mixer"], cfg, ctx,
-                                        cache["attn"])
+                                        cache["attn"],
+                                        slots=slots, lengths=lengths)
             new_cache["attn"] = nc
         else:
             a, nc, f = mb.mamba_decode(h, lp["mixer"], cfg, ctx,
@@ -193,10 +199,15 @@ def apply_layer(
         else:
             ck, cv, fkv = attn.cross_kv(mem, lp["cross"], cfg, ctx)
             if mode == "prefill":
-                new_cache["cross"] = {
-                    "k": ck.astype(cache["cross"]["k"].dtype),
-                    "v": cv.astype(cache["cross"]["v"].dtype),
-                }
+                ckd = ck.astype(cache["cross"]["k"].dtype)
+                cvd = cv.astype(cache["cross"]["v"].dtype)
+                if slots is None:
+                    new_cache["cross"] = {"k": ckd, "v": cvd}
+                else:
+                    new_cache["cross"] = {
+                        "k": cache["cross"]["k"].at[slots].set(ckd),
+                        "v": cache["cross"]["v"].at[slots].set(cvd),
+                    }
         a, f = attn.cross_forward(h, ck, cv, lp["cross"], cfg, ctx)
         gate = jnp.tanh(lp["cross_gate"]).astype(x.dtype)
         x = x + gate * a
@@ -220,9 +231,11 @@ def apply_layer(
 def run_stack(
     x, segments_params, plan, cfg: ModelConfig, ctx: LayerCtx, positions,
     mode: str, caches, pos, mem, causal: bool = True, remat: bool = False,
-    layer_offset: int = 0,
+    layer_offset: int = 0, slots=None, lengths=None,
 ):
     """Apply all segments.  caches: list aligned with plan (or None).
+    ``pos``: decode cursor — scalar or (B,) vector; ``slots``/``lengths``
+    thread the continuous-batching prefill path (see apply_layer).
     Returns (x, new_caches, flag, aux)."""
     flag = jnp.zeros((), bool)
     aux = jnp.zeros((), F32)
@@ -248,7 +261,7 @@ def run_stack(
                 xx, ncq, f, a = apply_layer(
                     xx, up[f"pos{q}"], tag, cfg, lctx, positions, mode,
                     uc[f"pos{q}"] if uc is not None else None, pos, mem,
-                    causal=causal,
+                    causal=causal, slots=slots, lengths=lengths,
                 )
                 new_uc[f"pos{q}"] = ncq
                 fl = jnp.logical_or(fl, f)
@@ -452,7 +465,19 @@ class Model:
         return logits, or_flags(f1, f2, f3)
 
     # -------------------------------------------------- prefill / decode
-    def prefill(self, params, batch, cache, ctx: LayerCtx):
+    def prefill(self, params, batch, cache, ctx: LayerCtx,
+                slots=None, lengths=None):
+        """Prefill the cache from ``batch["tokens"]`` (B, L).
+
+        Default path: cache is B-deep, rows map 1:1 to the batch, logits
+        come from the last token of each row.
+
+        Continuous-batching path (``slots``/``lengths`` given): cache is
+        engine-deep, tokens are an admission batch padded to a common L,
+        ``slots`` (A,) names the cache rows to fill and ``lengths`` (A,)
+        the true prompt lengths.  Attention/SSM recurrences are masked at
+        the per-row length and logits are gathered at the last *valid*
+        token of each row."""
         cfg = self.cfg
         tokens = batch["tokens"]
         B, L = tokens.shape
@@ -463,18 +488,26 @@ class Model:
             x = x + sinusoid_pos(positions, cfg.d_model).astype(x.dtype)
         x, new_cache, flag, _ = run_stack(
             x, params["segments"], self.plan, cfg, ctx, positions,
-            "prefill", cache, None, mem)
+            "prefill", cache, None, mem, slots=slots, lengths=lengths)
         x = norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
-        logits, f_head = self._head(params, x[:, -1:, :], ctx)
+        if lengths is not None:
+            last = x[jnp.arange(B), jnp.maximum(lengths - 1, 0)][:, None]
+        else:
+            last = x[:, -1:, :]
+        logits, f_head = self._head(params, last, ctx)
         return logits, new_cache, or_flags(flag, f_head, mem_flag)
 
     def decode(self, params, token, cache, pos, ctx: LayerCtx):
-        """token: (B, 1) int32; pos: scalar int32 current position."""
+        """token: (B, 1) int32; pos: scalar int32 OR (B,) int32 per-slot
+        position vector.  With a vector, each batch row writes its new KV
+        at its own cursor and attends its own prefix — the contract the
+        continuous-batching engine relies on for mixed-length traffic."""
         cfg = self.cfg
         B = token.shape[0]
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
         x = params["embed"][token]
         if cfg.is_encoder_decoder:
-            positions = jnp.full((B, 1), pos, jnp.int32)
+            positions = pos[:, None]
             x = x + sinusoid_pos(positions, cfg.d_model).astype(x.dtype)
         x, new_cache, flag, _ = run_stack(
             x, params["segments"], self.plan, cfg, ctx, None,

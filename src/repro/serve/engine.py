@@ -1,17 +1,56 @@
 """Serving engine: continuous-batched decode with ABFT detect->recompute
-recovery.
+recovery, built around a **vectorized per-slot position cursor**.
 
 The engine owns a fixed-capacity slot table (the batch dimension of the KV
-cache).  Requests are admitted into free slots (continuous batching), each
-step decodes one token for every active slot, and the per-step ABFT flag
-drives the recovery policy:
+cache).  Every slot carries its own write cursor ``pos[s]``; the decode
+step passes the full ``(slots,)`` cursor vector to ``model.decode`` so each
+slot writes its new KV entry at its *own* offset and attends only its own
+valid prefix.  This is what makes mixed-length traffic correct: two
+requests with different prompt lengths share a batch without ever touching
+each other's cache rows (the seed engine collapsed cursors to a scalar
+``max(pos)`` and corrupted exactly this case).
 
-  detect (paper's contribution) -> re-execute the step from the pre-step
-  cache state (kept until the flag is read back) -> if the flag persists,
-  surface a hard fault to the caller.
+Engine API
+----------
+``admit(pending)``
+    Batched admission: up to ``len(free_slots())`` requests are prefetched
+    from the front of ``pending``, padded to a common length, and prefilled
+    in ONE model call **directly into their engine cache rows** (per-slot
+    scatter + per-row length masking — no 1-deep temp cache or splice).
+    Each consumed request is admitted, finished (``max_new_tokens`` already
+    satisfied by the prefill-sampled token), or evicted with ``error`` set
+    (over-long prompt, persistent prefill fault).  Returns the number of
+    requests consumed so the caller can always make progress (no livelock
+    on a hard-faulting head request).
 
-A fault-injection campaign hook lets tests corrupt a chosen layer GEMM and
-verify detection + recovery end to end.
+``step(fault=None)``
+    One decode step for all active slots.  Tokens are chosen by a
+    slot-masked argmax inside the jitted step, so inactive slots never
+    contribute a sampled token; their cache rows are dead until the next
+    admission overwrites them.
+
+``run(requests, fault_at=None, admit_fault_at=None)``
+    Drives admission + decode to completion.  ``fault_at=(step, fault)``
+    injects a campaign fault into one decode step; ``admit_fault_at=
+    (uid, fault)`` injects into the admission batch containing that uid.
+
+Recovery policy
+---------------
+``RecoveryPolicy`` makes the paper's detect->recompute loop explicit:
+
+  * a detected fault re-executes the step from the pre-step cache state
+    (``prev_cache`` is held until the flag is read back) up to
+    ``max_retries`` times — prefill retries likewise restart from the
+    pre-admission cache, never from the possibly-corrupted attempt;
+  * if the flag persists, the fault is *hard*: with
+    ``evict_on_hard_fault`` (default) the affected requests are evicted
+    with ``error`` recorded and the engine keeps serving, otherwise a
+    ``RuntimeError`` is raised (the seed behavior).
+
+Token budget: ``max_new_tokens`` counts every generated token *including*
+the one sampled at prefill, so ``max_new_tokens=N`` yields exactly N new
+tokens (``N-1`` decode steps) — a request satisfied at admission never
+occupies a slot.
 """
 
 from __future__ import annotations
@@ -31,9 +70,19 @@ from repro.models.model import Model
 class Request:
     uid: int
     prompt: np.ndarray            # (L,) int32
-    max_new_tokens: int
+    max_new_tokens: int           # budget of generated tokens (incl. the
+                                  # prefill-sampled first token)
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    error: str | None = None      # set when evicted (hard fault, too long)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPolicy:
+    """ABFT detect->recompute policy (see module docstring)."""
+
+    max_retries: int = 1           # clean re-executions after a detection
+    evict_on_hard_fault: bool = True   # evict + record error vs raise
 
 
 @dataclasses.dataclass
@@ -43,62 +92,135 @@ class EngineStats:
     faults_detected: int = 0
     retries: int = 0
     hard_faults: int = 0
+    evictions: int = 0
+
+
+def _pad_len(n: int) -> int:
+    """Bucket prefill lengths to multiples of 8 to bound jit recompiles."""
+    return max(8, -(-n // 8) * 8)
 
 
 class ServeEngine:
     def __init__(self, model: Model, params, *, slots: int, max_len: int,
                  abft: ABFTConfig = ABFTConfig(), dtype=jnp.bfloat16,
-                 greedy: bool = True, hints=None):
+                 greedy: bool = True, hints=None,
+                 policy: RecoveryPolicy = RecoveryPolicy()):
+        assert slots >= 1
         self.model = model
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.abft = abft
         self.ctx = LayerCtx(abft=abft, hints=hints)
+        self.policy = policy
         self.stats = EngineStats()
         self.cache = model.init_cache(slots, max_len, dtype=dtype)
         self.pos = np.zeros((slots,), np.int32)      # per-slot write cursor
         self.active: dict = {}                        # slot -> Request
         self.greedy = greedy
 
-        self._decode = jax.jit(
-            lambda p, tok, cache, pos, fault: model.decode(
+        def _decode_step(p, tok, cache, pos, mask, fault):
+            logits, new_cache, flag = model.decode(
                 p, tok, cache, pos,
-                dataclasses.replace(self.ctx, fault=fault)))
+                dataclasses.replace(self.ctx, fault=fault))
+            nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+            # slot-masked argmax: inactive slots never emit a token
+            nxt = jnp.where(mask, nxt, jnp.int32(-1))
+            return nxt, new_cache, flag
+
+        def _prefill_step(p, toks, cache, slot_ids, lengths, fault):
+            logits, new_cache, flag = model.prefill(
+                p, {"tokens": toks}, cache,
+                dataclasses.replace(self.ctx, fault=fault),
+                slots=slot_ids, lengths=lengths)
+            first = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+            return first, new_cache, flag
+
+        self._decode = jax.jit(_decode_step)
+        self._prefill = jax.jit(_prefill_step)
 
     # ------------------------------------------------------------ admission
     def free_slots(self) -> list:
         return [s for s in range(self.slots) if s not in self.active]
 
-    def admit(self, req: Request) -> bool:
-        """Prefill is executed per request (single-slot batch) and written
-        into the slot's cache rows.  Returns False when full."""
+    def admit(self, pending: list, fault: ModelFault | None = None,
+              fault_uid: int | None = None) -> int:
+        """Batched admission (see module docstring).  Consumes up to
+        ``len(free_slots())`` requests from the front of ``pending`` and
+        returns how many were consumed — every consumed request ends up
+        active, done, or evicted with ``error`` set, so the caller always
+        progresses.  ``fault``/``fault_uid``: campaign injection applied
+        only when the targeted request actually reaches prefill."""
         free = self.free_slots()
-        if not free:
-            return False
-        slot = free[0]
-        L = len(req.prompt)
-        # per-request prefill on a 1-deep batch, then splice into the slot
-        tmp_cache = self.model.init_cache(1, self.max_len,
-                                          dtype=jnp.bfloat16)
-        batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
-        logits, tmp_cache, flag = self.model.prefill(
-            self.params, batch, tmp_cache, self.ctx)
+        batch = pending[:min(len(free), len(pending))]
+        if not batch:
+            return 0
+
+        admitted = []
+        for req in batch:
+            if req.max_new_tokens <= 0:
+                req.done = True              # zero budget: nothing to do
+            # the prompt plus the decode budget must fit in the cache rows
+            elif len(req.prompt) + max(req.max_new_tokens - 1, 0) > \
+                    self.max_len:
+                req.error = "prompt_too_long"
+                req.done = True
+                self.stats.evictions += 1
+            else:
+                admitted.append(req)
+        if not admitted:
+            return len(batch)
+        if fault is not None and fault_uid is not None and not any(
+                r.uid == fault_uid for r in admitted):
+            fault = None    # campaign target never reached prefill
+
+        slot_ids = np.asarray(free[:len(admitted)], np.int32)
+        lengths = np.asarray([len(r.prompt) for r in admitted], np.int32)
+        # admissible prompts always fit (budget check above), so clamping
+        # the bucketed pad to max_len keeps the scatter in bounds
+        Lpad = min(_pad_len(int(lengths.max())), self.max_len)
+        toks = np.zeros((len(admitted), Lpad), np.int32)
+        for i, r in enumerate(admitted):
+            toks[i, : len(r.prompt)] = r.prompt
+
+        args = (self.params, jnp.asarray(toks), jnp.asarray(slot_ids),
+                jnp.asarray(lengths))
+        prev_cache = self.cache        # pre-admission state, kept for retry
+        f = fault if fault is not None else ModelFault.none()
+        first, new_cache, flag = self._prefill(
+            args[0], args[1], prev_cache, args[2], args[3], f)
         if bool(flag):
             self.stats.faults_detected += 1
-            # retry once
-            logits, tmp_cache, flag = self.model.prefill(
-                self.params, batch, tmp_cache, self.ctx)
-            self.stats.retries += 1
+            for _ in range(self.policy.max_retries):
+                self.stats.retries += 1
+                # clean retry from the PRE-admission cache — never from the
+                # possibly-corrupted attempt (mirrors decode's prev_cache)
+                first, new_cache, flag = self._prefill(
+                    args[0], args[1], prev_cache, args[2], args[3],
+                    ModelFault.none())
+                if not bool(flag):
+                    break
             if bool(flag):
+                # persistent fault: evict the admission batch with recorded
+                # errors instead of retrying it forever (livelock fix)
                 self.stats.hard_faults += 1
-                return False
-        self.cache = _splice_cache(self.cache, tmp_cache, slot)
-        self.pos[slot] = L
-        first = int(jnp.argmax(logits[0, -1]))
-        req.generated.append(first)
-        self.active[slot] = req
-        return True
+                for r in admitted:
+                    r.error = "hard_fault:prefill"
+                    r.done = True
+                    self.stats.evictions += 1
+                return len(batch)
+
+        self.cache = new_cache
+        first = np.asarray(first)
+        for i, (slot, req) in enumerate(zip(slot_ids, admitted)):
+            req.generated.append(int(first[i]))
+            self.stats.tokens += 1
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True             # budget met at prefill: the
+                continue                    # request never occupies a slot
+            self.active[int(slot)] = req
+            self.pos[int(slot)] = int(lengths[i])
+        return len(batch)
 
     # ------------------------------------------------------------ decoding
     def step(self, fault: ModelFault | None = None) -> dict:
@@ -106,35 +228,51 @@ class ServeEngine:
         if not self.active:
             return {}
         toks = np.zeros((self.slots, 1), np.int32)
+        mask = np.zeros((self.slots,), bool)
         for s, req in self.active.items():
             toks[s, 0] = req.generated[-1]
-        pos = int(max(self.pos[s] for s in self.active))
+            mask[s] = True
+        pos = jnp.asarray(self.pos)            # (slots,) vectorized cursor
         f = fault if fault is not None else ModelFault.none()
 
         prev_cache = self.cache
-        logits, new_cache, flag = self._decode(
-            self.params, jnp.asarray(toks), self.cache,
-            jnp.asarray(pos, jnp.int32), f)
+        nxt, new_cache, flag = self._decode(
+            self.params, jnp.asarray(toks), prev_cache, pos,
+            jnp.asarray(mask), f)
         self.stats.steps += 1
         if bool(flag):
             # ABFT detection -> recompute from pre-step state (clean run)
             self.stats.faults_detected += 1
-            self.stats.retries += 1
-            logits, new_cache, flag = self._decode(
-                self.params, jnp.asarray(toks), prev_cache,
-                jnp.asarray(pos, jnp.int32), ModelFault.none())
+            for _ in range(self.policy.max_retries):
+                self.stats.retries += 1
+                nxt, new_cache, flag = self._decode(
+                    self.params, jnp.asarray(toks), prev_cache, pos,
+                    jnp.asarray(mask), ModelFault.none())
+                if not bool(flag):
+                    break
             if bool(flag):
                 self.stats.hard_faults += 1
-                raise RuntimeError("persistent fault after retry")
+                if not self.policy.evict_on_hard_fault:
+                    raise RuntimeError("persistent fault after retry")
+                # the flag is step-global: every in-flight request may be
+                # corrupted, so evict them all with recorded errors and
+                # keep the engine alive for subsequent admissions
+                for s, req in list(self.active.items()):
+                    req.error = "hard_fault:decode"
+                    req.done = True
+                    self.stats.evictions += 1
+                    del self.active[s]
+                    self.pos[s] = 0
+                return {}
         self.cache = new_cache
 
         out = {}
-        next_tok = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        nxt = np.asarray(nxt)
         finished = []
         for s, req in list(self.active.items()):
-            t = int(next_tok[s])
+            t = int(nxt[s])
             req.generated.append(t)
-            self.pos[s] = pos + 1
+            self.pos[s] += 1
             out[req.uid] = t
             self.stats.tokens += 1
             if len(req.generated) >= req.max_new_tokens:
@@ -142,17 +280,33 @@ class ServeEngine:
                 finished.append(s)
         for s in finished:
             del self.active[s]
+            self.pos[s] = 0
         return out
 
-    def run(self, requests: list, fault_at: tuple | None = None) -> dict:
+    def run(self, requests: list, fault_at: tuple | None = None,
+            admit_fault_at: tuple | None = None) -> dict:
         """Drive admission + decode to completion (continuous batching).
-        ``fault_at``: (step_idx, ModelFault) for campaign injection."""
+
+        ``fault_at``: (step_idx, ModelFault) decode-step injection;
+        ``admit_fault_at``: (uid, ModelFault) injected into the admission
+        batch that contains that request uid (campaign hooks)."""
         pending = list(requests)
         results = {}
         step_i = 0
         while pending or self.active:
-            while pending and self.admit(pending[0]):
-                pending.pop(0)
+            if pending and self.free_slots():
+                if admit_fault_at is not None:
+                    uid, afault = admit_fault_at
+                    n = self.admit(pending, fault=afault, fault_uid=uid)
+                    # consumed exactly once: only when the target actually
+                    # went through prefill (not filtered out beforehand)
+                    if any(r.uid == uid and r.error != "prompt_too_long"
+                           and r.max_new_tokens > 0
+                           for r in pending[:n]):
+                        admit_fault_at = None
+                else:
+                    n = self.admit(pending)
+                del pending[:n]
             fault = None
             if fault_at is not None and step_i == fault_at[0]:
                 fault = fault_at[1]
@@ -162,14 +316,3 @@ class ServeEngine:
                 if req.done and req.uid not in results:
                     results[req.uid] = req.generated
         return results
-
-
-def _splice_cache(dst, src, slot: int):
-    """Write a 1-deep cache into row ``slot`` of the engine cache.  Handles
-    both (reps, B, ...) stacked leaves and mamba f32 states."""
-    def one(d, s):
-        # batch dim is axis 1 for stacked leaves (reps, B, ...)
-        return jax.lax.dynamic_update_slice_in_dim(
-            d, s.astype(d.dtype), slot, axis=1)
-
-    return jax.tree_util.tree_map(one, dst, src)

@@ -90,3 +90,43 @@ def test_padded_lengths(rng):
         np.asarray(o), np.asarray(ref), rtol=2e-4, atol=2e-4)
     assert o.shape == (1, 40, 2, 16)
     assert not bool(chk.flag)
+
+
+# ---------------------------------------------------------------- decode
+
+def test_flash_decode_matches_decode_attention_ragged(rng):
+    """The decode entry accepts a per-row length vector: each batch row
+    attends only its own valid cache prefix (the serving engine's
+    vectorized cursor contract)."""
+    from repro.kernels.flash_ops import flash_decode
+    from repro.models.layers import decode_attention
+
+    B, S, H, KV, D = 3, 40, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, 1, H, D)), F32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, D)), F32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, D)), F32)
+    lengths = jnp.asarray([7, 40, 21], jnp.int32)
+    out, chk = flash_decode(q, k, v, lengths, bk=16)
+    ref = decode_attention(q, k, v, lengths)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+    assert not bool(chk.flag)
+
+    # changing one row's length must change ONLY that row's output
+    out2, _ = flash_decode(q, k, v, lengths.at[0].set(3), bk=16)
+    assert not np.allclose(np.asarray(out2[0]), np.asarray(out[0]))
+    np.testing.assert_array_equal(np.asarray(out2[1:]), np.asarray(out[1:]))
+
+
+def test_flash_decode_scalar_length_broadcasts(rng):
+    from repro.kernels.flash_ops import flash_decode
+    from repro.models.layers import decode_attention
+
+    q = jnp.asarray(rng.standard_normal((2, 1, 2, 16)), F32)
+    k = jnp.asarray(rng.standard_normal((2, 24, 2, 16)), F32)
+    v = jnp.asarray(rng.standard_normal((2, 24, 2, 16)), F32)
+    out, chk = flash_decode(q, k, v, jnp.asarray(13, jnp.int32), bk=8)
+    ref = decode_attention(q, k, v, jnp.asarray(13, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+    assert not bool(chk.flag)

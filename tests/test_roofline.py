@@ -43,7 +43,10 @@ def compile_scan(L, m, k, n, nested):
             NamedSharding(mesh, P("data", None)),
             NamedSharding(mesh, P(None, None, "model")),
         )).lower(x, ws).compile()
-    return {"hlo": c.as_text(), "xla_flops": c.cost_analysis()["flops"]}
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # older jax: one entry per device
+        ca = ca[0]
+    return {"hlo": c.as_text(), "xla_flops": ca["flops"]}
 
 out = {
     "flat": compile_scan(5, 32, 64, 64, 0),
