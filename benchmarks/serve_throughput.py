@@ -1,0 +1,175 @@
+"""Serving throughput sweep: tokens/s under continuous batching, over
+slots x prompt-length mix x ABFT scheme x cache kind (ROADMAP open item,
+paper §6 deployment scenario).
+
+For each cell the engine serves a fixed request set end to end and we
+report wall-clock tokens/s plus ``cache_stats()`` — the paged cells size
+their pool to the traffic's peak *working set* (not slots × max_len), so
+a skewed prompt mix shows the paged cache allocating a fraction of the
+dense bytes while producing the identical greedy token streams.
+
+  PYTHONPATH=src python benchmarks/serve_throughput.py \
+      [--quick] [--out results.json] [--slots 2,4] [--new-tokens 8]
+
+Wall-clock numbers are CPU-measured (this container); they order schemes
+by redundant-work cost, not by TPU speed — see benchmarks/common.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, scaled_down
+from repro.core import ABFTConfig, Scheme
+from repro.models import build_model
+from repro.serve.engine import EngineStats, Request, ServeEngine
+from repro.serve.paged_cache import blocks_for
+
+SCHEMES = {
+    # none: protection off; traditional: one global checksum for every
+    # layer (Hari et al.); guided: the paper's intensity-guided selector
+    "none": ABFTConfig.off(),
+    "traditional": ABFTConfig(scheme=Scheme.GLOBAL, use_pallas=False),
+    "intensity_guided": ABFTConfig(scheme=Scheme.AUTO, use_pallas=False),
+}
+
+MIXES = {
+    # (length, weight) pairs; lengths are fractions of max_len
+    "uniform_short": [(0.15, 1.0)],
+    "skewed": [(0.08, 3.0), (0.75, 1.0)],   # mostly short + one long tail
+}
+
+
+def _requests(mix, n: int, max_len: int, new_tokens: int) -> list:
+    fracs, weights = zip(*mix)
+    w = np.asarray(weights) / sum(weights)
+    rng = np.random.default_rng(0)
+    lens = [int(max(2, rng.choice(fracs, p=w) * max_len)) for _ in range(n)]
+    return [
+        Request(uid=i, prompt=(1 + np.arange(L, dtype=np.int32) % 250),
+                max_new_tokens=new_tokens)
+        for i, L in enumerate(lens)
+    ], lens
+
+
+def _pool_blocks(lens, slots, new_tokens, block_size) -> int:
+    """Blocks covering the peak per-slot working set of this traffic:
+    the ``slots`` largest requests resident at once, each grown to
+    prompt + decode budget."""
+    need = sorted((blocks_for(L + new_tokens, block_size) for L in lens),
+                  reverse=True)
+    return max(1, sum(need[:slots]))
+
+
+def run_cell(model, params, reqs, *, slots, max_len, abft, cache_kind,
+             num_blocks=None, block_size=16) -> dict:
+    eng = ServeEngine(
+        model, params, slots=slots, max_len=max_len, abft=abft,
+        dtype=jnp.float32, cache_kind=cache_kind, block_size=block_size,
+        num_blocks=num_blocks)
+    # warm-up pass: serve a throwaway copy of the same traffic so jit
+    # compilation (which dominates cold wall time on CPU) is excluded
+    # from the reported tokens/s; shapes repeat, so the timed run below
+    # hits the compile cache
+    eng.run([Request(uid=r.uid, prompt=r.prompt,
+                     max_new_tokens=r.max_new_tokens) for r in reqs])
+    eng.stats = EngineStats()
+    t0 = time.perf_counter()
+    results = eng.run([r for r in reqs])
+    dt = time.perf_counter() - t0
+    stats = eng.cache_stats()
+    return {
+        "tokens": eng.stats.tokens,
+        "tokens_per_s": eng.stats.tokens / dt,
+        "wall_s": dt,
+        "errors": sum(1 for r in reqs if r.error),
+        "cache_bytes": stats["bytes_total"],
+        "tokens_capacity": stats["tokens_capacity"],
+        "streams": {r.uid: r.generated for r in reqs},
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--n-layers", type=int, default=2)
+    ap.add_argument("--slots", default="2,4")
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--new-tokens", type=int, default=6)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--quick", action="store_true",
+                    help="one slot count, two schemes")
+    ap.add_argument("--out", default=None, help="write JSON here (else stdout)")
+    args = ap.parse_args(argv)
+
+    cfg = scaled_down(get_config(args.arch), n_layers=args.n_layers)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)
+
+    slot_counts = [int(s) for s in str(args.slots).split(",")]
+    schemes = dict(SCHEMES)
+    if args.quick:
+        slot_counts = slot_counts[:1]
+        schemes = {k: schemes[k] for k in ("none", "intensity_guided")}
+
+    cells = []
+    for slots in slot_counts:
+        for mix_name, mix in MIXES.items():
+            reqs_proto, lens = _requests(
+                mix, args.requests, args.max_len, args.new_tokens)
+            nb = _pool_blocks(lens, slots, args.new_tokens, args.block_size)
+            for scheme_name, abft in schemes.items():
+                row = {"slots": slots, "mix": mix_name,
+                       "scheme": scheme_name,
+                       "prompt_lens": lens}
+                streams = {}
+                for kind in ("dense", "paged"):
+                    reqs = [Request(uid=r.uid, prompt=r.prompt,
+                                    max_new_tokens=r.max_new_tokens)
+                            for r in reqs_proto]
+                    cell = run_cell(
+                        model, params, reqs, slots=slots,
+                        max_len=args.max_len, abft=abft, cache_kind=kind,
+                        block_size=args.block_size,
+                        num_blocks=nb if kind == "paged" else None)
+                    streams[kind] = cell.pop("streams")
+                    row[kind] = cell
+                row["paged_matches_dense"] = (
+                    streams["dense"] == streams["paged"])
+                row["paged_bytes_frac"] = (
+                    row["paged"]["cache_bytes"]
+                    / max(row["dense"]["cache_bytes"], 1))
+                cells.append(row)
+                print(f"slots={slots} mix={mix_name:13s} "
+                      f"scheme={scheme_name:16s} "
+                      f"dense={row['dense']['tokens_per_s']:8.1f} tok/s "
+                      f"paged={row['paged']['tokens_per_s']:8.1f} tok/s "
+                      f"bytes={row['paged_bytes_frac']:.2f}x "
+                      f"match={row['paged_matches_dense']}")
+
+    summary = {
+        "arch": args.arch, "n_layers": args.n_layers,
+        "max_len": args.max_len, "requests": args.requests,
+        "new_tokens": args.new_tokens, "block_size": args.block_size,
+        "backend": jax.default_backend(),
+        "cells": cells,
+    }
+    payload = json.dumps(summary, indent=2)
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write(payload)
+        print(f"wrote {args.out}")
+    else:
+        print(payload)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

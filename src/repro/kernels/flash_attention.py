@@ -124,18 +124,30 @@ def _kernel(
         bnd_s_ref[0, :] = bnds_ref[...]
 
 
-def _decode_kernel(
-    q_ref, k_ref, v_ref, len_ref,                  # inputs
+def _paged_decode_kernel(
+    table_ref, len_ref,                            # scalar prefetch
+    q_ref, k_ref, v_ref,                           # inputs
     o_ref, res_s_ref, bnd_s_ref, res_pv_ref, bnd_pv_ref,   # outputs
     m_ref, l_ref, acc_ref, chk_ref, bndc_ref, ress_ref, bnds_ref,  # scratch
-    *, gk: int, bk: int, scale: float,
+    *, gk: int, bs: int, gq: int, scale: float,
 ):
-    """Single-query decode tile: one q row against a length-masked KV
-    cache, K-blocks innermost, with the same two fused ABFT checks as the
-    full kernel (scores vs K-tile checksum; PV via the rescaled checksum
-    accumulator).  ``len_ref`` holds the per-row valid cache length — the
-    vectorized serving cursor lands here, so slots with different prompt
-    lengths read only their own prefix."""
+    """Paged decode tile: the block table is a scalar-prefetch operand,
+    so grid step ``j`` DMAs physical block ``table[j]`` of the KV pool
+    straight into VMEM — no gathered (B, W*block_size) copy of the cache
+    is ever materialized (the XLA reference path's ``paged_gather``).
+    The q tile carries all ``gq`` query heads of ONE kv head (GQA
+    grouping), so the pool is shared rather than head-replicated.
+
+    Masking runs in LOGICAL coordinates (``j * block_size + offset``)
+    against ``len_ref``, and — unlike the dense cache, which is zero
+    beyond the row's length — invalid positions here may hold ALIEN data
+    (sentinel tails clamped by the wrapper point at other requests'
+    blocks; reused blocks keep stale KV).  Both ABFT score-check sides
+    (checksum, residual, bound) are therefore restricted to the valid
+    columns: the invalid columns' scores are discarded before softmax
+    anyway, and letting alien magnitudes into the bound would inflate
+    the detection threshold and mask real faults.  The PV check needs no
+    extra masking (p == 0 at invalid columns)."""
     ki = pl.program_id(0)
 
     @pl.when(ki == 0)
@@ -148,9 +160,9 @@ def _decode_kernel(
         ress_ref[...] = jnp.zeros_like(ress_ref)
         bnds_ref[...] = jnp.zeros_like(bnds_ref)
 
-    q = q_ref[...]                                 # (1, d)
-    k = k_ref[...]                                 # (bk, d)
-    v = v_ref[...]                                 # (bk, dv)
+    q = q_ref[...]                                 # (gq, d)
+    k = k_ref[0]                                   # (bs, d)  one pool block
+    v = v_ref[0]                                   # (bs, dv)
     qf = q.astype(F32)
     kf = k.astype(F32)
     vf = v.astype(F32)
@@ -158,18 +170,20 @@ def _decode_kernel(
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=F32) * scale
 
-    # ABFT check #1 on the unmasked scores (masking is not part of the GEMM)
-    k_sum = jnp.sum(kf, axis=0)
-    k_abs = jnp.sum(jnp.abs(kf), axis=0)
+    # validity in logical token coordinates (see docstring)
+    k_pos = ki * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    vmask = (k_pos < len_ref[0]).astype(F32)       # (1, bs)
+
+    # ABFT check #1, restricted to the valid key columns
+    k_sum = jnp.sum(kf * vmask.T, axis=0)
+    k_abs = jnp.sum(jnp.abs(kf) * vmask.T, axis=0)
     chk_s = jnp.sum(qf * k_sum[None, :], axis=1) * scale
     bnd_s = jnp.sum(jnp.abs(qf) * k_abs[None, :], axis=1) * abs(scale)
-    res_here = jnp.abs(chk_s - jnp.sum(s, axis=1))
+    res_here = jnp.abs(chk_s - jnp.sum(s * vmask, axis=1))
     ress_ref[...] = jnp.maximum(ress_ref[...], res_here)
     bnds_ref[...] = jnp.maximum(bnds_ref[...], bnd_s)
 
-    # per-row length mask: only the slot's own valid prefix participates
-    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
-    s = jnp.where(k_pos < len_ref[0], s, NEG_INF)
+    s = jnp.where(vmask > 0, s, NEG_INF)
 
     m_new = jnp.maximum(m_ref[...], jnp.max(s, axis=1))
     p = jnp.exp(s - m_new[:, None])
@@ -197,6 +211,74 @@ def _decode_kernel(
         bnd_s_ref[...] = bnds_ref[...]
 
 
+def flash_decode_paged_kernel(
+    q: jnp.ndarray,
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    table: jnp.ndarray,
+    length: jnp.ndarray,
+    *,
+    scale: float | None = None,
+    out_dtype=None,
+    interpret: bool = True,
+):
+    """Fused-ABFT paged decode attention for one kv head.
+
+    q: (gq, d) — the ``gq`` query heads sharing this kv head (GQA
+    grouping keeps the pool un-replicated); k_pool: (NB, BS, d);
+    v_pool: (NB, BS, dv) — the physical block pools; table: (W,) int32
+    physical block ids for this row (tail entries must be clamped to a
+    valid id — they are masked by ``length``); length: (1,) int32 valid
+    logical cache length.
+    Returns (o (gq, dv), res_s, bnd_s, res_pv, bnd_pv), checks of shape
+    (gq,).
+    """
+    gq, d = q.shape
+    NB, BS, dv = v_pool.shape
+    W = table.shape[0]
+    scale = scale if scale is not None else d ** -0.5
+    out_dtype = out_dtype or q.dtype
+
+    kernel = functools.partial(_paged_decode_kernel, gk=W, bs=BS, gq=gq,
+                               scale=scale)
+    vec_spec = pl.BlockSpec((gq,), lambda j, t, ln: (0,))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(W,),
+        in_specs=[
+            pl.BlockSpec((gq, d), lambda j, t, ln: (0, 0)),
+            pl.BlockSpec((1, BS, d), lambda j, t, ln: (t[j], 0, 0)),
+            pl.BlockSpec((1, BS, dv), lambda j, t, ln: (t[j], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((gq, dv), lambda j, t, ln: (0, 0)),
+            vec_spec, vec_spec, vec_spec, vec_spec,
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((gq,), F32),       # m
+            pltpu.VMEM((gq,), F32),       # l
+            pltpu.VMEM((gq, dv), F32),    # acc
+            pltpu.VMEM((gq,), F32),       # pv checksum
+            pltpu.VMEM((gq,), F32),       # pv bound
+            pltpu.VMEM((gq,), F32),       # scores residual (max over k)
+            pltpu.VMEM((gq,), F32),       # scores bound
+        ],
+    )
+    o, rs, bs_, rp, bp = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((gq, dv), out_dtype),
+            jax.ShapeDtypeStruct((gq,), F32),
+            jax.ShapeDtypeStruct((gq,), F32),
+            jax.ShapeDtypeStruct((gq,), F32),
+            jax.ShapeDtypeStruct((gq,), F32),
+        ],
+        interpret=interpret,
+    )(table, length, q, k_pool, v_pool)
+    return o, rs, bs_, rp, bp
+
+
 def flash_decode_kernel(
     q: jnp.ndarray,
     k: jnp.ndarray,
@@ -208,7 +290,10 @@ def flash_decode_kernel(
     out_dtype=None,
     interpret: bool = True,
 ):
-    """Single-head fused-ABFT decode attention.
+    """Single-head fused-ABFT decode attention against a CONTIGUOUS
+    cache row — the degenerate paged problem with the identity block
+    table, so one kernel body serves both layouts (a dense row is a pool
+    whose s-th block is block s).
 
     q: (1, d); k: (S, d); v: (S, dv) — S padded to a bk multiple;
     length: (1,) int32 valid cache length for this row.
@@ -219,43 +304,10 @@ def flash_decode_kernel(
     S, dv = v.shape
     assert S % bk == 0, (S, bk)
     gk = S // bk
-    scale = scale if scale is not None else d ** -0.5
-    out_dtype = out_dtype or q.dtype
-
-    kernel = functools.partial(_decode_kernel, gk=gk, bk=bk, scale=scale)
-    vec_spec = pl.BlockSpec((1,), lambda j: (0,))
-    o, rs, bs, rp, bp = pl.pallas_call(
-        kernel,
-        grid=(gk,),
-        in_specs=[
-            pl.BlockSpec((1, d), lambda j: (0, 0)),
-            pl.BlockSpec((bk, d), lambda j: (j, 0)),
-            pl.BlockSpec((bk, dv), lambda j: (j, 0)),
-            pl.BlockSpec((1,), lambda j: (0,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, dv), lambda j: (0, 0)),
-            vec_spec, vec_spec, vec_spec, vec_spec,
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((1, dv), out_dtype),
-            jax.ShapeDtypeStruct((1,), F32),
-            jax.ShapeDtypeStruct((1,), F32),
-            jax.ShapeDtypeStruct((1,), F32),
-            jax.ShapeDtypeStruct((1,), F32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((1,), F32),        # m
-            pltpu.VMEM((1,), F32),        # l
-            pltpu.VMEM((1, dv), F32),     # acc
-            pltpu.VMEM((1,), F32),        # pv checksum
-            pltpu.VMEM((1,), F32),        # pv bound
-            pltpu.VMEM((1,), F32),        # scores residual (max over k)
-            pltpu.VMEM((1,), F32),        # scores bound
-        ],
-        interpret=interpret,
-    )(q, k, v, length)
-    return o, rs, bs, rp, bp
+    return flash_decode_paged_kernel(
+        q, k.reshape(gk, bk, d), v.reshape(gk, bk, dv),
+        jnp.arange(gk, dtype=jnp.int32), length,
+        scale=scale, out_dtype=out_dtype, interpret=interpret)
 
 
 def flash_attention_kernel(

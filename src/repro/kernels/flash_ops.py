@@ -11,11 +11,25 @@ from repro.kernels.flash_attention import (
     F32,
     flash_attention_kernel,
     flash_decode_kernel,
+    flash_decode_paged_kernel,
 )
 
 
 def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
+
+
+def _attn_check(rs, bs, rp, bp, d: int, s: int,
+                c_factor: float) -> CheckResult:
+    """Fold the per-tile residual/bound vectors of both attention GEMMs
+    (scores: reduction depth ``d``; PV: reduction depth ``s``) into one
+    CheckResult — shared by every flash entry point."""
+    tau_s = ATOL + tolerance_scale(d, c=c_factor) * bs
+    tau_pv = ATOL + tolerance_scale(s, c=c_factor) * bp
+    flag = jnp.logical_or(flag_from(rs, tau_s), flag_from(rp, tau_pv))
+    residual = jnp.stack([jnp.max(rs), jnp.max(rp)])
+    threshold = jnp.stack([jnp.min(tau_s), jnp.min(tau_pv)])
+    return CheckResult(flag=flag, residual=residual, threshold=threshold)
 
 
 def flash_attention(
@@ -80,12 +94,7 @@ def flash_attention(
         jnp.moveaxis(vp, 2, 1))
     o = jnp.moveaxis(o, 1, 2)[:, :Lq]
 
-    tau_s = ATOL + tolerance_scale(D, c=c_factor) * bs
-    tau_pv = ATOL + tolerance_scale(k.shape[1], c=c_factor) * bp
-    flag = jnp.logical_or(flag_from(rs, tau_s), flag_from(rp, tau_pv))
-    residual = jnp.stack([jnp.max(rs), jnp.max(rp)])
-    threshold = jnp.stack([jnp.min(tau_s), jnp.min(tau_pv)])
-    return o, CheckResult(flag=flag, residual=residual, threshold=threshold)
+    return o, _attn_check(rs, bs, rp, bp, D, k.shape[1], c_factor)
 
 
 def flash_decode(
@@ -134,10 +143,60 @@ def flash_decode(
         jnp.moveaxis(vp, 2, 1), lengths)
     out = jnp.moveaxis(o, 1, 2)                            # (B, 1, H, Dv)
 
-    tau_s = ATOL + tolerance_scale(D, c=c_factor) * bs
-    tau_pv = ATOL + tolerance_scale(S, c=c_factor) * bp
-    flag = jnp.logical_or(flag_from(rs, tau_s), flag_from(rp, tau_pv))
-    residual = jnp.stack([jnp.max(rs), jnp.max(rp)])
-    threshold = jnp.stack([jnp.min(tau_s), jnp.min(tau_pv)])
-    return out, CheckResult(flag=flag, residual=residual,
-                            threshold=threshold)
+    return out, _attn_check(rs, bs, rp, bp, D, S, c_factor)
+
+
+def flash_decode_paged(
+    q: jnp.ndarray,
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    interpret: bool | None = None,
+    c_factor: float = 16.0,
+):
+    """Fused-ABFT decode attention against a PAGED KV cache.
+
+    q: (B, 1, H, D); k_pool/v_pool: (NB, BS, KV, D[v]) physical block
+    pools shared by all rows (serve/paged_cache.py layout);
+    block_tables: (B, W) int32 per-row physical block ids (sentinel-
+    padded tails are clamped here — the per-row ``lengths`` mask makes
+    their contribution exactly zero); lengths: (B,) valid logical cache
+    lengths (the engine's vectorized cursor + 1).  The kernel takes the
+    table as a scalar-prefetch index operand, so each grid step DMAs one
+    physical block — the pool is never gathered to a dense copy, and GQA
+    query heads are grouped per kv head (q tile (G, D)) so the pool is
+    never head-replicated either.
+    Returns (out (B, 1, H, Dv), CheckResult) covering both attention
+    GEMMs.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, _, H, D = q.shape
+    NB, BS, KV, Dv = v_pool.shape
+    W = block_tables.shape[1]
+    G = H // KV
+
+    tables = jnp.clip(
+        jnp.asarray(block_tables, jnp.int32), 0, NB - 1)       # (B, W)
+    lengths = jnp.broadcast_to(
+        jnp.asarray(lengths, jnp.int32), (B,))[:, None]        # (B, 1)
+    # q heads are stored kv-major (kv, group): group them per kv head so
+    # every kernel call shares one un-copied pool slice
+    qg = q[:, 0].reshape(B, KV, G, D)
+
+    def one_kv_head(qk, kh, vh, tb, ln):
+        return flash_decode_paged_kernel(
+            qk, kh, vh, tb, ln, interpret=interpret, out_dtype=q.dtype)
+
+    # vmap batch (tables/lengths per-row, pools shared), then kv heads
+    # (pool slice per kv head, table shared)
+    f = jax.vmap(jax.vmap(one_kv_head, in_axes=(0, 0, 0, None, None)),
+                 in_axes=(0, None, None, 0, 0))
+    o, rs, bs, rp, bp = f(
+        qg, jnp.moveaxis(k_pool, 2, 0), jnp.moveaxis(v_pool, 2, 0),
+        tables, lengths)
+    out = o.reshape(B, 1, H, Dv)             # (B, KV, G, Dv), kv-major
+
+    return out, _attn_check(rs, bs, rp, bp, D, W * BS, c_factor)

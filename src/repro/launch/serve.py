@@ -37,6 +37,16 @@ def main(argv=None) -> int:
                     help="clean recomputes after an ABFT detection")
     ap.add_argument("--raise-on-hard-fault", action="store_true",
                     help="crash instead of evicting on persistent faults")
+    ap.add_argument("--cache", choices=["dense", "paged"], default="dense",
+                    help="KV-cache layout (paged: block pool + tables)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged cache block size (tokens)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="paged pool size (default: dense-equivalent)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 samples per slot")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -55,7 +65,11 @@ def main(argv=None) -> int:
         evict_on_hard_fault=not args.raise_on_hard_fault)
     engine = ServeEngine(model, params, slots=args.slots,
                          max_len=args.max_len, abft=abft,
-                         dtype=jnp.float32, policy=policy)
+                         dtype=jnp.float32, policy=policy,
+                         cache_kind=args.cache, block_size=args.block_size,
+                         num_blocks=args.num_blocks,
+                         temperature=args.temperature, top_k=args.top_k,
+                         seed=args.seed)
     rng = np.random.default_rng(0)
     reqs = [
         Request(uid=i,
@@ -81,6 +95,7 @@ def main(argv=None) -> int:
         "hard_faults": engine.stats.hard_faults,
         "evictions": engine.stats.evictions,
         "errors": {r.uid: r.error for r in reqs if r.error},
+        "cache": engine.cache_stats(),
     }))
     return 0
 

@@ -220,6 +220,56 @@ def gqa_decode(x, p, cfg: ModelConfig, ctx: LayerCtx, pos, cache):
     return out, {"k": ck, "v": cv}, or_flags(flag, f_attn, f)
 
 
+# ---------------------------------------------------------------- paged GQA
+
+def gqa_paged_prefill(x, p, cfg: ModelConfig, ctx: LayerCtx, positions,
+                      cache, tables, lengths):
+    """Paged prefill: same ragged attention as the dense continuous-
+    batching path (prompts attend only themselves), but k/v scatter into
+    the block pool at ``tables[a, t // block_size]`` instead of dense
+    engine rows.  cache k/v: (NB, BS, KV, hd); tables: (A, W)."""
+    from repro.serve.paged_cache import paged_scatter_prefill
+
+    B, L, _ = x.shape
+    q, k, v, flag = _qkv(x, p, cfg, ctx, positions)
+    out = chunked_attention(q, k, v, causal=True, lengths=lengths)
+    out = out.reshape(B, L, -1)
+    out, f = dense(out, p["wo"], ctx, "attn_out")
+    new_cache = {
+        "k": paged_scatter_prefill(cache["k"], k, tables, lengths),
+        "v": paged_scatter_prefill(cache["v"], v, tables, lengths),
+    }
+    return out, new_cache, or_flags(flag, f)
+
+
+def gqa_paged_decode(x, p, cfg: ModelConfig, ctx: LayerCtx, pos, cache,
+                     tables):
+    """Paged one-token decode: scatter the new k/v entry at
+    ``tables[b, pos[b] // block_size]``, then attend the slot's own
+    prefix — via the block-table-indexed Pallas flash kernel when the
+    policy enables it, else gather + length-masked reference attention."""
+    from repro.serve.paged_cache import paged_gather, paged_scatter_decode
+
+    B = x.shape[0]
+    pos = _vec_positions(pos, B)
+    positions = pos[:, None]
+    q, k, v, flag = _qkv(x, p, cfg, ctx, positions)
+    ck = paged_scatter_decode(cache["k"], k[:, 0], tables, pos)
+    cv = paged_scatter_decode(cache["v"], v[:, 0], tables, pos)
+    if ctx.abft.flash_attention:
+        from repro.kernels.flash_ops import flash_decode_paged
+
+        out, chk = flash_decode_paged(q, ck, cv, tables, pos + 1)
+        f_attn = chk.flag
+    else:
+        out = decode_attention(
+            q, paged_gather(ck, tables), paged_gather(cv, tables), pos + 1)
+        f_attn = jnp.zeros((), bool)
+    out = out.reshape(B, 1, -1)
+    out, f = dense(out, p["wo"], ctx, "attn_out")
+    return out, {"k": ck, "v": cv}, or_flags(flag, f_attn, f)
+
+
 def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
     hd = cfg.resolved_head_dim
     _, KVp = eff_counts(cfg)
@@ -381,6 +431,43 @@ def mla_decode(x, p, cfg: ModelConfig, ctx: LayerCtx, pos, cache):
     lat = _row_scatter(cache["latent"], latent_new, pos)
     out, f3 = _mla_attend(
         q_full, scale, lat, p, cfg, ctx, B, 1, decode_len=pos + 1)
+    return out, {"latent": lat}, or_flags(f1, f2, f3)
+
+
+def mla_paged_prefill(x, p, cfg: ModelConfig, ctx: LayerCtx, positions,
+                      cache, tables, lengths):
+    """Paged MLA prefill: latent rows scatter into the (NB, BS, c+dr)
+    pool via the admission batch's block tables."""
+    from repro.serve.paged_cache import paged_scatter_prefill
+
+    B, L, _ = x.shape
+    q_full, scale, f1 = _mla_q(x, p, cfg, ctx, positions)
+    c_kv, k_pe, f2 = _mla_latent_kv(x, p, cfg, ctx, positions)
+    latent = jnp.concatenate([c_kv, k_pe], axis=-1)
+    out, f3 = _mla_attend(
+        q_full, scale, latent, p, cfg, ctx, B, L, lengths=lengths)
+    new_latent = paged_scatter_prefill(
+        cache["latent"], latent, tables, lengths)
+    return out, {"latent": new_latent}, or_flags(f1, f2, f3)
+
+
+def mla_paged_decode(x, p, cfg: ModelConfig, ctx: LayerCtx, pos, cache,
+                     tables):
+    """Paged MLA decode: scatter the new latent at the cursor's block,
+    gather the slot's blocks, attend with per-row length masking."""
+    from repro.serve.paged_cache import paged_gather, paged_scatter_decode
+
+    B = x.shape[0]
+    pos = _vec_positions(pos, B)
+    positions = pos[:, None]
+    q_full, scale, f1 = _mla_q(x, p, cfg, ctx, positions)
+    c_kv, k_pe, f2 = _mla_latent_kv(x, p, cfg, ctx, positions)
+    latent_new = jnp.concatenate([c_kv, k_pe], axis=-1)  # (B, 1, c+dr)
+    lat = paged_scatter_decode(cache["latent"], latent_new[:, 0], tables,
+                               pos)
+    out, f3 = _mla_attend(
+        q_full, scale, paged_gather(lat, tables), p, cfg, ctx, B, 1,
+        decode_len=pos + 1)
     return out, {"latent": lat}, or_flags(f1, f2, f3)
 
 

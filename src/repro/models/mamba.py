@@ -166,7 +166,12 @@ def mamba_prefill(x, p, cfg: ModelConfig, ctx: LayerCtx, cache,
     batch (A, L, D) padded to a common L.  Padded positions are masked out
     of the recurrence (dt := 0 there, so the state neither decays nor
     accumulates past lengths[b]); the conv window is taken per-row at the
-    true prompt end; states scatter into engine cache rows ``slots``."""
+    true prompt end; states scatter into engine cache rows ``slots``.
+
+    Paged engines (serve/paged_cache.py) use this same path: mamba state
+    is constant-size per request — one implicit permanently-resident
+    block per slot — so there is nothing to page and no block table to
+    consult."""
     Bsz, L, _ = x.shape
     H, P, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
     W = cfg.ssm_conv_width
@@ -230,7 +235,9 @@ def _conv_step(state, new, w, b):
 
 
 def mamba_decode(x, p, cfg: ModelConfig, ctx: LayerCtx, cache):
-    """One-token recurrent step.  x: (B, 1, D)."""
+    """One-token recurrent step.  x: (B, 1, D).  Serves the dense AND
+    paged engines alike (per-slot constant-size state; see
+    mamba_prefill)."""
     Bsz = x.shape[0]
     H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
     z, xs, Bm, Cm, dt, f1 = _project_in(x, p, cfg, ctx)

@@ -122,6 +122,16 @@ def init_layer(cfg: ModelConfig, tag: str, key, dtype) -> dict:
     return p
 
 
+def init_cross_cache(cfg: ModelConfig, batch: int, mem_len: int, dtype):
+    """Cross-attention K/V cache: per-slot, fixed mem_len (encoder/vision
+    memory never grows, so it is identical under dense and paged KV)."""
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, mem_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, mem_len, cfg.n_kv_heads, hd), dtype),
+    }
+
+
 def init_layer_cache(cfg: ModelConfig, tag: str, batch: int, max_len: int,
                      mem_len: int, dtype) -> dict:
     mixer, _, cross = tag.split(":")
@@ -133,11 +143,7 @@ def init_layer_cache(cfg: ModelConfig, tag: str, batch: int, max_len: int,
     elif mixer == "mamba":
         c["attn"] = mb.init_mamba_cache(cfg, batch, dtype)
     if cross == "1":
-        hd = cfg.resolved_head_dim
-        c["cross"] = {
-            "k": jnp.zeros((batch, mem_len, cfg.n_kv_heads, hd), dtype),
-            "v": jnp.zeros((batch, mem_len, cfg.n_kv_heads, hd), dtype),
-        }
+        c["cross"] = init_cross_cache(cfg, batch, mem_len, dtype)
     return c
 
 
@@ -146,12 +152,15 @@ def init_layer_cache(cfg: ModelConfig, tag: str, batch: int, max_len: int,
 def apply_layer(
     x, lp, tag: str, cfg: ModelConfig, ctx: LayerCtx, positions,
     mode: str, cache, pos, mem, causal: bool = True,
-    slots=None, lengths=None,
+    slots=None, lengths=None, tables=None,
 ):
     """One transformer/mamba layer.  mode: full | prefill | decode.
     ``pos`` (decode): scalar or (B,) per-slot cursor vector.
     ``slots``/``lengths`` (prefill): scatter targets + ragged valid lengths
     for continuous-batching admission into an engine-deep cache.
+    ``tables``: (B, W) block tables — selects the PAGED cache paths, where
+    attention KV lives in a (num_blocks, block_size, ...) pool shared
+    across slots (serve/paged_cache.py) while mamba state stays per-slot.
     Returns (x, new_cache, flag, aux)."""
     mixer, ffn, cross = tag.split(":")
     flags = []
@@ -161,21 +170,39 @@ def apply_layer(
     h = norm(x, lp["mixer_norm"], cfg.norm, cfg.norm_eps)
     if mixer in ("attn", "mla"):
         fwd = attn.gqa_forward if mixer == "attn" else attn.mla_forward
-        pre = attn.gqa_prefill if mixer == "attn" else attn.mla_prefill
-        dec = attn.gqa_decode if mixer == "attn" else attn.mla_decode
+        if tables is not None:
+            pre = (attn.gqa_paged_prefill if mixer == "attn"
+                   else attn.mla_paged_prefill)
+            dec = (attn.gqa_paged_decode if mixer == "attn"
+                   else attn.mla_paged_decode)
+        else:
+            pre = attn.gqa_prefill if mixer == "attn" else attn.mla_prefill
+            dec = attn.gqa_decode if mixer == "attn" else attn.mla_decode
         if mode == "full":
             if mixer == "attn":
                 a, f = fwd(h, lp["mixer"], cfg, ctx, positions, causal=causal)
             else:
                 a, f = fwd(h, lp["mixer"], cfg, ctx, positions)
         elif mode == "prefill":
-            a, nc, f = pre(h, lp["mixer"], cfg, ctx, positions, cache["attn"],
-                           slots=slots, lengths=lengths)
+            if tables is not None:
+                a, nc, f = pre(h, lp["mixer"], cfg, ctx, positions,
+                               cache["attn"], tables, lengths)
+            else:
+                a, nc, f = pre(h, lp["mixer"], cfg, ctx, positions,
+                               cache["attn"], slots=slots, lengths=lengths)
             new_cache["attn"] = nc
         else:
-            a, nc, f = dec(h, lp["mixer"], cfg, ctx, pos, cache["attn"])
+            if tables is not None:
+                a, nc, f = dec(h, lp["mixer"], cfg, ctx, pos, cache["attn"],
+                               tables)
+            else:
+                a, nc, f = dec(h, lp["mixer"], cfg, ctx, pos, cache["attn"])
             new_cache["attn"] = nc
-    else:  # mamba
+    else:
+        # mamba state is constant-size per request (conv window + SSD
+        # state) — one implicit permanently-resident block per slot, so
+        # the paged engine uses the same per-slot paths and the block
+        # tables are simply not forwarded
         if mode == "full":
             a, f = mb.mamba_forward(h, lp["mixer"], cfg, ctx)
         elif mode == "prefill":
@@ -231,11 +258,12 @@ def apply_layer(
 def run_stack(
     x, segments_params, plan, cfg: ModelConfig, ctx: LayerCtx, positions,
     mode: str, caches, pos, mem, causal: bool = True, remat: bool = False,
-    layer_offset: int = 0, slots=None, lengths=None,
+    layer_offset: int = 0, slots=None, lengths=None, tables=None,
 ):
     """Apply all segments.  caches: list aligned with plan (or None).
     ``pos``: decode cursor — scalar or (B,) vector; ``slots``/``lengths``
-    thread the continuous-batching prefill path (see apply_layer).
+    thread the continuous-batching prefill path and ``tables`` the paged
+    block-table path (see apply_layer).
     Returns (x, new_caches, flag, aux)."""
     flag = jnp.zeros((), bool)
     aux = jnp.zeros((), F32)
@@ -262,6 +290,7 @@ def run_stack(
                     xx, up[f"pos{q}"], tag, cfg, lctx, positions, mode,
                     uc[f"pos{q}"] if uc is not None else None, pos, mem,
                     causal=causal, slots=slots, lengths=lengths,
+                    tables=tables,
                 )
                 new_uc[f"pos{q}"] = ncq
                 fl = jnp.logical_or(fl, f)
@@ -377,25 +406,60 @@ class Model:
         return segs
 
     # -------------------------------------------------- cache
+    def _resolved_mem_len(self, mem_len: int | None) -> int:
+        cfg = self.cfg
+        return mem_len or (
+            cfg.enc_seq_len if cfg.is_encoder_decoder else cfg.n_image_tokens)
+
+    def _stack_caches(self, layer_cache_fn):
+        """Build the per-segment cache list: one layer-cache per unit
+        position, stacked over segment repeats."""
+        caches = []
+        for seg in self.plan:
+            one = {f"pos{q}": layer_cache_fn(tag)
+                   for q, tag in enumerate(seg.unit)}
+            caches.append(
+                jax.tree_util.tree_map(
+                    lambda a, _r=seg.repeats: jnp.broadcast_to(
+                        a[None], (_r,) + a.shape), one))
+        return caches
+
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
                    mem_len: int | None = None):
         cfg = self.cfg
-        mem_len = mem_len or (
-            cfg.enc_seq_len if cfg.is_encoder_decoder else cfg.n_image_tokens)
-        caches = []
-        for seg in self.plan:
-            def one(_=None, _unit=seg.unit):
-                return {
-                    f"pos{q}": init_layer_cache(
-                        cfg, tag, batch, max_len, mem_len, dtype)
-                    for q, tag in enumerate(_unit)
-                }
-            # stack over repeats
-            caches.append(
-                jax.tree_util.tree_map(
-                    lambda a: jnp.broadcast_to(
-                        a[None], (seg.repeats,) + a.shape), one()))
-        return caches
+        mem_len = self._resolved_mem_len(mem_len)
+        return self._stack_caches(
+            lambda tag: init_layer_cache(
+                cfg, tag, batch, max_len, mem_len, dtype))
+
+    def init_paged_cache(self, slots: int, num_blocks: int,
+                         block_size: int, dtype=jnp.bfloat16,
+                         mem_len: int | None = None):
+        """Paged-engine cache: attention KV lives in per-layer
+        (num_blocks, block_size, ...) pools indexed by the engine's
+        shared block tables (serve/paged_cache.py); mamba and cross-attn
+        state stay per-slot (constant-size / fixed mem_len)."""
+        from repro.serve import paged_cache as pc
+
+        cfg = self.cfg
+        mem_len = self._resolved_mem_len(mem_len)
+
+        def one_layer(tag):
+            mixer, _, cross = tag.split(":")
+            c: dict = {}
+            if mixer == "attn":
+                c["attn"] = pc.init_paged_gqa_cache(
+                    cfg, num_blocks, block_size, dtype)
+            elif mixer == "mla":
+                c["attn"] = pc.init_paged_mla_cache(
+                    cfg, num_blocks, block_size, dtype)
+            elif mixer == "mamba":
+                c["attn"] = pc.init_paged_mamba_cache(cfg, slots, dtype)
+            if cross == "1":
+                c["cross"] = init_cross_cache(cfg, slots, mem_len, dtype)
+            return c
+
+        return self._stack_caches(one_layer)
 
     # -------------------------------------------------- memory (enc / vision)
     def _memory(self, params, batch, ctx):
@@ -466,7 +530,7 @@ class Model:
 
     # -------------------------------------------------- prefill / decode
     def prefill(self, params, batch, cache, ctx: LayerCtx,
-                slots=None, lengths=None):
+                slots=None, lengths=None, block_tables=None):
         """Prefill the cache from ``batch["tokens"]`` (B, L).
 
         Default path: cache is B-deep, rows map 1:1 to the batch, logits
@@ -477,7 +541,11 @@ class Model:
         ``slots`` (A,) names the cache rows to fill and ``lengths`` (A,)
         the true prompt lengths.  Attention/SSM recurrences are masked at
         the per-row length and logits are gathered at the last *valid*
-        token of each row."""
+        token of each row.
+
+        Paged path (``block_tables`` (A, W) additionally given): the
+        cache is a block pool (init_paged_cache) and attention KV
+        scatters via the tables instead of dense rows."""
         cfg = self.cfg
         tokens = batch["tokens"]
         B, L = tokens.shape
@@ -488,7 +556,8 @@ class Model:
             x = x + sinusoid_pos(positions, cfg.d_model).astype(x.dtype)
         x, new_cache, flag, _ = run_stack(
             x, params["segments"], self.plan, cfg, ctx, positions,
-            "prefill", cache, None, mem, slots=slots, lengths=lengths)
+            "prefill", cache, None, mem, slots=slots, lengths=lengths,
+            tables=block_tables)
         x = norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
         if lengths is not None:
             last = x[jnp.arange(B), jnp.maximum(lengths - 1, 0)][:, None]
@@ -497,11 +566,14 @@ class Model:
         logits, f_head = self._head(params, last, ctx)
         return logits, new_cache, or_flags(flag, f_head, mem_flag)
 
-    def decode(self, params, token, cache, pos, ctx: LayerCtx):
+    def decode(self, params, token, cache, pos, ctx: LayerCtx,
+               block_tables=None):
         """token: (B, 1) int32; pos: scalar int32 OR (B,) int32 per-slot
         position vector.  With a vector, each batch row writes its new KV
         at its own cursor and attends its own prefix — the contract the
-        continuous-batching engine relies on for mixed-length traffic."""
+        continuous-batching engine relies on for mixed-length traffic.
+        ``block_tables`` (B, W): paged cache — each row's KV entry lands
+        at ``tables[b, pos[b] // block_size]`` in the block pool."""
         cfg = self.cfg
         B = token.shape[0]
         pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
@@ -511,7 +583,7 @@ class Model:
             x = x + sinusoid_pos(positions, cfg.d_model).astype(x.dtype)
         x, new_cache, flag, _ = run_stack(
             x, params["segments"], self.plan, cfg, ctx, None,
-            "decode", cache, pos, None)
+            "decode", cache, pos, None, tables=block_tables)
         x = norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
         logits, f_head = self._head(params, x, ctx)
         return logits, new_cache, or_flags(flag, f_head)

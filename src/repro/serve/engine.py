@@ -1,5 +1,6 @@
 """Serving engine: continuous-batched decode with ABFT detect->recompute
-recovery, built around a **vectorized per-slot position cursor**.
+recovery, built around a **vectorized per-slot position cursor** and an
+optional **paged KV cache** (block-table memory manager).
 
 The engine owns a fixed-capacity slot table (the batch dimension of the KV
 cache).  Every slot carries its own write cursor ``pos[s]``; the decode
@@ -10,6 +11,26 @@ requests with different prompt lengths share a batch without ever touching
 each other's cache rows (the seed engine collapsed cursors to a scalar
 ``max(pos)`` and corrupted exactly this case).
 
+Cache kinds
+-----------
+``cache_kind="dense"`` (default): every slot owns a dense ``(max_len,)``
+cache row — one long request makes the whole batch pay max-length memory.
+
+``cache_kind="paged"``: attention KV lives in fixed-size blocks drawn from
+a shared pool (serve/paged_cache.py).  Blocks are allocated at admission
+(prompt length only), grown one block at a time as decode crosses block
+boundaries, and returned to the free list when a request finishes or is
+evicted — including hard-fault eviction under ``RecoveryPolicy``.  Pool
+exhaustion never crashes: a request that could NEVER fit is rejected with
+``error="oom:block_pool"``; one that merely hit transient pressure
+(blocks held by in-flight requests) is deferred at the head of the queue
+until decode frees blocks; a slot whose mid-decode growth cannot be
+covered is evicted with ``error="oom:kv_blocks"``.
+Token streams are identical to the dense engine under greedy decoding
+(block-size divides max_len => identical attention shapes); the allocation
+is what changes: ``cache_stats()`` reports pool bytes ≪ slots × max_len
+when prompt lengths are skewed.
+
 Engine API
 ----------
 ``admit(pending)``
@@ -19,20 +40,25 @@ Engine API
     scatter + per-row length masking — no 1-deep temp cache or splice).
     Each consumed request is admitted, finished (``max_new_tokens`` already
     satisfied by the prefill-sampled token), or evicted with ``error`` set
-    (over-long prompt, persistent prefill fault).  Returns the number of
-    requests consumed so the caller can always make progress (no livelock
-    on a hard-faulting head request).
+    (over-long prompt, pool exhaustion, persistent prefill fault).
+    Returns the number of requests consumed so the caller can always make
+    progress (no livelock on a hard-faulting head request).
 
 ``step(fault=None)``
     One decode step for all active slots.  Tokens are chosen by a
-    slot-masked argmax inside the jitted step, so inactive slots never
-    contribute a sampled token; their cache rows are dead until the next
-    admission overwrites them.
+    slot-masked sampler inside the jitted step — greedy argmax by default,
+    or temperature/top-k sampling driven by a ``(slots,)`` per-slot PRNG
+    key vector (each slot owns an independent key stream, advanced only
+    on *accepted* steps so a fault retry resamples the same token).
 
 ``run(requests, fault_at=None, admit_fault_at=None)``
     Drives admission + decode to completion.  ``fault_at=(step, fault)``
     injects a campaign fault into one decode step; ``admit_fault_at=
     (uid, fault)`` injects into the admission batch containing that uid.
+
+``cache_stats()``
+    Cache geometry/occupancy introspection (kind, bytes, block pool
+    usage) so benchmarks and tests never poke at private pytrees.
 
 Recovery policy
 ---------------
@@ -41,11 +67,15 @@ Recovery policy
   * a detected fault re-executes the step from the pre-step cache state
     (``prev_cache`` is held until the flag is read back) up to
     ``max_retries`` times — prefill retries likewise restart from the
-    pre-admission cache, never from the possibly-corrupted attempt;
+    pre-admission cache, never from the possibly-corrupted attempt.
+    Under paging this stays sound because pool updates are functional
+    and the host block tables are mutated only *outside* the
+    attempt/retry window (alloc/growth before the step, frees after);
   * if the flag persists, the fault is *hard*: with
     ``evict_on_hard_fault`` (default) the affected requests are evicted
-    with ``error`` recorded and the engine keeps serving, otherwise a
-    ``RuntimeError`` is raised (the seed behavior).
+    with ``error`` recorded (their blocks returned to the free list) and
+    the engine keeps serving, otherwise a ``RuntimeError`` is raised
+    (the seed behavior).
 
 Token budget: ``max_new_tokens`` counts every generated token *including*
 the one sampled at prefill, so ``max_new_tokens=N`` yields exactly N new
@@ -64,6 +94,7 @@ import numpy as np
 from repro.core.protected import ABFTConfig
 from repro.models.layers import LayerCtx, ModelFault
 from repro.models.model import Model
+from repro.serve.paged_cache import BlockPool, pytree_bytes
 
 
 @dataclasses.dataclass
@@ -74,7 +105,12 @@ class Request:
                                   # prefill-sampled first token)
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
-    error: str | None = None      # set when evicted (hard fault, too long)
+    error: str | None = None      # set when evicted (hard fault, too long,
+                                  # block-pool exhaustion)
+
+
+# errors set before a request ever reaches prefill (admission screening)
+PRE_PREFILL_ERRORS = ("prompt_too_long", "oom:block_pool")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,8 +139,11 @@ def _pad_len(n: int) -> int:
 class ServeEngine:
     def __init__(self, model: Model, params, *, slots: int, max_len: int,
                  abft: ABFTConfig = ABFTConfig(), dtype=jnp.bfloat16,
-                 greedy: bool = True, hints=None,
-                 policy: RecoveryPolicy = RecoveryPolicy()):
+                 hints=None,
+                 policy: RecoveryPolicy = RecoveryPolicy(),
+                 cache_kind: str = "dense", block_size: int = 16,
+                 num_blocks: int | None = None,
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0):
         assert slots >= 1
         self.model = model
         self.params = params
@@ -114,27 +153,74 @@ class ServeEngine:
         self.ctx = LayerCtx(abft=abft, hints=hints)
         self.policy = policy
         self.stats = EngineStats()
-        self.cache = model.init_cache(slots, max_len, dtype=dtype)
         self.pos = np.zeros((slots,), np.int32)      # per-slot write cursor
         self.active: dict = {}                        # slot -> Request
-        self.greedy = greedy
+        self.cache_kind = cache_kind
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        # per-slot PRNG key vector: each slot samples from its own stream
+        self.keys = jax.random.split(jax.random.PRNGKey(seed), slots)
 
-        def _decode_step(p, tok, cache, pos, mask, fault):
+        if cache_kind == "paged":
+            width = -(-max_len // block_size)         # blocks covering max_len
+            if num_blocks is None:
+                num_blocks = slots * width            # dense-equivalent pool
+            self.pool: BlockPool | None = BlockPool(
+                num_blocks, block_size, slots, width)
+            self.cache = model.init_paged_cache(
+                slots, num_blocks, block_size, dtype=dtype)
+        elif cache_kind == "dense":
+            self.pool = None
+            self.cache = model.init_cache(slots, max_len, dtype=dtype)
+        else:
+            raise ValueError(f"unknown cache_kind {cache_kind!r}")
+
+        def _advance(keys):
+            """Split each slot key into (sample, next) — a no-op pair in
+            greedy mode so the jitted graph stays key-free."""
+            if self.temperature <= 0.0:
+                return keys, keys
+            ks = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+            return ks[:, 0], ks[:, 1]
+
+        def _sample(logits, keys):
+            """logits: (n, V) -> (n,) int32 token ids."""
+            if self.temperature <= 0.0:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            lg = logits.astype(jnp.float32) / self.temperature
+            if self.top_k > 0:
+                # clamp to the vocab: an oversized --top-k is "no cutoff",
+                # not a crash inside the jitted step
+                k = min(self.top_k, lg.shape[-1])
+                kth = jax.lax.top_k(lg, k)[0][..., -1:]
+                lg = jnp.where(lg < kth, jnp.float32(-1e30), lg)
+            return jax.vmap(jax.random.categorical)(keys, lg).astype(
+                jnp.int32)
+
+        def _decode_step(p, tok, cache, pos, mask, keys, tables, fault):
             logits, new_cache, flag = model.decode(
                 p, tok, cache, pos,
-                dataclasses.replace(self.ctx, fault=fault))
-            nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
-            # slot-masked argmax: inactive slots never emit a token
+                dataclasses.replace(self.ctx, fault=fault),
+                block_tables=tables)
+            sub, nkeys = _advance(keys)
+            nxt = _sample(logits[:, 0, :], sub)
+            # slot-masked sampling: inactive slots never emit a token,
+            # and their key streams stay untouched — a slot's sampling
+            # sequence depends only on its own accepted steps, never on
+            # unrelated engine activity
             nxt = jnp.where(mask, nxt, jnp.int32(-1))
-            return nxt, new_cache, flag
+            nkeys = jnp.where(mask[:, None], nkeys, keys)
+            return nxt, new_cache, flag, nkeys
 
-        def _prefill_step(p, toks, cache, slot_ids, lengths, fault):
+        def _prefill_step(p, toks, cache, slot_ids, lengths, keys, tables,
+                          fault):
             logits, new_cache, flag = model.prefill(
                 p, {"tokens": toks}, cache,
                 dataclasses.replace(self.ctx, fault=fault),
-                slots=slot_ids, lengths=lengths)
-            first = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
-            return first, new_cache, flag
+                slots=slot_ids, lengths=lengths, block_tables=tables)
+            sub, nkeys = _advance(keys)
+            first = _sample(logits[:, 0, :], sub)
+            return first, new_cache, flag, nkeys
 
         self._decode = jax.jit(_decode_step)
         self._prefill = jax.jit(_prefill_step)
@@ -142,6 +228,12 @@ class ServeEngine:
     # ------------------------------------------------------------ admission
     def free_slots(self) -> list:
         return [s for s in range(self.slots) if s not in self.active]
+
+    def _release(self, slot: int) -> None:
+        """Return a slot's cache memory (paged: blocks to the free list)."""
+        if self.pool is not None:
+            self.pool.free_slot(slot)
+        self.pos[slot] = 0
 
     def admit(self, pending: list, fault: ModelFault | None = None,
               fault_uid: int | None = None) -> int:
@@ -151,30 +243,59 @@ class ServeEngine:
         active, done, or evicted with ``error`` set, so the caller always
         progresses.  ``fault``/``fault_uid``: campaign injection applied
         only when the targeted request actually reaches prefill."""
+        from repro.serve.paged_cache import blocks_for
+
         free = self.free_slots()
         batch = pending[:min(len(free), len(pending))]
         if not batch:
             return 0
 
-        admitted = []
+        admitted, slot_list = [], []
+        consumed = 0
         for req in batch:
             if req.max_new_tokens <= 0:
                 req.done = True              # zero budget: nothing to do
+                consumed += 1
+                continue
             # the prompt plus the decode budget must fit in the cache rows
-            elif len(req.prompt) + max(req.max_new_tokens - 1, 0) > \
+            if len(req.prompt) + max(req.max_new_tokens - 1, 0) > \
                     self.max_len:
                 req.error = "prompt_too_long"
                 req.done = True
                 self.stats.evictions += 1
-            else:
-                admitted.append(req)
+                consumed += 1
+                continue
+            slot = free[len(slot_list)]
+            if self.pool is not None:
+                # paged admission: blocks for the prompt are claimed up
+                # front (decode growth is on-demand).  A request that can
+                # NEVER fit is rejected with a recorded error; a request
+                # that merely hit transient pressure (blocks held by
+                # in-flight requests) is DEFERRED — left at the head of
+                # ``pending`` to admit once decode frees blocks.  No
+                # livelock: deferral with an empty engine is impossible
+                # (a full free list that still cannot cover the prompt
+                # means never-fits), so something is always decoding and
+                # eventually freeing.
+                if not self.pool.try_alloc(slot, len(req.prompt)):
+                    if blocks_for(len(req.prompt), self.pool.block_size) \
+                            > self.pool.num_blocks:
+                        req.error = "oom:block_pool"
+                        req.done = True
+                        self.stats.evictions += 1
+                        consumed += 1
+                        continue
+                    break                    # transient: defer the rest
+            admitted.append(req)
+            slot_list.append(slot)
+            consumed += 1
         if not admitted:
-            return len(batch)
+            return consumed
         if fault is not None and fault_uid is not None and not any(
                 r.uid == fault_uid for r in admitted):
             fault = None    # campaign target never reached prefill
 
-        slot_ids = np.asarray(free[:len(admitted)], np.int32)
+        slot_ids = np.asarray(slot_list, np.int32)
         lengths = np.asarray([len(r.prompt) for r in admitted], np.int32)
         # admissible prompts always fit (budget check above), so clamping
         # the bucketed pad to max_len keeps the scatter in bounds
@@ -183,48 +304,67 @@ class ServeEngine:
         for i, r in enumerate(admitted):
             toks[i, : len(r.prompt)] = r.prompt
 
+        tables = (self.pool.device_tables(slot_ids)
+                  if self.pool is not None else None)
+        keys = self.keys[jnp.asarray(slot_ids)]
         args = (self.params, jnp.asarray(toks), jnp.asarray(slot_ids),
                 jnp.asarray(lengths))
         prev_cache = self.cache        # pre-admission state, kept for retry
         f = fault if fault is not None else ModelFault.none()
-        first, new_cache, flag = self._prefill(
-            args[0], args[1], prev_cache, args[2], args[3], f)
+        first, new_cache, flag, nkeys = self._prefill(
+            args[0], args[1], prev_cache, args[2], args[3], keys, tables, f)
         if bool(flag):
             self.stats.faults_detected += 1
             for _ in range(self.policy.max_retries):
                 self.stats.retries += 1
                 # clean retry from the PRE-admission cache — never from the
-                # possibly-corrupted attempt (mirrors decode's prev_cache)
-                first, new_cache, flag = self._prefill(
-                    args[0], args[1], prev_cache, args[2], args[3],
-                    ModelFault.none())
+                # possibly-corrupted attempt (mirrors decode's prev_cache);
+                # same keys, so the retry resamples the same token
+                first, new_cache, flag, nkeys = self._prefill(
+                    args[0], args[1], prev_cache, args[2], args[3], keys,
+                    tables, ModelFault.none())
                 if not bool(flag):
                     break
             if bool(flag):
                 # persistent fault: evict the admission batch with recorded
                 # errors instead of retrying it forever (livelock fix)
                 self.stats.hard_faults += 1
-                for r in admitted:
+                for slot, r in zip(slot_ids, admitted):
                     r.error = "hard_fault:prefill"
                     r.done = True
                     self.stats.evictions += 1
-                return len(batch)
+                    self._release(int(slot))
+                return consumed
 
         self.cache = new_cache
+        self.keys = self.keys.at[jnp.asarray(slot_ids)].set(nkeys)
         first = np.asarray(first)
         for i, (slot, req) in enumerate(zip(slot_ids, admitted)):
             req.generated.append(int(first[i]))
             self.stats.tokens += 1
             if len(req.generated) >= req.max_new_tokens:
                 req.done = True             # budget met at prefill: the
-                continue                    # request never occupies a slot
+                self._release(int(slot))    # request never occupies a slot
+                continue
             self.active[int(slot)] = req
             self.pos[int(slot)] = int(lengths[i])
-        return len(batch)
+        return consumed
 
     # ------------------------------------------------------------ decoding
     def step(self, fault: ModelFault | None = None) -> dict:
         """One decode step for all active slots.  Returns {uid: token}."""
+        if self.pool is not None:
+            # on-demand growth: claim the block the cursor is about to
+            # enter BEFORE the jitted step (tables must be stable across
+            # the attempt/retry window); a slot that cannot grow is
+            # evicted with a recorded error, freeing blocks for the rest
+            for s in sorted(self.active):
+                if not self.pool.try_grow(s, int(self.pos[s]) + 1):
+                    req = self.active.pop(s)
+                    req.error = "oom:kv_blocks"
+                    req.done = True
+                    self.stats.evictions += 1
+                    self._release(s)
         if not self.active:
             return {}
         toks = np.zeros((self.slots, 1), np.int32)
@@ -233,21 +373,25 @@ class ServeEngine:
             toks[s, 0] = req.generated[-1]
             mask[s] = True
         pos = jnp.asarray(self.pos)            # (slots,) vectorized cursor
+        tables = (self.pool.device_tables()
+                  if self.pool is not None else None)
         f = fault if fault is not None else ModelFault.none()
 
         prev_cache = self.cache
-        nxt, new_cache, flag = self._decode(
+        prev_keys = self.keys
+        nxt, new_cache, flag, nkeys = self._decode(
             self.params, jnp.asarray(toks), prev_cache, pos,
-            jnp.asarray(mask), f)
+            jnp.asarray(mask), prev_keys, tables, f)
         self.stats.steps += 1
         if bool(flag):
-            # ABFT detection -> recompute from pre-step state (clean run)
+            # ABFT detection -> recompute from pre-step state (clean run,
+            # same per-slot keys: the retry resamples the same token)
             self.stats.faults_detected += 1
             for _ in range(self.policy.max_retries):
                 self.stats.retries += 1
-                nxt, new_cache, flag = self._decode(
+                nxt, new_cache, flag, nkeys = self._decode(
                     self.params, jnp.asarray(toks), prev_cache, pos,
-                    jnp.asarray(mask), ModelFault.none())
+                    jnp.asarray(mask), prev_keys, tables, ModelFault.none())
                 if not bool(flag):
                     break
             if bool(flag):
@@ -262,9 +406,10 @@ class ServeEngine:
                     req.done = True
                     self.stats.evictions += 1
                     del self.active[s]
-                    self.pos[s] = 0
+                    self._release(s)
                 return {}
         self.cache = new_cache
+        self.keys = nkeys
 
         out = {}
         nxt = np.asarray(nxt)
@@ -280,7 +425,7 @@ class ServeEngine:
                 finished.append(s)
         for s in finished:
             del self.active[s]
-            self.pos[s] = 0
+            self._release(s)
         return out
 
     def run(self, requests: list, fault_at: tuple | None = None,
@@ -300,7 +445,8 @@ class ServeEngine:
                     n = self.admit(pending, fault=afault, fault_uid=uid)
                     # consumed exactly once: only when the target actually
                     # went through prefill (not filtered out beforehand)
-                    if any(r.uid == uid and r.error != "prompt_too_long"
+                    if any(r.uid == uid
+                           and r.error not in PRE_PREFILL_ERRORS
                            and r.max_new_tokens > 0
                            for r in pending[:n]):
                         admit_fault_at = None
@@ -316,3 +462,36 @@ class ServeEngine:
                 if req.done and req.uid not in results:
                     results[req.uid] = req.generated
         return results
+
+    # ------------------------------------------------------------ stats
+    def cache_stats(self) -> dict:
+        """Cache geometry + occupancy, without poking at private pytrees.
+
+        Common keys: ``kind``, ``slots``, ``max_len``, ``bytes_total``
+        (allocated cache bytes across all layers), ``tokens_capacity``
+        (cache entries the allocation can hold), ``active_tokens`` (sum
+        of live cursors) and ``utilization``.  Paged engines add
+        ``block_size`` / ``blocks_total`` / ``blocks_used`` /
+        ``blocks_free``."""
+        stats = {
+            "kind": self.cache_kind,
+            "slots": self.slots,
+            "max_len": self.max_len,
+            "bytes_total": pytree_bytes(self.cache),
+            "active_tokens": int(sum(
+                int(self.pos[s]) for s in self.active)),
+        }
+        if self.pool is not None:
+            stats.update(
+                block_size=self.pool.block_size,
+                blocks_total=self.pool.num_blocks,
+                blocks_used=self.pool.blocks_used,
+                blocks_free=self.pool.blocks_free,
+                tokens_capacity=self.pool.num_blocks
+                * self.pool.block_size,
+            )
+        else:
+            stats["tokens_capacity"] = self.slots * self.max_len
+        stats["utilization"] = (
+            stats["active_tokens"] / max(stats["tokens_capacity"], 1))
+        return stats

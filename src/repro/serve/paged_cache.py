@@ -1,0 +1,268 @@
+"""Paged KV-cache subsystem: block-table memory manager for the
+continuous-batching engine.
+
+Why paging (ISSUE 2 / ROADMAP "Paged KV cache"): the paper's deployment
+scenario (§6) is latency-sensitive serving where decode is memory-bandwidth
+bound, so KV-cache footprint directly gates batch size — and batch size is
+what the intensity-guided selector's decode-side arithmetic-intensity
+predictions key on.  With dense per-slot rows every request pays
+``max_len`` memory; with a vLLM-style block pool, long and short requests
+share a fixed set of fixed-size blocks and the sustainable slot count rises
+to what the *actual* traffic needs.
+
+Block-table layout
+------------------
+The device-side cache is a **pool**: per layer, the KV tensor's leading
+``(slots, max_len)`` dims are replaced by ``(num_blocks, block_size)``:
+
+    GQA:    k/v    (num_blocks, block_size, KV_heads, head_dim)
+    MLA:    latent (num_blocks, block_size, kv_lora + rope)
+    mamba:  conv/SSD state stays per-slot — it is O(1) per request (that
+            is the whole point of SSMs), i.e. every slot owns exactly one
+            implicit, permanently-resident block; no table indirection is
+            needed or useful.
+
+The host-side ``BlockPool`` owns the free list and one **block table per
+slot** — a row of physical block ids, padded with an out-of-range
+``SENTINEL`` (== num_blocks).  All layers share the SAME logical table;
+each layer indexes its own physical pool with it (the vLLM layout).  A
+token at logical position ``t`` of slot ``s`` lives at
+
+    pool[ table[s, t // block_size], t % block_size ]
+
+Device-side access is sentinel-safe by construction:
+
+  * scatters use ``.at[...].set(mode='drop')`` — writes routed to the
+    sentinel (padding tokens, inactive slots, freed rows) vanish;
+  * gathers use ``take(mode='fill', fill_value=0)`` — sentinel blocks read
+    as zeros and are masked by per-row lengths before the softmax, exactly
+    like dense padding.
+
+Interaction with ABFT recovery snapshots
+----------------------------------------
+The engine's detect->recompute loop snapshots the *device* cache by simply
+keeping the pre-step pytree alive (functional update).  That remains
+sufficient under paging because the pool update is functional too — a
+retry re-scatters into the held ``prev_cache`` pool.  The one new
+invariant: the **host** block tables must not change between a faulty
+attempt and its clean retry, so the engine performs all allocation /
+growth strictly *before* the jitted step and all frees strictly *after*
+the flag has been read back.  Hard-fault eviction then returns the victim
+slots' blocks to the free list; the next admission reuses them (covered by
+the free-list reuse tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+class PoolExhausted(Exception):
+    """Raised by the strict alloc API when the free list cannot cover a
+    request.  The engine uses the non-throwing ``try_*`` variants and
+    records an ``error`` on the request instead."""
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Number of blocks needed to hold ``n_tokens`` cache entries."""
+    return max(0, -(-int(n_tokens) // block_size))
+
+
+@dataclasses.dataclass
+class BlockPool:
+    """Host-side free-list allocator + per-slot block tables.
+
+    ``num_blocks`` physical blocks of ``block_size`` tokens are shared by
+    ``slots`` logical sequences.  ``table_width`` bounds the per-slot
+    logical length at ``table_width * block_size`` tokens (the engine sets
+    it to cover ``max_len``).  Freed blocks go to the head of the free
+    list (LIFO) so reuse after eviction is immediate and testable.
+    """
+
+    num_blocks: int
+    block_size: int
+    slots: int
+    table_width: int
+
+    def __post_init__(self):
+        assert self.num_blocks >= 1 and self.block_size >= 1
+        self.sentinel = self.num_blocks
+        self.reset()
+
+    # ------------------------------------------------------------ queries
+    @property
+    def blocks_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_used(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def slot_blocks(self, slot: int) -> int:
+        return int(self._used[slot])
+
+    def capacity_tokens(self, slot: int) -> int:
+        """Tokens the slot's current allocation can hold."""
+        return self.slot_blocks(slot) * self.block_size
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return blocks_for(n_tokens, self.block_size) <= self.blocks_free
+
+    # ------------------------------------------------------------ lifecycle
+    def reset(self) -> None:
+        """Drop every allocation (fresh engine / full eviction)."""
+        self._free = list(range(self.num_blocks - 1, -1, -1))
+        self._used = np.zeros((self.slots,), np.int32)
+        self.tables = np.full(
+            (self.slots, self.table_width), self.num_blocks, np.int32)
+        self.sentinel = self.num_blocks
+
+    def try_alloc(self, slot: int, n_tokens: int) -> bool:
+        """Allocate blocks so ``slot`` can hold ``n_tokens`` tokens
+        (fresh sequence: the slot must currently own no blocks).  All-or-
+        nothing: on exhaustion nothing is allocated and False returns."""
+        assert self._used[slot] == 0, f"slot {slot} already allocated"
+        return self.try_grow(slot, n_tokens)
+
+    def alloc(self, slot: int, n_tokens: int) -> None:
+        if not self.try_alloc(slot, n_tokens):
+            raise PoolExhausted(
+                f"need {blocks_for(n_tokens, self.block_size)} blocks, "
+                f"{self.blocks_free} free")
+
+    def try_grow(self, slot: int, n_tokens: int) -> bool:
+        """Ensure ``slot`` can hold ``n_tokens`` tokens, allocating the
+        delta (decode crossing a block boundary).  All-or-nothing."""
+        need = blocks_for(n_tokens, self.block_size)
+        have = int(self._used[slot])
+        if need <= have:
+            return True
+        if need > self.table_width or need - have > len(self._free):
+            return False
+        for b in range(have, need):
+            self.tables[slot, b] = self._free.pop()
+        self._used[slot] = need
+        return True
+
+    def grow(self, slot: int, n_tokens: int) -> None:
+        if not self.try_grow(slot, n_tokens):
+            raise PoolExhausted(
+                f"slot {slot}: grow to {n_tokens} tokens failed "
+                f"({self.blocks_free} blocks free)")
+
+    def free_slot(self, slot: int) -> int:
+        """Return the slot's blocks to the free list; returns the count.
+        Idempotent (freeing an empty slot is a no-op)."""
+        n = int(self._used[slot])
+        for b in range(n - 1, -1, -1):
+            self._free.append(int(self.tables[slot, b]))
+        self.tables[slot, :] = self.num_blocks
+        self._used[slot] = 0
+        return n
+
+    # ------------------------------------------------------------ device view
+    def device_tables(self, rows=None) -> jnp.ndarray:
+        """Block tables as an int32 device array — all slots, or the given
+        row indices (admission batches pass their slot ids)."""
+        t = self.tables if rows is None else self.tables[np.asarray(rows)]
+        return jnp.asarray(t, jnp.int32)
+
+
+# ================================================================ pytrees
+# Paged cache initializers, mirroring attention.init_*_cache / mamba's
+# init_mamba_cache but with the (slots, max_len) dims replaced by the
+# (num_blocks, block_size) pool.  Kept here so the subsystem owns its
+# memory layout end to end; models/model.py routes by cache kind.
+
+def init_paged_gqa_cache(cfg: ModelConfig, num_blocks: int,
+                         block_size: int, dtype) -> dict:
+    from repro.models.attention import eff_counts
+
+    hd = cfg.resolved_head_dim
+    _, KVp = eff_counts(cfg)
+    return {
+        "k": jnp.zeros((num_blocks, block_size, KVp, hd), dtype),
+        "v": jnp.zeros((num_blocks, block_size, KVp, hd), dtype),
+    }
+
+
+def init_paged_mla_cache(cfg: ModelConfig, num_blocks: int,
+                         block_size: int, dtype) -> dict:
+    return {
+        "latent": jnp.zeros(
+            (num_blocks, block_size,
+             cfg.kv_lora_rank + cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def init_paged_mamba_cache(cfg: ModelConfig, slots: int, dtype) -> dict:
+    """Mamba state under paging == dense: constant-size per slot (one
+    implicit resident block per slot; see module docstring)."""
+    from repro.models.mamba import init_mamba_cache
+
+    return init_mamba_cache(cfg, slots, dtype)
+
+
+# ================================================================ device ops
+# Sentinel-safe scatter/gather between logical (row, position) coordinates
+# and the physical pool.  Shared by the GQA and MLA paged paths.
+
+def paged_scatter_prefill(pool, new, tables, lengths):
+    """Write an admission batch into the pool.
+
+    pool: (NB, BS, ...); new: (A, L, ...) padded to a common L;
+    tables: (A, W) int32 rows (sentinel-padded); lengths: (A,) valid
+    prompt lengths.  Positions >= lengths[a] are routed to the sentinel
+    and dropped."""
+    nb, bs = pool.shape[0], pool.shape[1]
+    A, L = new.shape[0], new.shape[1]
+    t = jnp.arange(L, dtype=jnp.int32)
+    blk = jnp.take(tables, t // bs, axis=1)            # (A, L)
+    valid = t[None, :] < lengths[:, None]
+    blk = jnp.where(valid, blk, nb)                    # force-drop padding
+    off = jnp.broadcast_to(t % bs, (A, L))
+    return pool.at[blk, off].set(new.astype(pool.dtype), mode="drop")
+
+
+def paged_scatter_decode(pool, new, tables, pos):
+    """Write one new entry per slot at its own cursor.
+
+    pool: (NB, BS, ...); new: (B, ...); tables: (B, W); pos: (B,) int32.
+    Inactive/freed slots carry sentinel tables, so their writes drop —
+    no activity mask is needed (the table IS the guard)."""
+    bs = pool.shape[1]
+    B = new.shape[0]
+    blk = jnp.take_along_axis(
+        tables, (pos[:, None] // bs).astype(jnp.int32), axis=1)[:, 0]
+    off = pos % bs
+    return pool.at[blk, off].set(new.astype(pool.dtype), mode="drop")
+
+
+def paged_gather(pool, tables):
+    """Materialize per-slot contiguous KV from the pool.
+
+    pool: (NB, BS, ...); tables: (B, W) -> (B, W*BS, ...).  Sentinel
+    blocks read as zeros; callers mask by per-row length before softmax.
+    (The Pallas paged flash_decode skips this materialization and indexes
+    the pool directly via the block table — this is the XLA reference
+    path.)"""
+    bs = pool.shape[1]
+    B, W = tables.shape
+    g = jnp.take(pool, tables, axis=0, mode="fill", fill_value=0)
+    return g.reshape((B, W * bs) + pool.shape[2:])
+
+
+def pytree_bytes(tree) -> int:
+    """Total bytes of every array leaf (cache_stats accounting)."""
+    import jax
+
+    return sum(
+        leaf.size * leaf.dtype.itemsize
+        for leaf in jax.tree_util.tree_leaves(tree)
+        if hasattr(leaf, "dtype")
+    )
