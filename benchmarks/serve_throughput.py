@@ -8,6 +8,16 @@ their pool to the traffic's peak *working set* (not slots × max_len), so
 a skewed prompt mix shows the paged cache allocating a fraction of the
 dense bytes while producing the identical greedy token streams.
 
+The ``templated`` mix models system-prompt traffic: every request opens
+with the same template and differs only in a short tail.  Its cells add
+a ``paged_shared`` engine (refcounted prefix sharing + copy-on-write):
+streams must stay byte-identical to dense AND unshared-paged while the
+per-step mean ``blocks_used`` drops ≥2x (the shared template is resident
+ONCE, chained through overlapping sharers, instead of once per slot).
+Every cell reports the fixed occupancy accounting — ``utilization``
+against allocated tokens, ``fragmentation``, ``blocks_shared``,
+``prefix_hit_rate`` — plus the ``rejections`` / ``evictions`` split.
+
   PYTHONPATH=src python benchmarks/serve_throughput.py \
       [--quick] [--out results.json] [--slots 2,4] [--new-tokens 8]
 
@@ -43,13 +53,37 @@ MIXES = {
     # (length, weight) pairs; lengths are fractions of max_len
     "uniform_short": [(0.15, 1.0)],
     "skewed": [(0.08, 3.0), (0.75, 1.0)],   # mostly short + one long tail
+    # system-prompt traffic: shared template + short unique tail (the
+    # prefix-sharing best case; worst case for unshared paging)
+    "templated": "templated",
 }
 
+# template length as a fraction of max_len; 0.75 keeps the default
+# geometry block-aligned (48 tokens = 3 x 16-token blocks), so sharers
+# alias whole template blocks and own only their tail/decode block
+TEMPLATE_FRAC = 0.75
 
-def _requests(mix, n: int, max_len: int, new_tokens: int) -> list:
+
+def _requests(mix, n: int, max_len: int, new_tokens: int) -> tuple:
+    rng = np.random.default_rng(0)
+    if mix == "templated":
+        # one fixed template, per-request tails of 1-4 tokens, and
+        # staggered decode budgets — overlap is what lets later requests
+        # share the template blocks a live sharer keeps resident
+        tpl_len = max(2, int(TEMPLATE_FRAC * max_len))
+        template = 1 + np.arange(tpl_len, dtype=np.int32) % 250
+        reqs, lens = [], []
+        for i in range(n):
+            tail = 1 + (50 + 13 * i + np.arange(1 + i % 4,
+                                                dtype=np.int32)) % 250
+            prompt = np.concatenate([template, tail])
+            budget = max(2, new_tokens - 2 + (i * 3) % 5)
+            reqs.append(Request(uid=i, prompt=prompt,
+                                max_new_tokens=budget))
+            lens.append(len(prompt))
+        return reqs, lens
     fracs, weights = zip(*mix)
     w = np.asarray(weights) / sum(weights)
-    rng = np.random.default_rng(0)
     lens = [int(max(2, rng.choice(fracs, p=w) * max_len)) for _ in range(n)]
     return [
         Request(uid=i, prompt=(1 + np.arange(L, dtype=np.int32) % 250),
@@ -68,17 +102,24 @@ def _pool_blocks(lens, slots, new_tokens, block_size) -> int:
 
 
 def run_cell(model, params, reqs, *, slots, max_len, abft, cache_kind,
-             num_blocks=None, block_size=16) -> dict:
+             num_blocks=None, block_size=16,
+             prefix_sharing=False) -> dict:
     eng = ServeEngine(
         model, params, slots=slots, max_len=max_len, abft=abft,
         dtype=jnp.float32, cache_kind=cache_kind, block_size=block_size,
-        num_blocks=num_blocks)
+        num_blocks=num_blocks, prefix_sharing=prefix_sharing)
     # warm-up pass: serve a throwaway copy of the same traffic so jit
     # compilation (which dominates cold wall time on CPU) is excluded
     # from the reported tokens/s; shapes repeat, so the timed run below
     # hits the compile cache
     eng.run([Request(uid=r.uid, prompt=r.prompt,
                      max_new_tokens=r.max_new_tokens) for r in reqs])
+    if eng.pool is not None:
+        eng.pool.reset()            # warm-up must not seed the shared run
+    if eng.index is not None:
+        from repro.serve.paged_cache import PrefixIndex
+
+        eng.index = PrefixIndex(block_size)
     eng.stats = EngineStats()
     t0 = time.perf_counter()
     results = eng.run([r for r in reqs])
@@ -89,8 +130,19 @@ def run_cell(model, params, reqs, *, slots, max_len, abft, cache_kind,
         "tokens_per_s": eng.stats.tokens / dt,
         "wall_s": dt,
         "errors": sum(1 for r in reqs if r.error),
+        "rejections": eng.stats.rejections,
+        "evictions": eng.stats.evictions,
         "cache_bytes": stats["bytes_total"],
         "tokens_capacity": stats["tokens_capacity"],
+        "utilization": stats["utilization"],
+        "fragmentation": stats["fragmentation"],
+        "blocks_shared": stats["blocks_shared"],
+        "prefix_hit_rate": stats["prefix_hit_rate"],
+        "blocks_used_mean": eng.stats.blocks_used_mean,
+        "blocks_used_median": eng.stats.blocks_used_median,
+        "blocks_used_peak": eng.stats.blocks_used_peak,
+        "blocks_shared_peak": eng.stats.blocks_shared_peak,
+        "cow_copies": eng.stats.cow_copies,
         "streams": {r.uid: r.generated for r in reqs},
     }
 
@@ -119,26 +171,39 @@ def main(argv=None) -> int:
         slot_counts = slot_counts[:1]
         schemes = {k: schemes[k] for k in ("none", "intensity_guided")}
 
+    share_ok = model.supports_prefix_sharing
     cells = []
     for slots in slot_counts:
         for mix_name, mix in MIXES.items():
+            n_reqs = args.requests
+            if mix_name == "templated":
+                # enough waves that the steady state (one resident
+                # template chained through overlapping sharers) dominates
+                # the cold-start wave of unshared copies
+                n_reqs = max(args.requests, 6 * slots)
             reqs_proto, lens = _requests(
-                mix, args.requests, args.max_len, args.new_tokens)
-            nb = _pool_blocks(lens, slots, args.new_tokens, args.block_size)
+                mix, n_reqs, args.max_len, args.new_tokens)
+            peak_new = max(r.max_new_tokens for r in reqs_proto)
+            nb = _pool_blocks(lens, slots, peak_new, args.block_size)
+            kinds = ["dense", "paged"]
+            if share_ok:
+                kinds.append("paged_shared")
             for scheme_name, abft in schemes.items():
                 row = {"slots": slots, "mix": mix_name,
                        "scheme": scheme_name,
                        "prompt_lens": lens}
                 streams = {}
-                for kind in ("dense", "paged"):
+                for kind in kinds:
                     reqs = [Request(uid=r.uid, prompt=r.prompt,
                                     max_new_tokens=r.max_new_tokens)
                             for r in reqs_proto]
                     cell = run_cell(
                         model, params, reqs, slots=slots,
-                        max_len=args.max_len, abft=abft, cache_kind=kind,
+                        max_len=args.max_len, abft=abft,
+                        cache_kind="dense" if kind == "dense" else "paged",
                         block_size=args.block_size,
-                        num_blocks=nb if kind == "paged" else None)
+                        num_blocks=None if kind == "dense" else nb,
+                        prefix_sharing=(kind == "paged_shared"))
                     streams[kind] = cell.pop("streams")
                     row[kind] = cell
                 row["paged_matches_dense"] = (
@@ -146,13 +211,29 @@ def main(argv=None) -> int:
                 row["paged_bytes_frac"] = (
                     row["paged"]["cache_bytes"]
                     / max(row["dense"]["cache_bytes"], 1))
+                shared_note = ""
+                if share_ok:
+                    row["shared_matches_dense"] = (
+                        streams["dense"] == streams["paged_shared"])
+                    # the acceptance metric: steady-state resident blocks
+                    # at equal throughput, shared vs unshared paging (the
+                    # median discounts the cold-start wave, which by
+                    # construction cannot share — nothing is cached yet)
+                    row["shared_blocks_frac"] = (
+                        row["paged_shared"]["blocks_used_median"]
+                        / max(row["paged"]["blocks_used_median"], 1e-9))
+                    shared_note = (
+                        f" shared_blocks={row['shared_blocks_frac']:.2f}x "
+                        f"hit={row['paged_shared']['prefix_hit_rate']:.2f} "
+                        f"match={row['shared_matches_dense']}")
                 cells.append(row)
                 print(f"slots={slots} mix={mix_name:13s} "
                       f"scheme={scheme_name:16s} "
                       f"dense={row['dense']['tokens_per_s']:8.1f} tok/s "
                       f"paged={row['paged']['tokens_per_s']:8.1f} tok/s "
                       f"bytes={row['paged_bytes_frac']:.2f}x "
-                      f"match={row['paged_matches_dense']}")
+                      f"match={row['paged_matches_dense']}"
+                      + shared_note)
 
     summary = {
         "arch": args.arch, "n_layers": args.n_layers,

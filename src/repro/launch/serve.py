@@ -43,6 +43,12 @@ def main(argv=None) -> int:
                     help="paged cache block size (tokens)")
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="paged pool size (default: dense-equivalent)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="refcounted prefix sharing + copy-on-write "
+                         "(paged cache, attention-only models)")
+    ap.add_argument("--admit-lookahead", type=int, default=8,
+                    help="bounded admission lookahead past a deferred "
+                         "head request (HOL-blocking fix)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 samples per slot")
     ap.add_argument("--top-k", type=int, default=0)
@@ -68,6 +74,8 @@ def main(argv=None) -> int:
                          dtype=jnp.float32, policy=policy,
                          cache_kind=args.cache, block_size=args.block_size,
                          num_blocks=args.num_blocks,
+                         prefix_sharing=args.prefix_sharing,
+                         admit_lookahead=args.admit_lookahead,
                          temperature=args.temperature, top_k=args.top_k,
                          seed=args.seed)
     rng = np.random.default_rng(0)
@@ -94,6 +102,9 @@ def main(argv=None) -> int:
         "retries": engine.stats.retries,
         "hard_faults": engine.stats.hard_faults,
         "evictions": engine.stats.evictions,
+        "rejections": engine.stats.rejections,
+        "prefix_hit_rate": engine.stats.prefix_hit_rate,
+        "cow_copies": engine.stats.cow_copies,
         "errors": {r.uid: r.error for r in reqs if r.error},
         "cache": engine.cache_stats(),
     }))

@@ -223,22 +223,44 @@ def gqa_decode(x, p, cfg: ModelConfig, ctx: LayerCtx, pos, cache):
 # ---------------------------------------------------------------- paged GQA
 
 def gqa_paged_prefill(x, p, cfg: ModelConfig, ctx: LayerCtx, positions,
-                      cache, tables, lengths):
+                      cache, tables, lengths, starts=None):
     """Paged prefill: same ragged attention as the dense continuous-
     batching path (prompts attend only themselves), but k/v scatter into
     the block pool at ``tables[a, t // block_size]`` instead of dense
-    engine rows.  cache k/v: (NB, BS, KV, hd); tables: (A, W)."""
-    from repro.serve.paged_cache import paged_scatter_prefill
+    engine rows.  cache k/v: (NB, BS, KV, hd); tables: (A, W).
+
+    ``starts`` (A,) int32 selects the prefix-sharing SUFFIX path: x holds
+    only each row's unshared suffix, whose logical positions begin at
+    ``starts[a]`` (``positions`` already carries the offset, so rotary
+    embeddings are computed from the true logical position — getting this
+    wrong is silent corruption, which is why the shared-vs-unshared
+    equivalence tests demand byte-identical streams).  The suffix k/v are
+    scattered behind the resident prefix, then attention runs over the
+    slot's GATHERED logical KV (prefix blocks + fresh suffix) with a
+    per-row causal offset and total-length key masking."""
+    from repro.serve.paged_cache import paged_gather, paged_scatter_prefill
 
     B, L, _ = x.shape
     q, k, v, flag = _qkv(x, p, cfg, ctx, positions)
-    out = chunked_attention(q, k, v, causal=True, lengths=lengths)
+    if starts is None:
+        out = chunked_attention(q, k, v, causal=True, lengths=lengths)
+        new_cache = {
+            "k": paged_scatter_prefill(cache["k"], k, tables, lengths),
+            "v": paged_scatter_prefill(cache["v"], v, tables, lengths),
+        }
+    else:
+        new_cache = {
+            "k": paged_scatter_prefill(cache["k"], k, tables, lengths,
+                                       starts=starts),
+            "v": paged_scatter_prefill(cache["v"], v, tables, lengths,
+                                       starts=starts),
+        }
+        out = chunked_attention(
+            q, paged_gather(new_cache["k"], tables),
+            paged_gather(new_cache["v"], tables),
+            causal=True, q_offset=starts, lengths=starts + lengths)
     out = out.reshape(B, L, -1)
     out, f = dense(out, p["wo"], ctx, "attn_out")
-    new_cache = {
-        "k": paged_scatter_prefill(cache["k"], k, tables, lengths),
-        "v": paged_scatter_prefill(cache["v"], v, tables, lengths),
-    }
     return out, new_cache, or_flags(flag, f)
 
 
@@ -375,7 +397,7 @@ def _mla_latent_kv(x, p, cfg: ModelConfig, ctx: LayerCtx, positions):
 
 
 def _mla_attend(q_full, scale, latent, p, cfg, ctx, B, L, decode_len=None,
-                lengths=None):
+                lengths=None, q_offset=0):
     """latent: concatenated [c_kv ; k_pe] (B, S, c+dr).  Values are the
     first c dims of the same buffer — attention reads ONE cache tensor
     (no per-step concat of the 32k-deep cache; §Perf iteration C2)."""
@@ -384,7 +406,8 @@ def _mla_attend(q_full, scale, latent, p, cfg, ctx, B, L, decode_len=None,
     vv = latent[:, :, None, :c]
     if decode_len is None:
         ctxv = chunked_attention(
-            q_full, kv, vv, causal=True, scale=scale, lengths=lengths)
+            q_full, kv, vv, causal=True, scale=scale, lengths=lengths,
+            q_offset=q_offset)
     else:
         ctxv = decode_attention(q_full, kv, vv, decode_len, scale=scale)
     # un-absorb values: (B,L,H,c) @ (H,c,dv) -> (B,L,H,dv)
@@ -435,19 +458,29 @@ def mla_decode(x, p, cfg: ModelConfig, ctx: LayerCtx, pos, cache):
 
 
 def mla_paged_prefill(x, p, cfg: ModelConfig, ctx: LayerCtx, positions,
-                      cache, tables, lengths):
+                      cache, tables, lengths, starts=None):
     """Paged MLA prefill: latent rows scatter into the (NB, BS, c+dr)
-    pool via the admission batch's block tables."""
-    from repro.serve.paged_cache import paged_scatter_prefill
+    pool via the admission batch's block tables.  ``starts``: prefix-
+    sharing suffix path — suffix latents land behind the resident shared
+    prefix and attention runs over the gathered logical latent buffer
+    with per-row causal offsets (see gqa_paged_prefill)."""
+    from repro.serve.paged_cache import paged_gather, paged_scatter_prefill
 
     B, L, _ = x.shape
     q_full, scale, f1 = _mla_q(x, p, cfg, ctx, positions)
     c_kv, k_pe, f2 = _mla_latent_kv(x, p, cfg, ctx, positions)
     latent = jnp.concatenate([c_kv, k_pe], axis=-1)
-    out, f3 = _mla_attend(
-        q_full, scale, latent, p, cfg, ctx, B, L, lengths=lengths)
-    new_latent = paged_scatter_prefill(
-        cache["latent"], latent, tables, lengths)
+    if starts is None:
+        out, f3 = _mla_attend(
+            q_full, scale, latent, p, cfg, ctx, B, L, lengths=lengths)
+        new_latent = paged_scatter_prefill(
+            cache["latent"], latent, tables, lengths)
+    else:
+        new_latent = paged_scatter_prefill(
+            cache["latent"], latent, tables, lengths, starts=starts)
+        out, f3 = _mla_attend(
+            q_full, scale, paged_gather(new_latent, tables), p, cfg, ctx,
+            B, L, lengths=starts + lengths, q_offset=starts)
     return out, {"latent": new_latent}, or_flags(f1, f2, f3)
 
 

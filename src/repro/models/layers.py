@@ -174,9 +174,15 @@ def chunked_attention(
     GQA: H must be a multiple of KV; KV == 1 is MQA (used by absorbed MLA).
     ``lengths``: optional (B,) int32 per-row valid key count — keys at
     positions >= lengths[b] are masked for row b (ragged batched prefill).
+    ``q_offset``: logical position of query 0 — a scalar, or a (B,) int32
+    vector when every row starts at its own position (the prefix-sharing
+    suffix prefill: row b's query t sits at logical position
+    ``q_offset[b] + t`` for the causal mask; keys are addressed from
+    logical 0).  The scalar path is untouched bit-for-bit.
     Returns (B, Lq, H, Dv).
     """
     B, Lq, H, Dk = q.shape
+    row_offset = getattr(q_offset, "ndim", 0) > 0          # (B,) vector?
     _, Lk, KV, Dv = v.shape[0], v.shape[1], v.shape[2], v.shape[3]
     groups = H // KV
     scale = scale if scale is not None else Dk ** -0.5
@@ -199,7 +205,11 @@ def chunked_attention(
 
     def q_step(_, qi_q):
         qi, qblk = qi_q
-        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        q_base = qi * q_chunk + jnp.arange(q_chunk)
+        if row_offset:
+            q_pos = q_offset[:, None] + q_base[None, :]    # (B, qc)
+        else:
+            q_pos = q_offset + q_base                      # (qc,)
 
         def k_step(carry, ki_kv):
             m, l, acc = carry
@@ -215,10 +225,18 @@ def chunked_attention(
             s = jnp.einsum(
                 "bqkgd,bskd->bqkgs", qg, kblk,
                 preferred_element_type=F32) * scale
-            mask = k_pos[None, :] < kv_valid
-            if causal:
-                mask = mask & (q_pos[:, None] >= k_pos[None, :])
-            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            if row_offset:
+                mask = jnp.broadcast_to(
+                    k_pos[None, None, :] < kv_valid, (B,) + (q_chunk,)
+                    + (k_chunk,))
+                if causal:
+                    mask = mask & (q_pos[:, :, None] >= k_pos[None, None, :])
+                s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+            else:
+                mask = k_pos[None, :] < kv_valid
+                if causal:
+                    mask = mask & (q_pos[:, None] >= k_pos[None, :])
+                s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
             if lengths is not None:
                 row_ok = k_pos[None, :] < lengths[:, None]     # (B, kc)
                 s = jnp.where(row_ok[:, None, None, None, :], s, NEG_INF)

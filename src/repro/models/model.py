@@ -152,7 +152,7 @@ def init_layer_cache(cfg: ModelConfig, tag: str, batch: int, max_len: int,
 def apply_layer(
     x, lp, tag: str, cfg: ModelConfig, ctx: LayerCtx, positions,
     mode: str, cache, pos, mem, causal: bool = True,
-    slots=None, lengths=None, tables=None,
+    slots=None, lengths=None, tables=None, prefix_lens=None,
 ):
     """One transformer/mamba layer.  mode: full | prefill | decode.
     ``pos`` (decode): scalar or (B,) per-slot cursor vector.
@@ -161,6 +161,10 @@ def apply_layer(
     ``tables``: (B, W) block tables — selects the PAGED cache paths, where
     attention KV lives in a (num_blocks, block_size, ...) pool shared
     across slots (serve/paged_cache.py) while mamba state stays per-slot.
+    ``prefix_lens``: (B,) logical start of each row's tokens — the
+    prefix-sharing suffix prefill (paged attention layers only; SSM state
+    cannot be reconstructed from shared KV blocks, so sharing is gated
+    off for hybrid stacks at the engine).
     Returns (x, new_cache, flag, aux)."""
     mixer, ffn, cross = tag.split(":")
     flags = []
@@ -186,8 +190,11 @@ def apply_layer(
         elif mode == "prefill":
             if tables is not None:
                 a, nc, f = pre(h, lp["mixer"], cfg, ctx, positions,
-                               cache["attn"], tables, lengths)
+                               cache["attn"], tables, lengths,
+                               starts=prefix_lens)
             else:
+                assert prefix_lens is None, (
+                    "prefix sharing requires the paged cache")
                 a, nc, f = pre(h, lp["mixer"], cfg, ctx, positions,
                                cache["attn"], slots=slots, lengths=lengths)
             new_cache["attn"] = nc
@@ -203,6 +210,8 @@ def apply_layer(
         # state) — one implicit permanently-resident block per slot, so
         # the paged engine uses the same per-slot paths and the block
         # tables are simply not forwarded
+        assert prefix_lens is None, (
+            "prefix sharing cannot skip SSM recurrence state")
         if mode == "full":
             a, f = mb.mamba_forward(h, lp["mixer"], cfg, ctx)
         elif mode == "prefill":
@@ -259,11 +268,13 @@ def run_stack(
     x, segments_params, plan, cfg: ModelConfig, ctx: LayerCtx, positions,
     mode: str, caches, pos, mem, causal: bool = True, remat: bool = False,
     layer_offset: int = 0, slots=None, lengths=None, tables=None,
+    prefix_lens=None,
 ):
     """Apply all segments.  caches: list aligned with plan (or None).
     ``pos``: decode cursor — scalar or (B,) vector; ``slots``/``lengths``
-    thread the continuous-batching prefill path and ``tables`` the paged
-    block-table path (see apply_layer).
+    thread the continuous-batching prefill path, ``tables`` the paged
+    block-table path, and ``prefix_lens`` the prefix-sharing suffix
+    prefill (see apply_layer).
     Returns (x, new_caches, flag, aux)."""
     flag = jnp.zeros((), bool)
     aux = jnp.zeros((), F32)
@@ -290,7 +301,7 @@ def run_stack(
                     xx, up[f"pos{q}"], tag, cfg, lctx, positions, mode,
                     uc[f"pos{q}"] if uc is not None else None, pos, mem,
                     causal=causal, slots=slots, lengths=lengths,
-                    tables=tables,
+                    tables=tables, prefix_lens=prefix_lens,
                 )
                 new_uc[f"pos{q}"] = ncq
                 fl = jnp.logical_or(fl, f)
@@ -528,9 +539,45 @@ class Model:
         logits, f3 = self._head(params, hm, ctx)
         return logits, or_flags(f1, f2, f3)
 
+    # -------------------------------------------------- prefix sharing
+    @property
+    def supports_prefix_sharing(self) -> bool:
+        """Prefix KV sharing is sound only when a token's cached state is
+        a pure function of the token prefix: SSM layers carry recurrent
+        state outside the block pool, and encoder-decoder / vision stacks
+        condition every position on per-request memory, so identical
+        prompt tokens do NOT imply identical cache content there."""
+        cfg = self.cfg
+        if cfg.is_encoder_decoder or cfg.vision_dim or cfg.cross_attn_every:
+            return False
+        return not any(t.startswith("mamba") for t in layer_tags(cfg))
+
+    def copy_paged_blocks(self, cache, src, dst):
+        """Functional device copy ``pool[dst[i]] <- pool[src[i]]`` on
+        every paged attention leaf — the COW payload move.  Walks the
+        segment plan so per-slot leaves (mamba state, cross KV) are never
+        touched even if their leading dims collide with the pool's."""
+        src = jnp.asarray(src, jnp.int32)
+        dst = jnp.asarray(dst, jnp.int32)
+        out = []
+        for seg, segc in zip(self.plan, cache):
+            nc = {}
+            for q, tag in enumerate(seg.unit):
+                mixer = tag.split(":")[0]
+                lc = dict(segc[f"pos{q}"])
+                if mixer in ("attn", "mla"):
+                    lc["attn"] = {
+                        k: leaf.at[:, dst].set(leaf[:, src])
+                        for k, leaf in lc["attn"].items()
+                    }
+                nc[f"pos{q}"] = lc
+            out.append(nc)
+        return out
+
     # -------------------------------------------------- prefill / decode
     def prefill(self, params, batch, cache, ctx: LayerCtx,
-                slots=None, lengths=None, block_tables=None):
+                slots=None, lengths=None, block_tables=None,
+                prefix_lens=None):
         """Prefill the cache from ``batch["tokens"]`` (B, L).
 
         Default path: cache is B-deep, rows map 1:1 to the batch, logits
@@ -545,19 +592,31 @@ class Model:
 
         Paged path (``block_tables`` (A, W) additionally given): the
         cache is a block pool (init_paged_cache) and attention KV
-        scatters via the tables instead of dense rows."""
+        scatters via the tables instead of dense rows.
+
+        Prefix-sharing path (``prefix_lens`` (A,) additionally given):
+        tokens hold only each row's UNSHARED suffix and ``lengths`` its
+        valid suffix length; row a's first token sits at logical position
+        ``prefix_lens[a]`` (0 for unshared rows).  Rotary offsets, causal
+        masks, and cache scatter targets are all computed from the true
+        logical position — the shared prefix KV already resident in the
+        pool is what the suffix attends to."""
         cfg = self.cfg
         tokens = batch["tokens"]
         B, L = tokens.shape
         mem, mem_flag = self._memory(params, batch, ctx)
         x = params["embed"][tokens]
         positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+        if prefix_lens is not None:
+            assert block_tables is not None, (
+                "prefix_lens requires the paged cache path")
+            positions = prefix_lens[:, None].astype(jnp.int32) + positions
         if cfg.is_encoder_decoder:
             x = x + sinusoid_pos(positions, cfg.d_model).astype(x.dtype)
         x, new_cache, flag, _ = run_stack(
             x, params["segments"], self.plan, cfg, ctx, positions,
             "prefill", cache, None, mem, slots=slots, lengths=lengths,
-            tables=block_tables)
+            tables=block_tables, prefix_lens=prefix_lens)
         x = norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
         if lengths is not None:
             last = x[jnp.arange(B), jnp.maximum(lengths - 1, 0)][:, None]

@@ -23,26 +23,53 @@ boundaries, and returned to the free list when a request finishes or is
 evicted — including hard-fault eviction under ``RecoveryPolicy``.  Pool
 exhaustion never crashes: a request that could NEVER fit is rejected with
 ``error="oom:block_pool"``; one that merely hit transient pressure
-(blocks held by in-flight requests) is deferred at the head of the queue
-until decode frees blocks; a slot whose mid-decode growth cannot be
-covered is evicted with ``error="oom:kv_blocks"``.
+(blocks held by in-flight requests) is deferred until decode frees
+blocks; a slot whose mid-decode growth cannot be covered is evicted with
+``error="oom:kv_blocks"``.
 Token streams are identical to the dense engine under greedy decoding
 (block-size divides max_len => identical attention shapes); the allocation
 is what changes: ``cache_stats()`` reports pool bytes ≪ slots × max_len
 when prompt lengths are skewed.
 
+``prefix_sharing=True`` (paged only) adds refcounted prefix sharing with
+copy-on-write: admission matches each prompt against a content-hash index
+of resident blocks (``PrefixIndex``), aliases the new slot's leading
+table entries onto the longest cached prefix (full blocks refcounted; a
+partial tail block is COW-copied because the suffix will write into it),
+and prefills ONLY the unshared suffix at its true logical positions.
+Matches are capped at ``len(prompt) - 1`` tokens so the suffix always
+yields the first sampled token's logits.  The index registers prompts
+only after their prefill passed the ABFT check, and entries are purged
+when blocks are physically freed — so fault-driven eviction of one
+sharer never frees or corrupts blocks a live request still references
+(refcounts drop; the free list only sees count-zero blocks).  Greedy
+streams are byte-identical to the unshared paged engine: identical
+tokens at identical logical positions produce bit-identical KV, and the
+suffix path's gathered-KV attention masks padding to exact zeros.
+Requires ``model.supports_prefix_sharing`` (attention-only stacks —
+SSM/cross-attention state is not a pure function of the token prefix).
+
 Engine API
 ----------
 ``admit(pending)``
-    Batched admission: up to ``len(free_slots())`` requests are prefetched
-    from the front of ``pending``, padded to a common length, and prefilled
-    in ONE model call **directly into their engine cache rows** (per-slot
-    scatter + per-row length masking — no 1-deep temp cache or splice).
-    Each consumed request is admitted, finished (``max_new_tokens`` already
-    satisfied by the prefill-sampled token), or evicted with ``error`` set
-    (over-long prompt, pool exhaustion, persistent prefill fault).
-    Returns the number of requests consumed so the caller can always make
-    progress (no livelock on a hard-faulting head request).
+    Batched admission: up to ``len(free_slots())`` requests are drawn
+    from ``pending`` (IN PLACE — consumed requests are removed), padded
+    to a common length, and prefilled in ONE model call **directly into
+    their engine cache rows** (per-slot scatter + per-row length masking
+    — no 1-deep temp cache or splice).  Each consumed request is
+    admitted, finished (``max_new_tokens`` already satisfied by the
+    prefill-sampled token), rejected with ``error`` set before prefill
+    (over-long prompt, pool exhaustion), or evicted on a persistent
+    prefill fault.  Returns the list of consumed requests so the caller
+    can always make progress (no livelock on a hard-faulting head).
+
+    Head-of-line blocking: a transiently-deferred large prompt no longer
+    stalls every request behind it.  A bounded lookahead admits later
+    requests that fit RIGHT NOW, but each such admission spends one unit
+    of the head's bypass budget (``admit_lookahead``); once the budget is
+    exhausted, admission reverts to strict FIFO — every freed block is
+    implicitly reserved for the deferred head, which therefore cannot
+    starve (bounded bypass, then exclusive claim on frees).
 
 ``step(fault=None)``
     One decode step for all active slots.  Tokens are chosen by a
@@ -81,6 +108,15 @@ Token budget: ``max_new_tokens`` counts every generated token *including*
 the one sampled at prefill, so ``max_new_tokens=N`` yields exactly N new
 tokens (``N-1`` decode steps) — a request satisfied at admission never
 occupies a slot.
+
+Accounting: ``EngineStats`` distinguishes **rejections** (pre-prefill
+screening: ``prompt_too_long``, ``oom:block_pool`` — the request never
+held cache state) from **evictions** (a resident request lost its slot:
+hard fault, ``oom:kv_blocks`` growth failure).  ``cache_stats()`` reports
+paged ``utilization`` against *allocated* tokens (``blocks_used *
+block_size``), so internal fragmentation is visible as its complement
+rather than hidden by the total-pool denominator, plus ``fragmentation``,
+``blocks_shared``, and ``prefix_hit_rate``.
 """
 
 from __future__ import annotations
@@ -94,7 +130,12 @@ import numpy as np
 from repro.core.protected import ABFTConfig
 from repro.models.layers import LayerCtx, ModelFault
 from repro.models.model import Model
-from repro.serve.paged_cache import BlockPool, pytree_bytes
+from repro.serve.paged_cache import (
+    BlockPool,
+    PrefixIndex,
+    blocks_for,
+    pytree_bytes,
+)
 
 
 @dataclasses.dataclass
@@ -128,7 +169,55 @@ class EngineStats:
     faults_detected: int = 0
     retries: int = 0
     hard_faults: int = 0
-    evictions: int = 0
+    evictions: int = 0         # resident requests that lost their slot
+    rejections: int = 0        # screened out before prefill (never resident)
+    # prefix sharing
+    prompt_tokens_total: int = 0
+    prefix_tokens_shared: int = 0
+    cow_copies: int = 0
+    # per-step pool occupancy aggregates (one observation per executed
+    # decode step on a paged engine).  The mean is exact (sum/count); the
+    # median comes from a BOUNDED sample list kept small by deterministic
+    # stride decimation, so a long-lived serving engine never accumulates
+    # unbounded per-step state
+    blocks_used_sum: int = 0
+    blocks_used_count: int = 0
+    blocks_used_samples: list = dataclasses.field(default_factory=list)
+    blocks_used_stride: int = 1
+    blocks_used_peak: int = 0
+    blocks_shared_peak: int = 0
+
+    MAX_OCCUPANCY_SAMPLES = 4096
+
+    def observe_blocks_used(self, used: int) -> None:
+        self.blocks_used_sum += used
+        self.blocks_used_count += 1
+        self.blocks_used_peak = max(self.blocks_used_peak, used)
+        if self.blocks_used_count % self.blocks_used_stride == 0:
+            self.blocks_used_samples.append(used)
+            if len(self.blocks_used_samples) > self.MAX_OCCUPANCY_SAMPLES:
+                # halve the sampling rate: keep every other sample
+                self.blocks_used_samples = self.blocks_used_samples[::2]
+                self.blocks_used_stride *= 2
+
+    @property
+    def blocks_used_mean(self) -> float:
+        return self.blocks_used_sum / max(self.blocks_used_count, 1)
+
+    @property
+    def blocks_used_median(self) -> float:
+        """Steady-state resident blocks: the median is robust to the
+        cold-start wave, whose requests cannot share (nothing is cached
+        yet) and briefly hold unshared copies of a common template."""
+        s = sorted(self.blocks_used_samples)
+        n = len(s)
+        if not n:
+            return 0.0
+        return (s[n // 2] if n % 2 else (s[n // 2 - 1] + s[n // 2]) / 2)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_tokens_shared / max(self.prompt_tokens_total, 1)
 
 
 def _pad_len(n: int) -> int:
@@ -143,6 +232,7 @@ class ServeEngine:
                  policy: RecoveryPolicy = RecoveryPolicy(),
                  cache_kind: str = "dense", block_size: int = 16,
                  num_blocks: int | None = None,
+                 prefix_sharing: bool = False, admit_lookahead: int = 8,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0):
         assert slots >= 1
         self.model = model
@@ -158,6 +248,13 @@ class ServeEngine:
         self.cache_kind = cache_kind
         self.temperature = float(temperature)
         self.top_k = int(top_k)
+        self.admit_lookahead = int(admit_lookahead)
+        # requests that turned done inside admit()/step(), awaiting run()'s
+        # result collection (replaces the O(requests x steps) done-scan)
+        self._done_events: list = []
+        # head-of-line state: (uid of the deferred head, bypasses spent)
+        self._hol_uid: int | None = None
+        self._hol_bypassed = 0
         # per-slot PRNG key vector: each slot samples from its own stream
         self.keys = jax.random.split(jax.random.PRNGKey(seed), slots)
 
@@ -174,6 +271,18 @@ class ServeEngine:
             self.cache = model.init_cache(slots, max_len, dtype=dtype)
         else:
             raise ValueError(f"unknown cache_kind {cache_kind!r}")
+
+        if prefix_sharing:
+            if self.pool is None:
+                raise ValueError("prefix_sharing requires cache_kind='paged'")
+            if not model.supports_prefix_sharing:
+                raise ValueError(
+                    "prefix_sharing requires an attention-only decoder "
+                    "(no SSM / cross-attention state outside the block "
+                    "pool)")
+            self.index: PrefixIndex | None = PrefixIndex(block_size)
+        else:
+            self.index = None
 
         def _advance(keys):
             """Split each slot key into (sample, next) — a no-op pair in
@@ -222,73 +331,155 @@ class ServeEngine:
             first = _sample(logits[:, 0, :], sub)
             return first, new_cache, flag, nkeys
 
+        def _prefill_prefix_step(p, toks, cache, slot_ids, lengths, keys,
+                                 tables, prefix_lens, fault):
+            logits, new_cache, flag = model.prefill(
+                p, {"tokens": toks}, cache,
+                dataclasses.replace(self.ctx, fault=fault),
+                slots=slot_ids, lengths=lengths, block_tables=tables,
+                prefix_lens=prefix_lens)
+            sub, nkeys = _advance(keys)
+            first = _sample(logits[:, 0, :], sub)
+            return first, new_cache, flag, nkeys
+
         self._decode = jax.jit(_decode_step)
         self._prefill = jax.jit(_prefill_step)
+        self._prefill_prefix = jax.jit(_prefill_prefix_step)
 
     # ------------------------------------------------------------ admission
     def free_slots(self) -> list:
         return [s for s in range(self.slots) if s not in self.active]
 
     def _release(self, slot: int) -> None:
-        """Return a slot's cache memory (paged: blocks to the free list)."""
+        """Drop a slot's cache references (paged: refcount decrements;
+        blocks whose last reference dropped return to the free list and
+        their prefix-index entries are purged)."""
         if self.pool is not None:
-            self.pool.free_slot(slot)
+            freed = self.pool.free_slot(slot)
+            if self.index is not None and freed:
+                self.index.purge(freed)
         self.pos[slot] = 0
 
+    def _finish(self, req: Request, error: str | None = None, *,
+                reject: bool = False, evict: bool = False) -> None:
+        """Mark a request done and queue it for run()'s result collection.
+        ``reject``: screened out before prefill (never held cache state);
+        ``evict``: a resident request lost its slot."""
+        if error is not None:
+            req.error = error
+        req.done = True
+        if reject:
+            self.stats.rejections += 1
+        if evict:
+            self.stats.evictions += 1
+        self._done_events.append(req)
+
+    def _drain_finished(self) -> list:
+        done, self._done_events = self._done_events, []
+        return done
+
     def admit(self, pending: list, fault: ModelFault | None = None,
-              fault_uid: int | None = None) -> int:
+              fault_uid: int | None = None) -> list:
         """Batched admission (see module docstring).  Consumes up to
-        ``len(free_slots())`` requests from the front of ``pending`` and
-        returns how many were consumed — every consumed request ends up
-        active, done, or evicted with ``error`` set, so the caller always
-        progresses.  ``fault``/``fault_uid``: campaign injection applied
-        only when the targeted request actually reaches prefill."""
-        from repro.serve.paged_cache import blocks_for
-
+        ``len(free_slots())`` requests from ``pending`` — IN PLACE — and
+        returns the consumed requests: every one ends up active, done, or
+        rejected/evicted with ``error`` set, so the caller always
+        progresses.  Consumption is FIFO except for the bounded lookahead
+        past a transiently-deferred head (see module docstring).
+        ``fault``/``fault_uid``: campaign injection applied only when the
+        targeted request actually reaches prefill."""
         free = self.free_slots()
-        batch = pending[:min(len(free), len(pending))]
-        if not batch:
-            return 0
+        if not pending or not free:
+            return []
 
-        admitted, slot_list = [], []
-        consumed = 0
-        for req in batch:
+        admitted, slot_list, prefix_plans, cow_pairs = [], [], [], []
+        consumed, consumed_idx = [], []
+        head_deferred = False
+        scanned_past_head = 0
+        for i, req in enumerate(pending):
+            if len(slot_list) >= len(free):
+                break
+            if head_deferred:
+                # bounded lookahead: examine at most admit_lookahead
+                # requests past the deferred head
+                if scanned_past_head >= self.admit_lookahead:
+                    break
+                scanned_past_head += 1
             if req.max_new_tokens <= 0:
-                req.done = True              # zero budget: nothing to do
-                consumed += 1
+                self._finish(req)            # zero budget: nothing to do
+                consumed.append(req)
+                consumed_idx.append(i)
                 continue
             # the prompt plus the decode budget must fit in the cache rows
             if len(req.prompt) + max(req.max_new_tokens - 1, 0) > \
                     self.max_len:
-                req.error = "prompt_too_long"
-                req.done = True
-                self.stats.evictions += 1
-                consumed += 1
+                self._finish(req, "prompt_too_long", reject=True)
+                consumed.append(req)
+                consumed_idx.append(i)
                 continue
             slot = free[len(slot_list)]
+            plan = None
             if self.pool is not None:
                 # paged admission: blocks for the prompt are claimed up
                 # front (decode growth is on-demand).  A request that can
                 # NEVER fit is rejected with a recorded error; a request
                 # that merely hit transient pressure (blocks held by
-                # in-flight requests) is DEFERRED — left at the head of
-                # ``pending`` to admit once decode frees blocks.  No
-                # livelock: deferral with an empty engine is impossible
-                # (a full free list that still cannot cover the prompt
-                # means never-fits), so something is always decoding and
-                # eventually freeing.
-                if not self.pool.try_alloc(slot, len(req.prompt)):
-                    if blocks_for(len(req.prompt), self.pool.block_size) \
-                            > self.pool.num_blocks:
-                        req.error = "oom:block_pool"
-                        req.done = True
-                        self.stats.evictions += 1
-                        consumed += 1
-                        continue
-                    break                    # transient: defer the rest
+                # in-flight requests) is DEFERRED until decode frees
+                # blocks.  No livelock: deferral with an empty engine is
+                # impossible (a full free list that still cannot cover
+                # the prompt means never-fits), so something is always
+                # decoding and eventually freeing.
+                need = blocks_for(len(req.prompt), self.pool.block_size)
+                if need > self.pool.num_blocks or \
+                        need > self.pool.table_width:
+                    self._finish(req, "oom:block_pool", reject=True)
+                    consumed.append(req)
+                    consumed_idx.append(i)
+                    continue
+                if self.index is not None:
+                    plan = self.index.match(req.prompt)
+                    if not plan.shared_ids:
+                        plan = None
+                # a shared full block costs no free-list draw; the COW
+                # copy of a partial tail does (need counts its index)
+                fresh = need - (plan.full_blocks if plan else 0)
+                if fresh > self.pool.blocks_free:
+                    if not head_deferred:
+                        head_deferred = True
+                        if self._hol_uid != req.uid:
+                            self._hol_uid = req.uid
+                            self._hol_bypassed = 0
+                    continue                 # deferred, keep scanning
+                if head_deferred:
+                    # admitting past the deferred head spends its bypass
+                    # budget; once exhausted admission is strict FIFO and
+                    # every freed block is reserved for the head
+                    if self._hol_bypassed >= self.admit_lookahead:
+                        break
+                    self._hol_bypassed += 1
+                if plan is not None:
+                    ok = self.pool.try_admit_prefix(
+                        slot, len(req.prompt), plan.shared_ids)
+                else:
+                    ok = self.pool.try_alloc(slot, len(req.prompt))
+                assert ok, "alloc failed after fresh <= blocks_free check"
+                if plan is not None and plan.partial:
+                    # the suffix will write into the shared partial tail:
+                    # copy-on-write it now, before any jitted step
+                    pair = self.pool.try_cow(
+                        slot, len(plan.shared_ids) - 1)
+                    assert pair is not None, "partial tail was unshared"
+                    cow_pairs.append(pair)
             admitted.append(req)
             slot_list.append(slot)
-            consumed += 1
+            prefix_plans.append(plan)
+            consumed.append(req)
+            consumed_idx.append(i)
+        for i in reversed(consumed_idx):
+            pending.pop(i)
+        if self._hol_uid is not None and any(
+                r.uid == self._hol_uid for r in consumed):
+            self._hol_uid, self._hol_bypassed = None, 0    # head unblocked
         if not admitted:
             return consumed
         if fault is not None and fault_uid is not None and not any(
@@ -296,23 +487,47 @@ class ServeEngine:
             fault = None    # campaign target never reached prefill
 
         slot_ids = np.asarray(slot_list, np.int32)
-        lengths = np.asarray([len(r.prompt) for r in admitted], np.int32)
+        full_lens = np.asarray([len(r.prompt) for r in admitted], np.int32)
+        prefix = np.asarray(
+            [p.match_len if p is not None else 0 for p in prefix_plans],
+            np.int32)
+        lengths = full_lens - prefix         # valid SUFFIX tokens per row
         # admissible prompts always fit (budget check above), so clamping
         # the bucketed pad to max_len keeps the scatter in bounds
         Lpad = min(_pad_len(int(lengths.max())), self.max_len)
         toks = np.zeros((len(admitted), Lpad), np.int32)
         for i, r in enumerate(admitted):
-            toks[i, : len(r.prompt)] = r.prompt
+            toks[i, : lengths[i]] = r.prompt[prefix[i]:]
+
+        if cow_pairs:
+            # COW payload moves are committed BEFORE the attempt so the
+            # detect->retry window sees stable tables and block contents
+            # (plain data movement, not an ABFT-protected GEMM)
+            self.cache = self.model.copy_paged_blocks(
+                self.cache, [s for s, _ in cow_pairs],
+                [d for _, d in cow_pairs])
+            self.stats.cow_copies += len(cow_pairs)
 
         tables = (self.pool.device_tables(slot_ids)
                   if self.pool is not None else None)
         keys = self.keys[jnp.asarray(slot_ids)]
+        use_prefix = bool(prefix.any())
         args = (self.params, jnp.asarray(toks), jnp.asarray(slot_ids),
                 jnp.asarray(lengths))
+        prefix_dev = jnp.asarray(prefix)
         prev_cache = self.cache        # pre-admission state, kept for retry
+
+        def attempt(fa):
+            if use_prefix:
+                return self._prefill_prefix(
+                    args[0], args[1], prev_cache, args[2], args[3], keys,
+                    tables, prefix_dev, fa)
+            return self._prefill(
+                args[0], args[1], prev_cache, args[2], args[3], keys,
+                tables, fa)
+
         f = fault if fault is not None else ModelFault.none()
-        first, new_cache, flag, nkeys = self._prefill(
-            args[0], args[1], prev_cache, args[2], args[3], keys, tables, f)
+        first, new_cache, flag, nkeys = attempt(f)
         if bool(flag):
             self.stats.faults_detected += 1
             for _ in range(self.policy.max_retries):
@@ -320,19 +535,17 @@ class ServeEngine:
                 # clean retry from the PRE-admission cache — never from the
                 # possibly-corrupted attempt (mirrors decode's prev_cache);
                 # same keys, so the retry resamples the same token
-                first, new_cache, flag, nkeys = self._prefill(
-                    args[0], args[1], prev_cache, args[2], args[3], keys,
-                    tables, ModelFault.none())
+                first, new_cache, flag, nkeys = attempt(ModelFault.none())
                 if not bool(flag):
                     break
             if bool(flag):
                 # persistent fault: evict the admission batch with recorded
-                # errors instead of retrying it forever (livelock fix)
+                # errors instead of retrying it forever (livelock fix).
+                # _release drops refcounts only — a shared prefix block a
+                # LIVE request still references stays resident
                 self.stats.hard_faults += 1
                 for slot, r in zip(slot_ids, admitted):
-                    r.error = "hard_fault:prefill"
-                    r.done = True
-                    self.stats.evictions += 1
+                    self._finish(r, "hard_fault:prefill", evict=True)
                     self._release(int(slot))
                 return consumed
 
@@ -342,12 +555,18 @@ class ServeEngine:
         for i, (slot, req) in enumerate(zip(slot_ids, admitted)):
             req.generated.append(int(first[i]))
             self.stats.tokens += 1
+            self.stats.prompt_tokens_total += int(full_lens[i])
+            self.stats.prefix_tokens_shared += int(prefix[i])
             if len(req.generated) >= req.max_new_tokens:
-                req.done = True             # budget met at prefill: the
+                self._finish(req)           # budget met at prefill: the
                 self._release(int(slot))    # request never occupies a slot
                 continue
             self.active[int(slot)] = req
-            self.pos[int(slot)] = int(lengths[i])
+            self.pos[int(slot)] = int(full_lens[i])
+            if self.index is not None:
+                # register only AFTER the flag read back clean: the index
+                # must never name blocks holding a faulty attempt's data
+                self.index.add(req.prompt, self.pool.tables[int(slot)])
         return consumed
 
     # ------------------------------------------------------------ decoding
@@ -358,13 +577,32 @@ class ServeEngine:
             # enter BEFORE the jitted step (tables must be stable across
             # the attempt/retry window); a slot that cannot grow is
             # evicted with a recorded error, freeing blocks for the rest
+            cow_pairs = []
             for s in sorted(self.active):
+                # copy-on-write guard: if this step's write lands in a
+                # block another slot still references, redirect to a
+                # fresh copy first.  Admission COWs the shared partial
+                # tail eagerly, so this only fires on exotic lifecycles —
+                # but scribbling on a sharer's block is silent corruption,
+                # so the guard is unconditional.
+                idx = int(self.pos[s]) // self.pool.block_size
+                if idx < self.pool.slot_blocks(s) and \
+                        self.pool.refcount[self.pool.tables[s, idx]] > 1:
+                    if self.pool.blocks_free == 0:
+                        req = self.active.pop(s)
+                        self._finish(req, "oom:kv_blocks", evict=True)
+                        self._release(s)
+                        continue
+                    cow_pairs.append(self.pool.try_cow(s, idx))
                 if not self.pool.try_grow(s, int(self.pos[s]) + 1):
                     req = self.active.pop(s)
-                    req.error = "oom:kv_blocks"
-                    req.done = True
-                    self.stats.evictions += 1
+                    self._finish(req, "oom:kv_blocks", evict=True)
                     self._release(s)
+            if cow_pairs:
+                self.cache = self.model.copy_paged_blocks(
+                    self.cache, [a for a, _ in cow_pairs],
+                    [b for _, b in cow_pairs])
+                self.stats.cow_copies += len(cow_pairs)
         if not self.active:
             return {}
         toks = np.zeros((self.slots, 1), np.int32)
@@ -383,6 +621,13 @@ class ServeEngine:
             self.params, jnp.asarray(toks), prev_cache, pos,
             jnp.asarray(mask), prev_keys, tables, f)
         self.stats.steps += 1
+        if self.pool is not None:
+            # per-step occupancy samples: benchmarks report mean/median/
+            # peak blocks_used (the paged capacity win) without poking
+            # mid-run
+            self.stats.observe_blocks_used(self.pool.blocks_used)
+            self.stats.blocks_shared_peak = max(
+                self.stats.blocks_shared_peak, self.pool.blocks_shared)
         if bool(flag):
             # ABFT detection -> recompute from pre-step state (clean run,
             # same per-slot keys: the retry resamples the same token)
@@ -400,11 +645,11 @@ class ServeEngine:
                     raise RuntimeError("persistent fault after retry")
                 # the flag is step-global: every in-flight request may be
                 # corrupted, so evict them all with recorded errors and
-                # keep the engine alive for subsequent admissions
+                # keep the engine alive for subsequent admissions (shared
+                # blocks survive as long as ANY sharer was admitted later
+                # with live references — refcounts gate the free list)
                 for s, req in list(self.active.items()):
-                    req.error = "hard_fault:decode"
-                    req.done = True
-                    self.stats.evictions += 1
+                    self._finish(req, "hard_fault:decode", evict=True)
                     del self.active[s]
                     self._release(s)
                 return {}
@@ -421,7 +666,7 @@ class ServeEngine:
             out[req.uid] = t
             self.stats.tokens += 1
             if len(req.generated) >= req.max_new_tokens:
-                req.done = True
+                self._finish(req)
                 finished.append(s)
         for s in finished:
             del self.active[s]
@@ -432,34 +677,47 @@ class ServeEngine:
             admit_fault_at: tuple | None = None) -> dict:
         """Drive admission + decode to completion (continuous batching).
 
-        ``fault_at``: (step_idx, ModelFault) decode-step injection;
-        ``admit_fault_at``: (uid, ModelFault) injected into the admission
-        batch that contains that request uid (campaign hooks)."""
+        ``fault_at``: (step_idx, ModelFault) decode-step injection —
+        armed from that step index on, it fires at the first step that
+        actually decodes (a step with no active slots re-arms the
+        injection for the next real step instead of silently dropping
+        it); ``admit_fault_at``: (uid, ModelFault) injected into the
+        admission batch that contains that request uid (campaign hooks).
+
+        Results are collected from the engine's finished-event queue —
+        O(1) amortized per request — instead of rescanning every request
+        each step (the seed's O(requests x steps) done-scan)."""
         pending = list(requests)
-        results = {}
+        results = {
+            r.uid: r.generated for r in requests if r.done}  # pre-done edge
+        self._drain_finished()
         step_i = 0
+        step_fault_armed = fault_at is not None
         while pending or self.active:
             if pending and self.free_slots():
                 if admit_fault_at is not None:
                     uid, afault = admit_fault_at
-                    n = self.admit(pending, fault=afault, fault_uid=uid)
+                    consumed = self.admit(pending, fault=afault,
+                                          fault_uid=uid)
                     # consumed exactly once: only when the target actually
                     # went through prefill (not filtered out beforehand)
                     if any(r.uid == uid
                            and r.error not in PRE_PREFILL_ERRORS
                            and r.max_new_tokens > 0
-                           for r in pending[:n]):
+                           for r in consumed):
                         admit_fault_at = None
                 else:
-                    n = self.admit(pending)
-                del pending[:n]
+                    self.admit(pending)
             fault = None
-            if fault_at is not None and step_i == fault_at[0]:
+            if step_fault_armed and step_i >= fault_at[0]:
                 fault = fault_at[1]
+            steps_before = self.stats.steps
             self.step(fault)
+            if fault is not None and self.stats.steps > steps_before:
+                step_fault_armed = False     # injection hit a real step
             step_i += 1
-            for req in requests:
-                if req.done and req.uid not in results:
+            for req in self._drain_finished():
+                if req.uid not in results:
                     results[req.uid] = req.generated
         return results
 
@@ -470,9 +728,19 @@ class ServeEngine:
         Common keys: ``kind``, ``slots``, ``max_len``, ``bytes_total``
         (allocated cache bytes across all layers), ``tokens_capacity``
         (cache entries the allocation can hold), ``active_tokens`` (sum
-        of live cursors) and ``utilization``.  Paged engines add
-        ``block_size`` / ``blocks_total`` / ``blocks_used`` /
-        ``blocks_free``."""
+        of live cursors), ``utilization``, ``fragmentation``,
+        ``blocks_shared``, and ``prefix_hit_rate``.
+
+        Paged ``utilization`` divides live logical tokens by *allocated*
+        tokens (``blocks_used * block_size``) — NOT total pool capacity,
+        which hid internal fragmentation behind an always-small ratio.
+        ``fragmentation`` is its complement: the allocated-but-unfilled
+        share (partial last blocks).  Under prefix sharing, logical
+        tokens can exceed allocated tokens (several slots count the same
+        shared block), so utilization may exceed 1.0 — that excess IS the
+        sharing win.  Paged engines also report ``block_size`` /
+        ``blocks_total`` / ``blocks_used`` / ``blocks_free`` /
+        ``tokens_allocated``."""
         stats = {
             "kind": self.cache_kind,
             "slots": self.slots,
@@ -482,16 +750,24 @@ class ServeEngine:
                 int(self.pos[s]) for s in self.active)),
         }
         if self.pool is not None:
+            allocated = self.pool.blocks_used * self.pool.block_size
             stats.update(
                 block_size=self.pool.block_size,
                 blocks_total=self.pool.num_blocks,
                 blocks_used=self.pool.blocks_used,
                 blocks_free=self.pool.blocks_free,
+                blocks_shared=self.pool.blocks_shared,
                 tokens_capacity=self.pool.num_blocks
                 * self.pool.block_size,
+                tokens_allocated=allocated,
             )
         else:
             stats["tokens_capacity"] = self.slots * self.max_len
-        stats["utilization"] = (
-            stats["active_tokens"] / max(stats["tokens_capacity"], 1))
+            stats["tokens_allocated"] = stats["tokens_capacity"]
+            stats["blocks_shared"] = 0
+        alloc = stats["tokens_allocated"]
+        stats["utilization"] = stats["active_tokens"] / alloc if alloc else 0.0
+        stats["fragmentation"] = (
+            max(0.0, 1.0 - stats["utilization"]) if alloc else 0.0)
+        stats["prefix_hit_rate"] = self.stats.prefix_hit_rate
         return stats

@@ -50,8 +50,8 @@ def test_mixed_length_two_requests_match_solo(small_model):
     collapsed them to max(pos) and corrupted both caches)."""
     _, model, params = small_model
     eng = _engine(model, params, slots=2)
-    reqs = [_req(0, 5), _req(1, 11)]
-    assert eng.admit(reqs) == 2
+    r0, r1 = _req(0, 5), _req(1, 11)
+    assert len(eng.admit([r0, r1])) == 2
     # per-slot cursors reflect each request's own prompt length
     assert eng.pos[0] == 5 and eng.pos[1] == 11
 
@@ -63,8 +63,8 @@ def test_mixed_length_two_requests_match_solo(small_model):
         if eng.active:
             assert eng.pos[0] == 5 + steps and eng.pos[1] == 11 + steps
 
-    assert reqs[0].generated == _solo(model, params, 0, 5)
-    assert reqs[1].generated == _solo(model, params, 1, 11)
+    assert r0.generated == _solo(model, params, 0, 5)
+    assert r1.generated == _solo(model, params, 1, 11)
 
 
 def test_staggered_admission_matches_solo(small_model):
@@ -106,7 +106,7 @@ def test_max_new_tokens_budget_exact(small_model):
     _, model, params = small_model
     eng = _engine(model, params, slots=2)
     one = _req(0, 6, n=1)
-    assert eng.admit([one]) == 1
+    assert len(eng.admit([one])) == 1
     assert one.done and len(one.generated) == 1
     assert not eng.active        # budget met at prefill: slot stays free
 
@@ -132,17 +132,21 @@ def test_zero_budget_request_generates_nothing(small_model):
     _, model, params = small_model
     eng = _engine(model, params, slots=2)
     zero = _req(0, 5, n=0)
-    assert eng.admit([zero]) == 1
+    assert len(eng.admit([zero])) == 1
     assert zero.done and zero.generated == [] and not eng.active
 
 
-def test_prompt_too_long_evicted_with_error(small_model):
+def test_prompt_too_long_rejected_with_error(small_model):
     _, model, params = small_model
     eng = _engine(model, params, slots=2)
     big = _req(0, 60, n=10)       # 60 + 9 > max_len=64
     ok = _req(1, 5, n=3)
     results = eng.run([big, ok])
     assert big.error == "prompt_too_long"
+    # the accounting split: pre-prefill screening counts as a REJECTION
+    # (the request never held cache state), never as an eviction
+    assert eng.stats.rejections == 1
+    assert eng.stats.evictions == 0
     assert results[1] == _solo(model, params, 1, 5, 3)
 
 
@@ -161,7 +165,8 @@ def test_admission_hard_fault_evicts_instead_of_livelock(small_model):
     results = eng.run([bad, good], admit_fault_at=(0, fault))
     assert bad.error == "hard_fault:prefill"
     assert eng.stats.hard_faults == 1
-    assert eng.stats.evictions >= 1
+    assert eng.stats.evictions >= 1      # resident loss IS an eviction...
+    assert eng.stats.rejections == 0     # ...and never a rejection
     assert results[1] == _solo(model, params, 1, 7, 3)
 
 

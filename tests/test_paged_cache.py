@@ -82,9 +82,9 @@ def test_pool_alloc_free_accounting():
     # grow within the already-covered capacity is a no-op
     assert bp.try_grow(0, 12) and bp.slot_blocks(0) == 3
     assert bp.try_grow(0, 13) and bp.slot_blocks(0) == 4
-    assert bp.free_slot(0) == 4
+    assert len(bp.free_slot(0)) == 4     # unshared: all physically freed
     assert bp.blocks_used == 1 and bp.blocks_free == 7
-    assert bp.free_slot(0) == 0          # idempotent
+    assert bp.free_slot(0) == []         # idempotent
     bp.reset()
     assert bp.blocks_used == 0 and (bp.tables == bp.sentinel).all()
 
@@ -272,7 +272,10 @@ def test_pool_exhaustion_rejects_admission_with_error(small_model):
     big, small = _req(0, 40, 3), _req(1, 9, 3)
     results = eng.run([big, small])
     assert big.error == "oom:block_pool" and big.generated == []
-    assert eng.stats.evictions >= 1
+    # pre-prefill screening is a REJECTION, not an eviction: the request
+    # never held a slot or cache state (accounting-split satellite)
+    assert eng.stats.rejections >= 1
+    assert eng.stats.evictions == 0
     assert results[1] == _engine(model, params).run([_req(1, 9, 3)])[1]
 
 
@@ -398,17 +401,17 @@ def test_sampling_keys_independent_of_other_slot_activity(small_model):
     kw = dict(temperature=1.3, top_k=8, seed=11)
 
     late = _engine(model, params, **kw)
-    assert late.admit([_req(0, 6, 8)]) == 1     # slot 0 decodes...
+    assert len(late.admit([_req(0, 6, 8)])) == 1   # slot 0 decodes...
     for _ in range(3):
         late.step()                             # ...slot 1 sits idle
     a_late = _req(1, 9, 4)
-    assert late.admit([a_late]) == 1            # lands on slot 1
+    assert len(late.admit([a_late])) == 1       # lands on slot 1
     while late.active:
         late.step()
 
     early = _engine(model, params, **kw)
     a_early = _req(1, 9, 4)
-    assert early.admit([_req(0, 6, 8), a_early]) == 2
+    assert len(early.admit([_req(0, 6, 8), a_early])) == 2
     while early.active:
         early.step()
 

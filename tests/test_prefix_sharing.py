@@ -1,0 +1,531 @@
+"""Refcount-safe block lifecycle: prefix sharing / copy-on-write.
+
+Three layers of coverage:
+
+  * BlockPool property tests — alloc -> share -> COW -> evict round trips
+    in random order never double-free or leak a block, and
+    ``blocks_free + blocks_used == num_blocks`` with refcounts exactly
+    equal to table references at every point (``check_invariants``);
+  * PrefixIndex unit tests — chain matching, the partial-tail COW case,
+    the ``len(prompt) - 1`` cap, and purge-on-free;
+  * engine equivalence — greedy streams from the prefix-sharing engine
+    are byte-identical to the unshared paged engine (itself dense-equal),
+    including under injected faults (prefill and decode), for MLA, and
+    across fault-driven eviction of one sharer.  Positions matter: the
+    suffix prefill computes rotary offsets and causal masks from the true
+    logical position, so any off-by-prefix bug shows up as divergence.
+
+Plus the accounting satellites: the rejections/evictions split, fixed
+``utilization`` (allocated-token denominator), head-of-line lookahead,
+and the fault_at re-arm on empty steps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, scaled_down
+from repro.core import ABFTConfig, FaultSpec, Scheme
+from repro.models import ModelFault, build_model
+from repro.serve.engine import RecoveryPolicy, Request, ServeEngine
+from repro.serve.paged_cache import (
+    BlockPool,
+    PoolExhausted,
+    PrefixIndex,
+    blocks_for,
+)
+
+ABFT = ABFTConfig(scheme=Scheme.AUTO, use_pallas=False)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = scaled_down(get_config("llama3.2-1b"), n_layers=2)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def mla_model():
+    cfg = scaled_down(get_config("deepseek-v3-671b"), n_layers=2)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(2), dtype=jnp.float32)
+    return cfg, model, params
+
+
+def _engine(model, params, slots=3, max_len=64, block_size=16, **kw):
+    return ServeEngine(model, params, slots=slots, max_len=max_len,
+                       abft=ABFT, dtype=jnp.float32, cache_kind="paged",
+                       block_size=block_size, **kw)
+
+
+TPL = np.arange(1, 41, dtype=np.int32)          # 40-token shared template
+
+
+def _templated(n=8):
+    """Template + unique tail, with staggered budgets so lifetimes
+    overlap (sharing needs a live sharer holding the template blocks)."""
+    out = []
+    for i in range(n):
+        tail = (100 + 7 * i + np.arange(1 + i % 3, dtype=np.int32)) \
+            % 250 + 1
+        out.append(Request(uid=i,
+                           prompt=np.concatenate([TPL, tail.astype(np.int32)]),
+                           max_new_tokens=4 + (i * 3) % 6))
+    return out
+
+
+# ================================================================ BlockPool
+
+def test_refcount_share_and_last_reference_free():
+    bp = BlockPool(num_blocks=6, block_size=4, slots=3, table_width=4)
+    assert bp.try_alloc(0, 10)                    # 3 blocks
+    owner = [int(b) for b in bp.tables[0, :3]]
+    # slot 1 aliases slot 0's first two blocks + one fresh
+    assert bp.try_admit_prefix(1, 9, owner[:2])
+    assert bp.ref_of(owner[0]) == 2 and bp.ref_of(owner[1]) == 2
+    assert bp.blocks_shared == 2
+    assert bp.blocks_used == 4                    # 3 + 1 fresh
+    bp.check_invariants()
+    # evicting the ORIGINAL owner must not free the shared blocks
+    freed = bp.free_slot(0)
+    assert set(freed) == {owner[2]}               # only the unshared one
+    assert bp.ref_of(owner[0]) == 1
+    assert bp.blocks_used == 3 and bp.blocks_shared == 0
+    bp.check_invariants()
+    # last reference drops -> physically freed
+    freed = bp.free_slot(1)
+    assert set(freed) >= {owner[0], owner[1]}
+    assert bp.blocks_used == 0
+    bp.check_invariants()
+
+
+def test_cow_redirects_shared_block_only():
+    bp = BlockPool(num_blocks=5, block_size=4, slots=2, table_width=3)
+    assert bp.try_alloc(0, 6)                     # blocks 0..1 of slot 0
+    shared = [int(b) for b in bp.tables[0, :2]]
+    assert bp.try_admit_prefix(1, 7, shared)      # full alias, no fresh
+    # the tail block is shared -> COW redirects slot 1's entry
+    pair = bp.try_cow(1, 1)
+    assert pair is not None
+    src, dst = pair
+    assert src == shared[1] and dst != src
+    assert int(bp.tables[1, 1]) == dst and int(bp.tables[0, 1]) == src
+    assert bp.ref_of(src) == 1 and bp.ref_of(dst) == 1
+    # exclusively owned block: no copy needed
+    assert bp.try_cow(1, 1) is None
+    bp.check_invariants()
+    # COW with an empty free list raises (callers budget the block)
+    bp2 = BlockPool(num_blocks=3, block_size=4, slots=2, table_width=2)
+    assert bp2.try_alloc(0, 8)                    # 2 of 3 blocks
+    assert bp2.try_admit_prefix(1, 5, [int(bp2.tables[0, 0])])
+    assert bp2.blocks_free == 0                   # fresh tail took the last
+    with pytest.raises(PoolExhausted):
+        bp2.try_cow(1, 0)
+    bp2.check_invariants()
+
+
+def test_pool_random_lifecycle_never_leaks_or_double_frees():
+    """Property test: random alloc/share/COW/grow/evict round trips keep
+    refcounts == table references and the free-list disjointness at every
+    step; draining at the end returns every block exactly once."""
+    rng = np.random.default_rng(0xB10C)
+    bp = BlockPool(num_blocks=12, block_size=4, slots=5, table_width=6)
+    for _ in range(400):
+        op = rng.choice(["alloc", "share", "cow", "grow", "free"])
+        if op == "alloc":
+            empties = [s for s in range(bp.slots) if bp.slot_blocks(s) == 0]
+            if empties:
+                bp.try_alloc(int(rng.choice(empties)),
+                             int(rng.integers(1, 20)))
+        elif op == "share":
+            live = [s for s in range(bp.slots) if bp.slot_blocks(s) > 0]
+            empties = [s for s in range(bp.slots) if bp.slot_blocks(s) == 0]
+            if live and empties:
+                src = int(rng.choice(live))
+                k = int(rng.integers(1, bp.slot_blocks(src) + 1))
+                shared = [int(b) for b in bp.tables[src, :k]]
+                lo = (k - 1) * bp.block_size + 1
+                hi = bp.table_width * bp.block_size
+                bp.try_admit_prefix(int(rng.choice(empties)),
+                                    int(rng.integers(lo, hi + 1)), shared)
+        elif op == "cow":
+            live = [s for s in range(bp.slots) if bp.slot_blocks(s) > 0]
+            if live:
+                s = int(rng.choice(live))
+                try:
+                    bp.try_cow(s, int(rng.integers(0, bp.slot_blocks(s))))
+                except PoolExhausted:
+                    pass
+        elif op == "grow":
+            live = [s for s in range(bp.slots) if bp.slot_blocks(s) > 0]
+            if live:
+                s = int(rng.choice(live))
+                bp.try_grow(s, bp.capacity_tokens(s)
+                            + int(rng.integers(1, 5)))
+        else:
+            bp.free_slot(int(rng.integers(0, bp.slots)))
+        bp.check_invariants()
+    for s in range(bp.slots):
+        bp.free_slot(s)
+    bp.check_invariants()
+    assert bp.blocks_used == 0 and bp.blocks_free == bp.num_blocks
+
+
+# ================================================================ PrefixIndex
+
+def test_index_match_register_and_purge():
+    bp = BlockPool(num_blocks=8, block_size=4, slots=2, table_width=6)
+    idx = PrefixIndex(4)
+    prompt = np.arange(1, 12, dtype=np.int32)     # 11 tokens: 2 full + 3
+    assert bp.try_alloc(0, len(prompt))
+    idx.add(prompt, bp.tables[0])
+    row = [int(b) for b in bp.tables[0, :3]]
+
+    # same template, different tail: 2 full blocks + partial lead of 3
+    other = np.concatenate([prompt[:10], np.array([99, 98], np.int32)])
+    m = idx.match(other)
+    assert m.shared_ids == row and m.partial
+    assert m.match_len == 10                      # 8 full + 2 common tail
+
+    # identical prompt: capped at len - 1 so logits still come from a
+    # real suffix token
+    m = idx.match(prompt)
+    assert m.match_len == len(prompt) - 1 and m.partial
+
+    # divergence inside the first block: no match at all
+    div = prompt.copy()
+    div[2] = 77
+    m = idx.match(div)
+    assert m.shared_ids == [] and m.match_len == 0
+
+    # physically freeing the blocks purges every entry
+    freed = bp.free_slot(0)
+    idx.purge(freed)
+    m = idx.match(other)
+    assert m.shared_ids == [] and m.match_len == 0
+
+
+def test_index_block_aligned_full_entry_seeds_partial():
+    """A block-aligned cached prompt matched by an identical prompt: the
+    cap forces the last full block into a PARTIAL share (COW copy +
+    recompute of one token)."""
+    bp = BlockPool(num_blocks=4, block_size=4, slots=2, table_width=4)
+    idx = PrefixIndex(4)
+    prompt = np.arange(1, 9, dtype=np.int32)      # exactly 2 blocks
+    assert bp.try_alloc(0, len(prompt))
+    idx.add(prompt, bp.tables[0])
+    m = idx.match(prompt)
+    assert m.match_len == 7 and m.partial
+    assert m.full_blocks == 1
+    assert m.shared_ids == [int(bp.tables[0, 0]), int(bp.tables[0, 1])]
+
+
+# ================================================================ engine
+
+def _run_pair(model, params, reqs_fn, **run_kw):
+    base = _engine(model, params)
+    r_base = base.run(reqs_fn(), **run_kw)
+    sh = _engine(model, params, prefix_sharing=True)
+    r_sh = sh.run(reqs_fn(), **run_kw)
+    return base, r_base, sh, r_sh
+
+
+def test_shared_streams_byte_identical_to_unshared(small_model):
+    _, model, params = small_model
+    base, r_base, sh, r_sh = _run_pair(model, params, _templated)
+    assert r_base == r_sh
+    assert sh.stats.prefix_tokens_shared > 0      # sharing actually fired
+    assert sh.stats.blocks_shared_peak > 0
+    assert sh.stats.blocks_used_mean < base.stats.blocks_used_mean
+    assert sh.pool.blocks_used == 0               # drained clean
+    sh.pool.check_invariants()
+    assert sh.cache_stats()["prefix_hit_rate"] > 0.2
+
+
+def test_shared_streams_survive_decode_fault(small_model):
+    """ABFT detect->recompute with live sharers: host tables/refcounts
+    stay frozen across the attempt/retry window, so the recovered streams
+    still match the unshared engine byte for byte."""
+    _, model, params = small_model
+    fault = ModelFault.at(1, "mlp_down", FaultSpec.value(0, 2, 1e4))
+    base, r_base, sh, r_sh = _run_pair(
+        model, params, _templated, fault_at=(4, fault))
+    assert sh.stats.faults_detected >= 1 and sh.stats.retries >= 1
+    assert sh.stats.hard_faults == 0
+    assert sh.stats.prefix_tokens_shared > 0
+    assert r_base == r_sh
+
+
+def test_shared_streams_survive_admission_fault(small_model):
+    """A faulty prefill of a SHARING admission batch retries from the
+    pre-admission pool (which already contains the COW copies)."""
+    _, model, params = small_model
+    fault = ModelFault.at(1, "mlp_down", FaultSpec.value(0, 2, 1e4))
+    base, r_base, sh, r_sh = _run_pair(
+        model, params, _templated, admit_fault_at=(4, fault))
+    assert sh.stats.faults_detected >= 1
+    assert sh.stats.hard_faults == 0
+    assert sh.stats.prefix_tokens_shared > 0
+    assert r_base == r_sh
+
+
+def test_mixed_shared_and_unique_batch_matches_unshared(small_model):
+    """An admission batch mixing sharers with UNIQUE prompts: the unique
+    rows ride the suffix path with prefix_lens == 0 (gathered-KV
+    attention over extra fully-masked keys), which must stay bit-exact
+    with the from-zero prefill — masked contributions are exact zeros."""
+    _, model, params = small_model
+
+    def reqs():
+        out = []
+        for i in range(10):
+            if i % 3 == 2:
+                prompt = ((777 * (i + 1)
+                           + np.arange(9 + i, dtype=np.int64)) % 250
+                          + 1).astype(np.int32)
+            else:
+                tail = (100 + 7 * i + np.arange(1 + i % 3,
+                                                dtype=np.int32)) % 250 + 1
+                prompt = np.concatenate([TPL, tail.astype(np.int32)])
+            out.append(Request(uid=i, prompt=prompt,
+                               max_new_tokens=4 + (i * 3) % 6))
+        return out
+
+    base, r_base, sh, r_sh = _run_pair(model, params, reqs)
+    assert r_base == r_sh
+    assert sh.stats.prefix_tokens_shared > 0
+    sh.pool.check_invariants()
+
+
+def test_shared_mla_latent_matches_unshared(mla_model):
+    """deepseek MLA: sharing the paged latent pool (kv_lora + rope dims)
+    must reproduce the unshared streams exactly."""
+    _, model, params = mla_model
+
+    def reqs():
+        tpl = np.arange(1, 13, dtype=np.int32)
+        return [Request(uid=i,
+                        prompt=np.concatenate(
+                            [tpl, np.array([50 + i], np.int32)]),
+                        max_new_tokens=3 + i % 3)
+                for i in range(5)]
+
+    base = _engine(model, params, slots=2, max_len=32, block_size=8)
+    sh = _engine(model, params, slots=2, max_len=32, block_size=8,
+                 prefix_sharing=True)
+    assert base.run(reqs()) == sh.run(reqs())
+    assert sh.stats.prefix_tokens_shared > 0
+    assert sh.stats.cow_copies > 0                # 12 % 8 != 0: COW tail
+
+
+def test_identical_prompt_shares_via_cow(small_model):
+    """Two identical prompts: the second aliases the first's blocks and
+    COWs the tail, prefilling only ONE suffix token — stream unchanged."""
+    _, model, params = small_model
+    prompt = np.arange(1, 21, dtype=np.int32)     # 20 tokens, bs 16
+    a = Request(uid=0, prompt=prompt, max_new_tokens=8)
+    b = Request(uid=1, prompt=prompt.copy(), max_new_tokens=4)
+    sh = _engine(model, params, slots=2, prefix_sharing=True)
+    assert len(sh.admit([a])) == 1
+    sh.step()
+    assert len(sh.admit([b])) == 1
+    assert sh.stats.cow_copies == 1               # partial tail copied
+    assert sh.stats.prefix_tokens_shared == 19    # capped at len - 1
+    while sh.active:
+        sh.step()
+    solo = _engine(model, params, slots=1).run(
+        [Request(uid=1, prompt=prompt.copy(), max_new_tokens=4)])
+    assert b.generated == solo[1]
+    sh.pool.check_invariants()
+
+
+def test_evicting_one_sharer_preserves_the_other(small_model):
+    """Growth exhaustion evicts ONE sharer mid-decode: its references
+    drop, the shared template blocks stay resident for the survivor, the
+    pool invariant holds, and the survivor's stream matches solo."""
+    _, model, params = small_model
+    tpl = np.arange(1, 17, dtype=np.int32)        # exactly one 16-block x2
+    a = Request(uid=0, prompt=tpl, max_new_tokens=10)
+    b = Request(uid=1, prompt=np.concatenate([tpl, np.array([99], np.int32)]),
+                max_new_tokens=10)
+    eng = _engine(model, params, slots=2, max_len=32, block_size=8,
+                  num_blocks=5, prefix_sharing=True)
+    # staggered admission so b can match a's registered blocks: a holds
+    # 2 template blocks; b aliases both and owns 1 for its tail; both
+    # grow during decode until the pool runs dry and ONE is evicted
+    assert len(eng.admit([a])) == 1
+    eng.step()
+    assert len(eng.admit([b])) == 1
+    assert eng.stats.prefix_tokens_shared == 16
+    assert eng.pool.blocks_shared == 2
+    results = {}
+    while eng.active:
+        eng.step()
+    for r in (a, b):
+        results[r.uid] = r.generated
+    errs = {r.uid: r.error for r in (a, b)}
+    assert sorted(errs.values(), key=str) == [None, "oom:kv_blocks"]
+    eng.pool.check_invariants()
+    assert eng.pool.blocks_used == 0              # drained at the end
+    assert eng.stats.evictions == 1 and eng.stats.rejections == 0
+    ok = a if a.error is None else b
+    solo = ServeEngine(model, params, slots=1, max_len=32, abft=ABFT,
+                       dtype=jnp.float32).run(
+        [Request(uid=ok.uid, prompt=ok.prompt.copy(),
+                 max_new_tokens=10)])
+    assert results[ok.uid] == solo[ok.uid]
+
+
+def test_hard_decode_fault_evicts_sharers_without_corruption(small_model):
+    """A persistent decode fault evicts every active sharer: refcounts
+    drain to zero, the free list gets every block back exactly once, and
+    the engine serves the next (templated) request from a clean pool."""
+    _, model, params = small_model
+    reqs = _templated(4)
+    later = Request(uid=99, prompt=reqs[0].prompt.copy(), max_new_tokens=3)
+    eng = _engine(model, params, prefix_sharing=True,
+                  policy=RecoveryPolicy(max_retries=0))
+    fault = ModelFault.at(1, "mlp_down", FaultSpec.value(0, 2, 1e4))
+    results = eng.run(reqs + [later], fault_at=(2, fault))
+    assert eng.stats.hard_faults >= 1
+    eng.pool.check_invariants()
+    assert eng.pool.blocks_used == 0
+    solo = ServeEngine(model, params, slots=1, max_len=64, abft=ABFT,
+                       dtype=jnp.float32).run(
+        [Request(uid=99, prompt=later.prompt.copy(), max_new_tokens=3)])
+    assert results[99] == solo[99]
+
+
+def test_hybrid_and_encdec_models_refuse_prefix_sharing(small_model):
+    cfg = scaled_down(get_config("jamba-v0.1-52b"))
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(1), dtype=jnp.float32)
+    assert not model.supports_prefix_sharing
+    with pytest.raises(ValueError, match="prefix_sharing"):
+        _engine(model, params, slots=2, max_len=32, block_size=8,
+                prefix_sharing=True)
+    # and sharing requires the paged cache
+    _, lmodel, lparams = small_model
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(lmodel, lparams, slots=2, max_len=32, abft=ABFT,
+                    dtype=jnp.float32, prefix_sharing=True)
+
+
+# ================================================================ accounting
+
+def test_utilization_uses_allocated_denominator(small_model):
+    """The cache_stats fix: paged utilization divides live logical tokens
+    by ALLOCATED tokens (blocks_used * block_size), making internal
+    fragmentation visible instead of hiding it behind pool capacity."""
+    _, model, params = small_model
+    eng = _engine(model, params, slots=2, block_size=16)
+    req = Request(uid=0, prompt=np.arange(1, 21, dtype=np.int32),
+                  max_new_tokens=8)
+    assert len(eng.admit([req])) == 1
+    s = eng.cache_stats()
+    assert s["blocks_used"] == 2 and s["tokens_allocated"] == 32
+    assert s["active_tokens"] == 20
+    assert s["utilization"] == pytest.approx(20 / 32)
+    assert s["fragmentation"] == pytest.approx(12 / 32)
+    assert s["blocks_shared"] == 0
+    assert {"utilization", "fragmentation", "blocks_shared",
+            "prefix_hit_rate"} <= set(s)
+
+
+def test_blocks_shared_visible_mid_flight(small_model):
+    _, model, params = small_model
+    prompt = np.arange(1, 33, dtype=np.int32)     # 2 full 16-blocks
+    eng = _engine(model, params, slots=2, prefix_sharing=True)
+    assert len(eng.admit([Request(uid=0, prompt=prompt,
+                                  max_new_tokens=6)])) == 1
+    eng.step()
+    assert len(eng.admit([Request(uid=1, prompt=prompt.copy(),
+                                  max_new_tokens=4)])) == 1
+    s = eng.cache_stats()
+    assert s["blocks_shared"] >= 1
+    assert s["prefix_hit_rate"] > 0
+    # sharing can push utilization past 1.0: several slots count the same
+    # allocated block — that excess IS the sharing win
+    assert s["utilization"] > 0.5
+
+
+# ================================================================ HOL / run()
+
+def test_lookahead_admits_small_request_behind_deferred_big(small_model):
+    """Head-of-line fix: a transiently-deferred large prompt no longer
+    stalls a small request behind it, and still completes later without
+    error once decode frees its blocks."""
+    _, model, params = small_model
+    eng = _engine(model, params, slots=2, num_blocks=5)
+    c = Request(uid=0, prompt=np.arange(1, 33, dtype=np.int32),
+                max_new_tokens=4)                 # 2 blocks, grows to 3
+    assert len(eng.admit([c])) == 1
+    big = Request(uid=1, prompt=np.arange(1, 50, dtype=np.int32),
+                  max_new_tokens=4)               # needs 4 > 3 free
+    small = Request(uid=2, prompt=np.arange(1, 11, dtype=np.int32),
+                    max_new_tokens=3)             # fits right now
+    pending = [big, small]
+    consumed = eng.admit(pending)
+    assert consumed == [small]                    # lookahead bypass
+    assert pending == [big]                       # head stays queued
+    while pending or eng.active:
+        eng.admit(pending)
+        eng.step()
+    assert big.error is None and len(big.generated) == 4
+    solo = ServeEngine(model, params, slots=1, max_len=64, abft=ABFT,
+                       dtype=jnp.float32).run(
+        [Request(uid=1, prompt=np.arange(1, 50, dtype=np.int32),
+                 max_new_tokens=4)])
+    assert big.generated == solo[1]
+
+
+def test_bypass_budget_reserves_blocks_for_deferred_head(small_model):
+    """Starvation bound: once the deferred head's bypass budget is spent,
+    later requests stop jumping the queue — freed blocks accumulate for
+    the head, which admits before any post-budget request."""
+    _, model, params = small_model
+    eng = _engine(model, params, slots=3, num_blocks=5, admit_lookahead=1)
+    c = Request(uid=0, prompt=np.arange(1, 33, dtype=np.int32),
+                max_new_tokens=4)
+    assert len(eng.admit([c])) == 1
+    big = Request(uid=1, prompt=np.arange(1, 50, dtype=np.int32),
+                  max_new_tokens=4)
+    b1 = Request(uid=2, prompt=np.arange(1, 11, dtype=np.int32),
+                 max_new_tokens=6)
+    b2 = Request(uid=3, prompt=np.arange(1, 11, dtype=np.int32),
+                 max_new_tokens=3)
+    pending = [big, b1, b2]
+    assert eng.admit(pending) == [b1]             # budget of 1: b1 only
+    assert eng.admit(pending) == []               # b2 reserved out
+    assert pending == [big, b2]
+    order = []
+    while pending or eng.active:
+        order += [r.uid for r in eng.admit(pending)]
+        eng.step()
+    assert order.index(1) < order.index(3)        # head admits before b2
+    assert big.error is None and len(big.generated) == 4
+
+
+def test_fault_at_rearms_on_step_with_no_active_slots(small_model):
+    """A campaign fault landing on a step where nothing decodes (the
+    whole admission batch finished at prefill) re-arms for the next real
+    step instead of silently dropping."""
+    _, model, params = small_model
+    eng = ServeEngine(model, params, slots=1, max_len=64, abft=ABFT,
+                      dtype=jnp.float32)
+    done_at_prefill = Request(uid=0, prompt=np.arange(1, 6, dtype=np.int32),
+                              max_new_tokens=1)
+    real = Request(uid=1, prompt=np.arange(1, 7, dtype=np.int32),
+                   max_new_tokens=4)
+    fault = ModelFault.at(1, "mlp_down", FaultSpec.value(0, 2, 1e4))
+    # step 0 has no active slots (uid 0 completed at admission)
+    results = eng.run([done_at_prefill, real], fault_at=(0, fault))
+    assert eng.stats.faults_detected == 1         # injection was NOT lost
+    assert eng.stats.retries >= 1 and eng.stats.hard_faults == 0
+    solo = ServeEngine(model, params, slots=1, max_len=64, abft=ABFT,
+                       dtype=jnp.float32).run(
+        [Request(uid=1, prompt=np.arange(1, 7, dtype=np.int32),
+                 max_new_tokens=4)])
+    assert results[1] == solo[1]
