@@ -1,0 +1,102 @@
+"""Schema regression gate for the serving benchmark JSON.
+
+CI runs the benchmark smoke job and then this script: a freshly produced
+summary must contain every key path the committed baseline
+(``BENCH_serve.json``) contains, plus basic sanity invariants (percentile
+ordering, positive throughput, present stream-equality verdicts).  A
+refactor that silently drops a reported metric — the way the perf
+trajectory would quietly stop being tracked — fails the job instead of
+shipping.
+
+Mix coverage may differ (the smoke job runs a subset of mixes); the gate
+compares the *per-cell structure*, not which cells exist.
+
+  PYTHONPATH=src python benchmarks/check_bench_schema.py new.json \
+      [baseline.json]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+# cell keys that only exist when the model supports the feature — their
+# absence in a run on e.g. a hybrid arch is not a schema regression
+_CONDITIONAL = {
+    "paged_shared", "shared_matches_dense", "shared_blocks_frac",
+    "paged_chunked", "chunked_matches_dense", "chunked_itl_p99_frac",
+    "chunked_tput_frac",
+}
+
+
+def key_paths(node, prefix=()) -> set:
+    """All dict key paths in a JSON tree; list elements merge under one
+    wildcard step so cell counts don't matter."""
+    paths = set()
+    if isinstance(node, dict):
+        for k, v in node.items():
+            paths.add(prefix + (k,))
+            paths |= key_paths(v, prefix + (k,))
+    elif isinstance(node, list):
+        for item in node:
+            paths |= key_paths(item, prefix + ("[]",))
+    return paths
+
+
+def check(new: dict, baseline: dict) -> list:
+    errors = []
+    missing = sorted(
+        key_paths(baseline) - key_paths(new),
+        key=lambda p: (len(p), p))
+    missing = [p for p in missing if not (set(p) & _CONDITIONAL)]
+    for p in missing:
+        errors.append(f"missing key path: {'.'.join(p)}")
+
+    for i, cell in enumerate(new.get("cells", [])):
+        where = f"cells[{i}] ({cell.get('mix')}/{cell.get('scheme')})"
+        for kind, payload in cell.items():
+            if not isinstance(payload, dict):
+                continue
+            if payload.get("tokens_per_s", 1) <= 0:
+                errors.append(f"{where}.{kind}: tokens_per_s <= 0")
+            for lat in ("ttft_ms", "itl_ms"):
+                pct = payload.get(lat)
+                if pct is None:
+                    continue
+                if not (pct["p50"] <= pct["p95"] <= pct["p99"]):
+                    errors.append(
+                        f"{where}.{kind}.{lat}: percentiles not ordered "
+                        f"({pct})")
+        for verdict in ("paged_matches_dense", "chunked_matches_dense",
+                        "shared_matches_dense"):
+            if cell.get(verdict) is False:
+                errors.append(f"{where}: {verdict} is False — greedy "
+                              "streams diverged")
+    if not new.get("cells"):
+        errors.append("no cells in summary")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    if not argv:
+        print(__doc__)
+        return 2
+    new_path = argv[0]
+    base_path = argv[1] if len(argv) > 1 else "BENCH_serve.json"
+    with open(new_path) as fh:
+        new = json.load(fh)
+    with open(base_path) as fh:
+        baseline = json.load(fh)
+    errors = check(new, baseline)
+    if errors:
+        for e in errors:
+            print(f"SCHEMA REGRESSION: {e}")
+        return 1
+    print(f"schema OK: {new_path} covers {base_path} "
+          f"({len(new['cells'])} cells)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,12 +1,14 @@
-"""Serving throughput sweep: tokens/s under continuous batching, over
-slots x prompt-length mix x ABFT scheme x cache kind (ROADMAP open item,
-paper §6 deployment scenario).
+"""Serving throughput sweep: tokens/s AND latency tails under continuous
+batching, over slots x prompt-length mix x ABFT scheme x cache kind
+(ROADMAP open item, paper §6 deployment scenario).
 
 For each cell the engine serves a fixed request set end to end and we
-report wall-clock tokens/s plus ``cache_stats()`` — the paged cells size
-their pool to the traffic's peak *working set* (not slots × max_len), so
-a skewed prompt mix shows the paged cache allocating a fraction of the
-dense bytes while producing the identical greedy token streams.
+report wall-clock tokens/s, p50/p95/p99 TTFT and inter-token-latency
+percentiles (every generated token is wall-clock stamped by the engine),
+plus ``cache_stats()`` — the paged cells size their pool to the traffic's
+peak *working set* (not slots × max_len), so a skewed prompt mix shows
+the paged cache allocating a fraction of the dense bytes while producing
+the identical greedy token streams.
 
 The ``templated`` mix models system-prompt traffic: every request opens
 with the same template and differs only in a short tail.  Its cells add
@@ -14,12 +16,26 @@ a ``paged_shared`` engine (refcounted prefix sharing + copy-on-write):
 streams must stay byte-identical to dense AND unshared-paged while the
 per-step mean ``blocks_used`` drops ≥2x (the shared template is resident
 ONCE, chained through overlapping sharers, instead of once per slot).
+
+The ``long_prompt`` mix exposes the admission stall: mostly-short
+traffic with rare near-max-length prompts.  Unchunked engines prefill a
+long prompt in ONE model call on the decode path, so every resident
+stream's inter-token gap spikes — visible as the p99 ITL.  The
+``paged_chunked`` cells (chunked-prefill scheduler, ``chunk_tokens``
+step budget) bound the co-scheduled prefill work per step; the
+acceptance metric is ``chunked_itl_p99_frac`` (chunked p99 ITL over the
+admit-time-prefill baseline) at equal throughput with byte-identical
+streams.  Chunked cells also report the per-step intensity-guided
+``selection`` summary (mixed vs decode-only step compositions and the
+schemes the selector picked for them).
+
 Every cell reports the fixed occupancy accounting — ``utilization``
 against allocated tokens, ``fragmentation``, ``blocks_shared``,
 ``prefix_hit_rate`` — plus the ``rejections`` / ``evictions`` split.
 
   PYTHONPATH=src python benchmarks/serve_throughput.py \
-      [--quick] [--out results.json] [--slots 2,4] [--new-tokens 8]
+      [--quick] [--out results.json] [--slots 2,4] [--new-tokens 8] \
+      [--mixes uniform_short,long_prompt] [--chunk-tokens 16]
 
 Wall-clock numbers are CPU-measured (this container); they order schemes
 by redundant-work cost, not by TPU speed — see benchmarks/common.py.
@@ -28,6 +44,7 @@ by redundant-work cost, not by TPU speed — see benchmarks/common.py.
 from __future__ import annotations
 
 import argparse
+import collections
 import json
 import time
 
@@ -53,6 +70,10 @@ MIXES = {
     # (length, weight) pairs; lengths are fractions of max_len
     "uniform_short": [(0.15, 1.0)],
     "skewed": [(0.08, 3.0), (0.75, 1.0)],   # mostly short + one long tail
+    # mostly short with periodic near-max prompts arriving mid-flight:
+    # the admission-stall / chunked-prefill showcase (the long prefill
+    # is what spikes resident streams' p99 ITL)
+    "long_prompt": "long_prompt",
     # system-prompt traffic: shared template + short unique tail (the
     # prefix-sharing best case; worst case for unshared paging)
     "templated": "templated",
@@ -66,6 +87,26 @@ TEMPLATE_FRAC = 0.75
 
 def _requests(mix, n: int, max_len: int, new_tokens: int) -> tuple:
     rng = np.random.default_rng(0)
+    if mix == "long_prompt":
+        # deterministic arrival pattern: short prompts with LONG decode
+        # budgets get resident first, then every 4th request is a
+        # near-max prompt whose admission (or chunk stream) lands while
+        # they are still decoding — the staggered budgets guarantee the
+        # overlap that makes the admission stall visible in their
+        # inter-token gaps
+        short = max(2, int(0.04 * max_len))
+        long = max(short + 1, int(0.88 * max_len))
+        reqs, lens = [], []
+        for i in range(n):
+            if i % 4 == 2:
+                L, budget = long, new_tokens
+            else:
+                L, budget = short, 3 * new_tokens + i % 3
+            reqs.append(Request(
+                uid=i, prompt=(1 + np.arange(L, dtype=np.int32) % 250),
+                max_new_tokens=budget))
+            lens.append(L)
+        return reqs, lens
     if mix == "templated":
         # one fixed template, per-request tails of 1-4 tokens, and
         # staggered decode budgets — overlap is what lets later requests
@@ -101,13 +142,49 @@ def _pool_blocks(lens, slots, new_tokens, block_size) -> int:
     return max(1, sum(need[:slots]))
 
 
+def _percentiles_ms(samples) -> dict:
+    """p50/p95/p99 of a latency sample list, in milliseconds."""
+    if not samples:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    xs = np.asarray(samples, np.float64) * 1e3
+    return {"p50": float(np.percentile(xs, 50)),
+            "p95": float(np.percentile(xs, 95)),
+            "p99": float(np.percentile(xs, 99))}
+
+
+def _latency_stats(reqs, t0: float) -> dict:
+    """TTFT (first stamped token minus batch-arrival t0) and pooled
+    inter-token gaps, from the engine's per-token wall-clock stamps."""
+    ttft = [r.times[0] - t0 for r in reqs if r.times]
+    itl = [b - a for r in reqs for a, b in zip(r.times, r.times[1:])]
+    return {"ttft_ms": _percentiles_ms(ttft), "itl_ms": _percentiles_ms(itl)}
+
+
+def _selection_summary(stats: EngineStats) -> dict:
+    """Condense the per-step (intensity, scheme) trace: how often the
+    step composition was mixed vs decode-only, the mean intensity of
+    each, and which schemes the selector picked."""
+    tr = stats.selection_trace
+    mixed = [e["intensity"] for e in tr if e["decode"] and e["prefill"]]
+    dec = [e["intensity"] for e in tr if e["decode"] and not e["prefill"]]
+    return {
+        "mixed_steps": stats.mixed_steps,
+        "decode_only_steps": stats.decode_only_steps,
+        "prefill_only_steps": stats.prefill_only_steps,
+        "intensity_mixed_mean": float(np.mean(mixed)) if mixed else 0.0,
+        "intensity_decode_mean": float(np.mean(dec)) if dec else 0.0,
+        "schemes": dict(collections.Counter(e["scheme"] for e in tr)),
+    }
+
+
 def run_cell(model, params, reqs, *, slots, max_len, abft, cache_kind,
              num_blocks=None, block_size=16,
-             prefix_sharing=False) -> dict:
+             prefix_sharing=False, chunk_tokens=None) -> dict:
     eng = ServeEngine(
         model, params, slots=slots, max_len=max_len, abft=abft,
         dtype=jnp.float32, cache_kind=cache_kind, block_size=block_size,
-        num_blocks=num_blocks, prefix_sharing=prefix_sharing)
+        num_blocks=num_blocks, prefix_sharing=prefix_sharing,
+        chunk_tokens=chunk_tokens)
     # warm-up pass: serve a throwaway copy of the same traffic so jit
     # compilation (which dominates cold wall time on CPU) is excluded
     # from the reported tokens/s; shapes repeat, so the timed run below
@@ -125,7 +202,7 @@ def run_cell(model, params, reqs, *, slots, max_len, abft, cache_kind,
     results = eng.run([r for r in reqs])
     dt = time.perf_counter() - t0
     stats = eng.cache_stats()
-    return {
+    cell = {
         "tokens": eng.stats.tokens,
         "tokens_per_s": eng.stats.tokens / dt,
         "wall_s": dt,
@@ -143,8 +220,12 @@ def run_cell(model, params, reqs, *, slots, max_len, abft, cache_kind,
         "blocks_used_peak": eng.stats.blocks_used_peak,
         "blocks_shared_peak": eng.stats.blocks_shared_peak,
         "cow_copies": eng.stats.cow_copies,
+        "prefill_chunks": eng.stats.prefill_chunks,
+        "selection": _selection_summary(eng.stats),
         "streams": {r.uid: r.generated for r in reqs},
     }
+    cell.update(_latency_stats(reqs, t0))
+    return cell
 
 
 def main(argv=None) -> int:
@@ -153,9 +234,20 @@ def main(argv=None) -> int:
     ap.add_argument("--n-layers", type=int, default=2)
     ap.add_argument("--slots", default="2,4")
     ap.add_argument("--max-len", type=int, default=64)
-    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=6)
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="step token budget of the paged_chunked cells "
+                         "(0 = auto: max(16, mix max_len // 4))")
+    ap.add_argument("--long-max-len", type=int, default=768,
+                    help="cache depth of the long_prompt mix (the "
+                         "admission stall needs prompts long enough that "
+                         "prefill cost is token-dominated, not "
+                         "dispatch-dominated)")
+    ap.add_argument("--mixes", default=None,
+                    help="comma-separated subset of mixes to run "
+                         f"(default all: {','.join(MIXES)})")
     ap.add_argument("--quick", action="store_true",
                     help="one slot count, two schemes")
     ap.add_argument("--out", default=None, help="write JSON here (else stdout)")
@@ -170,27 +262,45 @@ def main(argv=None) -> int:
     if args.quick:
         slot_counts = slot_counts[:1]
         schemes = {k: schemes[k] for k in ("none", "intensity_guided")}
+    mixes = dict(MIXES)
+    if args.mixes:
+        names = [m.strip() for m in str(args.mixes).split(",") if m.strip()]
+        unknown = [m for m in names if m not in MIXES]
+        if unknown:
+            raise SystemExit(f"unknown mixes {unknown}; known: {list(MIXES)}")
+        mixes = {m: MIXES[m] for m in names}
 
     share_ok = model.supports_prefix_sharing
+    chunk_ok = model.supports_chunked_prefill
     cells = []
     for slots in slot_counts:
-        for mix_name, mix in MIXES.items():
+        for mix_name, mix in mixes.items():
             n_reqs = args.requests
             if mix_name == "templated":
                 # enough waves that the steady state (one resident
                 # template chained through overlapping sharers) dominates
                 # the cold-start wave of unshared copies
                 n_reqs = max(args.requests, 6 * slots)
+            mix_max_len = (max(args.max_len, args.long_max_len)
+                           if mix_name == "long_prompt" else args.max_len)
+            chunk_tokens = (args.chunk_tokens
+                            or max(16, mix_max_len // 4))
             reqs_proto, lens = _requests(
-                mix, n_reqs, args.max_len, args.new_tokens)
+                mix, n_reqs, mix_max_len, args.new_tokens)
             peak_new = max(r.max_new_tokens for r in reqs_proto)
             nb = _pool_blocks(lens, slots, peak_new, args.block_size)
             kinds = ["dense", "paged"]
             if share_ok:
                 kinds.append("paged_shared")
+            if chunk_ok:
+                kinds.append("paged_chunked")
             for scheme_name, abft in schemes.items():
                 row = {"slots": slots, "mix": mix_name,
                        "scheme": scheme_name,
+                       "max_len": mix_max_len,
+                       # the EFFECTIVE step budget the paged_chunked cell
+                       # ran with (the --chunk-tokens flag may be 0=auto)
+                       "chunk_tokens": chunk_tokens,
                        "prompt_lens": lens}
                 streams = {}
                 for kind in kinds:
@@ -199,11 +309,13 @@ def main(argv=None) -> int:
                             for r in reqs_proto]
                     cell = run_cell(
                         model, params, reqs, slots=slots,
-                        max_len=args.max_len, abft=abft,
+                        max_len=mix_max_len, abft=abft,
                         cache_kind="dense" if kind == "dense" else "paged",
                         block_size=args.block_size,
                         num_blocks=None if kind == "dense" else nb,
-                        prefix_sharing=(kind == "paged_shared"))
+                        prefix_sharing=(kind == "paged_shared"),
+                        chunk_tokens=(chunk_tokens
+                                      if kind == "paged_chunked" else None))
                     streams[kind] = cell.pop("streams")
                     row[kind] = cell
                 row["paged_matches_dense"] = (
@@ -226,6 +338,23 @@ def main(argv=None) -> int:
                         f" shared_blocks={row['shared_blocks_frac']:.2f}x "
                         f"hit={row['paged_shared']['prefix_hit_rate']:.2f} "
                         f"match={row['shared_matches_dense']}")
+                chunk_note = ""
+                if chunk_ok:
+                    # the chunked-prefill acceptance metrics: byte-equal
+                    # streams, equal-throughput p99 ITL vs the admit-time
+                    # -prefill paged baseline (the long_prompt mix is the
+                    # cell where the stall lives)
+                    row["chunked_matches_dense"] = (
+                        streams["dense"] == streams["paged_chunked"])
+                    row["chunked_itl_p99_frac"] = (
+                        row["paged_chunked"]["itl_ms"]["p99"]
+                        / max(row["paged"]["itl_ms"]["p99"], 1e-9))
+                    row["chunked_tput_frac"] = (
+                        row["paged_chunked"]["tokens_per_s"]
+                        / max(row["paged"]["tokens_per_s"], 1e-9))
+                    chunk_note = (
+                        f" chunked_itl_p99={row['chunked_itl_p99_frac']:.2f}x"
+                        f" match={row['chunked_matches_dense']}")
                 cells.append(row)
                 print(f"slots={slots} mix={mix_name:13s} "
                       f"scheme={scheme_name:16s} "
@@ -233,12 +362,14 @@ def main(argv=None) -> int:
                       f"paged={row['paged']['tokens_per_s']:8.1f} tok/s "
                       f"bytes={row['paged_bytes_frac']:.2f}x "
                       f"match={row['paged_matches_dense']}"
-                      + shared_note)
+                      + shared_note + chunk_note)
 
     summary = {
         "arch": args.arch, "n_layers": args.n_layers,
         "max_len": args.max_len, "requests": args.requests,
         "new_tokens": args.new_tokens, "block_size": args.block_size,
+        "chunk_tokens_flag": args.chunk_tokens,   # 0 = auto, see cells
+        "mixes": list(mixes),
         "backend": jax.default_backend(),
         "cells": cells,
     }

@@ -86,6 +86,29 @@ def roofline_time(
     )
 
 
+def step_gemm_dims(tokens: int, d_model: int, d_ff: int | None = None,
+                   dtype_bytes: int = 2,
+                   out_dtype_bytes: int | None = None) -> GemmDims:
+    """Representative GEMM of one *serving step*: ``tokens`` is the step's
+    actual token composition (resident decode tokens + co-scheduled
+    prefill-chunk tokens), the weight is the widest per-token projection
+    (``d_model x d_ff`` when an FFN exists, else ``d_model x d_model``).
+
+    The step composition — not the static phase — is what moves the
+    operating point between the memory-bound regime (decode-only steps,
+    ``m ~ batch``) and the compute-bound regime (mixed steps carrying a
+    prefill chunk, ``m ~ chunk_tokens``), so the intensity-guided
+    selector should be re-consulted with THESE dims every step (paper
+    §5.3 applied at serving time; the engine records the resulting
+    ``(intensity, scheme)`` trace in ``EngineStats``)."""
+    return GemmDims(
+        m=int(tokens), k=int(d_model), n=int(d_ff or d_model),
+        dtype_bytes=dtype_bytes,
+        out_dtype_bytes=(dtype_bytes if out_dtype_bytes is None
+                         else out_dtype_bytes),
+    )
+
+
 def aggregate_intensity(layers: list[GemmDims]) -> float:
     """Paper §3.2 'aggregate arithmetic intensity' of a network: total FLOPs
     across linear layers divided by total bytes across linear layers."""

@@ -49,6 +49,11 @@ def main(argv=None) -> int:
     ap.add_argument("--admit-lookahead", type=int, default=8,
                     help="bounded admission lookahead past a deferred "
                          "head request (HOL-blocking fix)")
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="chunked-prefill step token budget: decode "
+                         "tokens pack first, the remainder is filled "
+                         "with prompt chunks, so admission never stalls "
+                         "decode (attention-only models)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 samples per slot")
     ap.add_argument("--top-k", type=int, default=0)
@@ -76,6 +81,7 @@ def main(argv=None) -> int:
                          num_blocks=args.num_blocks,
                          prefix_sharing=args.prefix_sharing,
                          admit_lookahead=args.admit_lookahead,
+                         chunk_tokens=args.chunk_tokens,
                          temperature=args.temperature, top_k=args.top_k,
                          seed=args.seed)
     rng = np.random.default_rng(0)
@@ -105,6 +111,9 @@ def main(argv=None) -> int:
         "rejections": engine.stats.rejections,
         "prefix_hit_rate": engine.stats.prefix_hit_rate,
         "cow_copies": engine.stats.cow_copies,
+        "prefill_chunks": engine.stats.prefill_chunks,
+        "mixed_steps": engine.stats.mixed_steps,
+        "decode_only_steps": engine.stats.decode_only_steps,
         "errors": {r.uid: r.error for r in reqs if r.error},
         "cache": engine.cache_stats(),
     }))

@@ -163,37 +163,78 @@ def _slot_prefill_write(cache_leaf, new, slots, L):
     return cache_leaf.at[slots, :L].set(new.astype(cache_leaf.dtype))
 
 
+def _slot_prefill_write_at(cache_leaf, new, slots, starts, lengths):
+    """Write ``new`` (A, L, ...) into rows ``slots`` of the engine cache at
+    per-row start offsets: ``new[a, t]`` lands at position ``starts[a] + t``
+    for ``t < lengths[a]`` (the chunked-prefill resume path — earlier chunks
+    already occupy ``[0, starts[a])``).  Padding positions are routed past
+    the cache depth and dropped, so a bucketed pad near ``max_len`` can
+    never clamp backwards onto previously written chunks the way a
+    ``dynamic_update_slice`` would."""
+    S = cache_leaf.shape[1]
+    A, L = new.shape[0], new.shape[1]
+    t = jnp.arange(L, dtype=jnp.int32)
+    pos = starts[:, None].astype(jnp.int32) + t[None, :]
+    pos = jnp.where(t[None, :] < lengths[:, None], pos, S)   # drop padding
+    rows = jnp.broadcast_to(slots[:, None], (A, L))
+    return cache_leaf.at[rows, pos].set(
+        new.astype(cache_leaf.dtype), mode="drop")
+
+
 def _vec_positions(pos, B):
     """Normalize a decode cursor to a (B,) vector of positions."""
     return jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
 
 
 def gqa_prefill(x, p, cfg: ModelConfig, ctx: LayerCtx, positions, cache,
-                slots=None, lengths=None):
+                slots=None, lengths=None, starts=None):
     """Prefill: run full attention AND fill the cache.  cache: dict with
     'k','v' of shape (B, S_max, KV, hd).
 
     ``slots``/``lengths`` (continuous-batching path): x is the admission
     batch (A, L, D) padded to a common L; k/v rows are scattered into the
     engine cache rows ``slots`` and attention is masked per-row at
-    ``lengths`` so ragged prompts never attend into padding."""
+    ``lengths`` so ragged prompts never attend into padding.
+
+    ``starts`` (A,) int32 selects the RESUMABLE-CHUNK path (the dense-cache
+    mirror of the paged suffix prefill): x holds one mid-prompt chunk per
+    row, whose logical positions begin at ``starts[a]`` (``positions``
+    already carries the offset, so rotary embeddings match the monolithic
+    prefill bit for bit).  The chunk's k/v scatter in behind the already-
+    resident prefix and attention runs over the slot's cache rows (prefix
+    + fresh chunk) with a per-row causal ``q_offset`` and total-length key
+    masking — byte-identical streams to the unchunked engine are the
+    correctness contract."""
     B, L, _ = x.shape
     q, k, v, flag = _qkv(x, p, cfg, ctx, positions)
-    out = chunked_attention(q, k, v, causal=True, lengths=lengths)
+    if starts is None:
+        out = chunked_attention(q, k, v, causal=True, lengths=lengths)
+        if slots is None:
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+            }
+        else:
+            new_cache = {
+                "k": _slot_prefill_write(cache["k"], k, slots, L),
+                "v": _slot_prefill_write(cache["v"], v, slots, L),
+            }
+    else:
+        assert slots is not None, "chunked prefill needs slot targets"
+        new_cache = {
+            "k": _slot_prefill_write_at(cache["k"], k, slots, starts,
+                                        lengths),
+            "v": _slot_prefill_write_at(cache["v"], v, slots, starts,
+                                        lengths),
+        }
+        out = chunked_attention(
+            q, jnp.take(new_cache["k"], slots, axis=0),
+            jnp.take(new_cache["v"], slots, axis=0),
+            causal=True, q_offset=starts, lengths=starts + lengths)
     out = out.reshape(B, L, -1)
     out, f = dense(out, p["wo"], ctx, "attn_out")
-    if slots is None:
-        new_cache = {
-            "k": jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
-            "v": jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
-        }
-    else:
-        new_cache = {
-            "k": _slot_prefill_write(cache["k"], k, slots, L),
-            "v": _slot_prefill_write(cache["v"], v, slots, L),
-        }
     return out, new_cache, or_flags(flag, f)
 
 
@@ -428,19 +469,31 @@ def mla_forward(x, p, cfg: ModelConfig, ctx: LayerCtx, positions):
 
 
 def mla_prefill(x, p, cfg: ModelConfig, ctx: LayerCtx, positions, cache,
-                slots=None, lengths=None):
+                slots=None, lengths=None, starts=None):
+    """``starts``: resumable-chunk path (see gqa_prefill) — the chunk's
+    latents land behind the resident prefix rows and attention runs over
+    the slot's cache with per-row causal offsets."""
     B, L, _ = x.shape
     q_full, scale, f1 = _mla_q(x, p, cfg, ctx, positions)
     c_kv, k_pe, f2 = _mla_latent_kv(x, p, cfg, ctx, positions)
     latent = jnp.concatenate([c_kv, k_pe], axis=-1)
-    out, f3 = _mla_attend(
-        q_full, scale, latent, p, cfg, ctx, B, L, lengths=lengths)
-    if slots is None:
-        new_latent = jax.lax.dynamic_update_slice(
-            cache["latent"], latent.astype(cache["latent"].dtype),
-            (0, 0, 0))
+    if starts is None:
+        out, f3 = _mla_attend(
+            q_full, scale, latent, p, cfg, ctx, B, L, lengths=lengths)
+        if slots is None:
+            new_latent = jax.lax.dynamic_update_slice(
+                cache["latent"], latent.astype(cache["latent"].dtype),
+                (0, 0, 0))
+        else:
+            new_latent = _slot_prefill_write(
+                cache["latent"], latent, slots, L)
     else:
-        new_latent = _slot_prefill_write(cache["latent"], latent, slots, L)
+        assert slots is not None, "chunked prefill needs slot targets"
+        new_latent = _slot_prefill_write_at(
+            cache["latent"], latent, slots, starts, lengths)
+        out, f3 = _mla_attend(
+            q_full, scale, jnp.take(new_latent, slots, axis=0), p, cfg,
+            ctx, B, L, lengths=starts + lengths, q_offset=starts)
     return out, {"latent": new_latent}, or_flags(f1, f2, f3)
 
 

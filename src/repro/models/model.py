@@ -162,9 +162,10 @@ def apply_layer(
     attention KV lives in a (num_blocks, block_size, ...) pool shared
     across slots (serve/paged_cache.py) while mamba state stays per-slot.
     ``prefix_lens``: (B,) logical start of each row's tokens — the
-    prefix-sharing suffix prefill (paged attention layers only; SSM state
-    cannot be reconstructed from shared KV blocks, so sharing is gated
-    off for hybrid stacks at the engine).
+    prefix-sharing suffix prefill (paged) and the chunked-prefill resume
+    path (paged or dense).  Attention layers only: SSM recurrence state
+    is not a pure function of resident KV, so both are gated off for
+    hybrid stacks at the engine.
     Returns (x, new_cache, flag, aux)."""
     mixer, ffn, cross = tag.split(":")
     flags = []
@@ -193,10 +194,9 @@ def apply_layer(
                                cache["attn"], tables, lengths,
                                starts=prefix_lens)
             else:
-                assert prefix_lens is None, (
-                    "prefix sharing requires the paged cache")
                 a, nc, f = pre(h, lp["mixer"], cfg, ctx, positions,
-                               cache["attn"], slots=slots, lengths=lengths)
+                               cache["attn"], slots=slots, lengths=lengths,
+                               starts=prefix_lens)
             new_cache["attn"] = nc
         else:
             if tables is not None:
@@ -211,7 +211,8 @@ def apply_layer(
         # the paged engine uses the same per-slot paths and the block
         # tables are simply not forwarded
         assert prefix_lens is None, (
-            "prefix sharing cannot skip SSM recurrence state")
+            "prefix sharing / chunked prefill cannot resume the SSM "
+            "recurrence state mid-prompt")
         if mode == "full":
             a, f = mb.mamba_forward(h, lp["mixer"], cfg, ctx)
         elif mode == "prefill":
@@ -552,6 +553,19 @@ class Model:
             return False
         return not any(t.startswith("mamba") for t in layer_tags(cfg))
 
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """Chunked prefill resumes a prompt mid-sequence from resident
+        cache state.  Attention can: KV at positions < start is exactly
+        what a later chunk needs.  SSM layers cannot — the recurrence
+        state after ``start`` tokens is not re-enterable through the
+        prefill path — and encoder-decoder / vision stacks would redo
+        their per-request memory every chunk, so both are gated off.
+        (Same condition as prefix sharing, for the same underlying
+        reason: resident state must be a pure, resumable function of the
+        token prefix.)"""
+        return self.supports_prefix_sharing
+
     def copy_paged_blocks(self, cache, src, dst):
         """Functional device copy ``pool[dst[i]] <- pool[src[i]]`` on
         every paged attention leaf — the COW payload move.  Walks the
@@ -594,13 +608,15 @@ class Model:
         cache is a block pool (init_paged_cache) and attention KV
         scatters via the tables instead of dense rows.
 
-        Prefix-sharing path (``prefix_lens`` (A,) additionally given):
-        tokens hold only each row's UNSHARED suffix and ``lengths`` its
-        valid suffix length; row a's first token sits at logical position
-        ``prefix_lens[a]`` (0 for unshared rows).  Rotary offsets, causal
-        masks, and cache scatter targets are all computed from the true
-        logical position — the shared prefix KV already resident in the
-        pool is what the suffix attends to."""
+        Mid-sequence path (``prefix_lens`` (A,) additionally given, paged
+        OR dense): tokens hold only each row's tail — the unshared suffix
+        under prefix sharing, or one resumable chunk under the chunked-
+        prefill scheduler — and ``lengths`` its valid token count; row a's
+        first token sits at logical position ``prefix_lens[a]`` (0 for
+        rows starting from scratch).  Rotary offsets, causal masks, and
+        cache scatter targets are all computed from the true logical
+        position — the prefix KV already resident in the cache is what
+        the tail attends to."""
         cfg = self.cfg
         tokens = batch["tokens"]
         B, L = tokens.shape
@@ -608,8 +624,6 @@ class Model:
         x = params["embed"][tokens]
         positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
         if prefix_lens is not None:
-            assert block_tables is not None, (
-                "prefix_lens requires the paged cache path")
             positions = prefix_lens[:, None].astype(jnp.int32) + positions
         if cfg.is_encoder_decoder:
             x = x + sinusoid_pos(positions, cfg.d_model).astype(x.dtype)

@@ -49,6 +49,47 @@ suffix path's gathered-KV attention masks padding to exact zeros.
 Requires ``model.supports_prefix_sharing`` (attention-only stacks —
 SSM/cross-attention state is not a pure function of the token prefix).
 
+Chunked-prefill scheduler (``chunk_tokens``)
+--------------------------------------------
+Unchunked, ``admit()`` runs the WHOLE prompt's prefill synchronously on
+the decode path — a 32k prompt stalls every resident decode stream for
+one monolithic model call (the ROADMAP's "async admission" item).  With
+``chunk_tokens=N`` set, admission only *allocates* (slot, blocks, prefix
+plan, COW) and parks the prompt behind a resumable **chunk cursor**;
+``step()`` then builds every iteration from the fixed token budget:
+
+  * all resident decode tokens are packed FIRST — every active stream
+    advances every step, so a flood of long prompts can never starve a
+    resident decode (the scheduler's latency contract);
+  * the remaining ``N - n_decode`` tokens are filled with prefill chunks
+    drawn FIFO from the cursor queue, each chunk resuming at its prompt's
+    logical position (per-chunk rotary offsets, per-row causal
+    ``q_offset``, cache scatter at arbitrary starts — the PR-3
+    ``prefix_lens`` machinery generalized to both paged AND dense
+    caches).
+
+This subsumes async admission without threads: chunking bounds the
+prefill work co-scheduled with every decode step, so TTFT/ITL tails
+collapse on long-prompt mixes while greedy streams stay byte-identical
+to the unchunked engine (same logical positions => bit-identical KV and
+logits; the equivalence tests demand it, faults included).  A fault
+detected during a chunk retries ONLY that chunk from the pre-chunk
+cache; the step's decode call and earlier chunks are never re-executed.
+Requires ``model.supports_chunked_prefill`` (attention-only stacks —
+SSM recurrence state cannot resume mid-prompt through the prefill path).
+
+Per-step intensity-guided re-selection: each executed step's ACTUAL
+token composition (decode + chunk tokens) defines a representative
+``GemmDims`` whose arithmetic intensity is fed back through
+``select_scheme`` — decode-only steps sit deep in the memory-bound
+regime (fused block ABFT), mixed steps carrying a chunk can cross into
+the compute-bound regime (global ABFT).  The per-step ``(composition,
+intensity, scheme)`` decisions are recorded in
+``EngineStats.selection_trace``; the jitted calls resolve ``Scheme.AUTO``
+per GEMM shape at trace time, so distinct compositions genuinely execute
+distinct schemes (the paper's §5.3 selection re-made at serving time,
+per step instead of per static phase).
+
 Engine API
 ----------
 ``admit(pending)``
@@ -122,11 +163,13 @@ rather than hidden by the total-pool denominator, plus ``fragmentation``,
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.intensity import step_gemm_dims
 from repro.core.protected import ABFTConfig
 from repro.models.layers import LayerCtx, ModelFault
 from repro.models.model import Model
@@ -148,6 +191,24 @@ class Request:
     done: bool = False
     error: str | None = None      # set when evicted (hard fault, too long,
                                   # block-pool exhaustion)
+    # wall-clock perf_counter() stamp per generated token (benchmarks
+    # derive TTFT / inter-token-latency percentiles from these)
+    times: list = dataclasses.field(default_factory=list, repr=False)
+
+
+@dataclasses.dataclass
+class _ChunkCursor:
+    """Resumable prefill state of one admitted-but-not-yet-decoding
+    request under the chunked-prefill scheduler: ``prompt[:filled]`` is
+    resident in the cache (including any shared prefix), the rest still
+    has to be prefilled in token-budgeted chunks.  Host-only state —
+    mutated strictly outside the jitted attempt/retry window, like the
+    block tables."""
+
+    req: Request
+    total: int                    # len(prompt)
+    filled: int                   # logical tokens already resident
+    prefix: int                   # shared-prefix tokens (stats accounting)
 
 
 # errors set before a request ever reaches prefill (admission screening)
@@ -175,6 +236,20 @@ class EngineStats:
     prompt_tokens_total: int = 0
     prefix_tokens_shared: int = 0
     cow_copies: int = 0
+    # chunked prefill
+    prefill_chunks: int = 0    # prompt-chunks executed (one per row per step)
+    chunk_retries: int = 0     # clean re-executions of a faulted chunk only
+    mixed_steps: int = 0       # steps carrying decode AND prefill tokens
+    decode_only_steps: int = 0
+    prefill_only_steps: int = 0
+    # per-step intensity-guided selection trace: one entry per executed
+    # step, {"step", "decode", "prefill", "intensity", "scheme"} — the
+    # serving-time record of the paper's §5.3 decision re-made from each
+    # step's ACTUAL token composition.  Bounded by the same deterministic
+    # stride decimation as the occupancy samples.
+    selection_trace: list = dataclasses.field(default_factory=list)
+    selection_count: int = 0
+    selection_stride: int = 1
     # per-step pool occupancy aggregates (one observation per executed
     # decode step on a paged engine).  The mean is exact (sum/count); the
     # median comes from a BOUNDED sample list kept small by deterministic
@@ -199,6 +274,25 @@ class EngineStats:
                 # halve the sampling rate: keep every other sample
                 self.blocks_used_samples = self.blocks_used_samples[::2]
                 self.blocks_used_stride *= 2
+
+    def observe_selection(self, decode: int, prefill: int,
+                          intensity: float, scheme: str) -> None:
+        """Record one step's (composition, intensity, scheme) decision."""
+        if decode and prefill:
+            self.mixed_steps += 1
+        elif prefill:
+            self.prefill_only_steps += 1
+        else:
+            self.decode_only_steps += 1
+        self.selection_count += 1
+        if self.selection_count % self.selection_stride == 0:
+            self.selection_trace.append({
+                "step": self.steps, "decode": decode, "prefill": prefill,
+                "intensity": intensity, "scheme": scheme,
+            })
+            if len(self.selection_trace) > self.MAX_OCCUPANCY_SAMPLES:
+                self.selection_trace = self.selection_trace[::2]
+                self.selection_stride *= 2
 
     @property
     def blocks_used_mean(self) -> float:
@@ -225,6 +319,18 @@ def _pad_len(n: int) -> int:
     return max(8, -(-n // 8) * 8)
 
 
+def _pad_rows(n: int, cap: int) -> int:
+    """Bucket a prefill batch's ROW count to the next power of two (capped
+    at the engine's slot count).  Chunk batches vary in both row count and
+    chunk length step to step; bucketing both dims bounds the number of
+    jitted ``_prefill_chunk`` variants at O(log2(slots) x chunk/8) for an
+    entire run instead of one compile per composition."""
+    r = 1
+    while r < n:
+        r *= 2
+    return min(r, cap)
+
+
 class ServeEngine:
     def __init__(self, model: Model, params, *, slots: int, max_len: int,
                  abft: ABFTConfig = ABFTConfig(), dtype=jnp.bfloat16,
@@ -233,6 +339,7 @@ class ServeEngine:
                  cache_kind: str = "dense", block_size: int = 16,
                  num_blocks: int | None = None,
                  prefix_sharing: bool = False, admit_lookahead: int = 8,
+                 chunk_tokens: int | None = None,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0):
         assert slots >= 1
         self.model = model
@@ -249,6 +356,20 @@ class ServeEngine:
         self.temperature = float(temperature)
         self.top_k = int(top_k)
         self.admit_lookahead = int(admit_lookahead)
+        self._dtype_bytes = jnp.dtype(dtype).itemsize
+        # chunked-prefill scheduler: per-step token budget + chunk cursors
+        if chunk_tokens is not None:
+            if chunk_tokens < 1:
+                raise ValueError("chunk_tokens must be >= 1")
+            if not model.supports_chunked_prefill:
+                raise ValueError(
+                    "chunk_tokens requires an attention-only decoder "
+                    "(SSM / cross-attention state cannot resume a prompt "
+                    "mid-sequence)")
+        self.chunk_tokens = chunk_tokens
+        self._prefill_cursors: dict = {}      # slot -> _ChunkCursor (FIFO)
+        # admission-campaign fault awaiting the target's first chunk
+        self._pending_prefill_fault: tuple | None = None
         # requests that turned done inside admit()/step(), awaiting run()'s
         # result collection (replaces the O(requests x steps) done-scan)
         self._done_events: list = []
@@ -342,13 +463,33 @@ class ServeEngine:
             first = _sample(logits[:, 0, :], sub)
             return first, new_cache, flag, nkeys
 
+        def _prefill_chunk_step(p, toks, cache, slot_ids, lengths, keys,
+                                tables, starts, final_mask, fault):
+            """One co-scheduled prefill chunk: rows are mid-prompt chunks
+            whose logical positions begin at ``starts``.  Only rows whose
+            chunk COMPLETES the prompt (``final_mask``) emit their first
+            sampled token and advance their key stream — so a prompt's
+            sampling sequence is identical however it was chunked."""
+            logits, new_cache, flag = model.prefill(
+                p, {"tokens": toks}, cache,
+                dataclasses.replace(self.ctx, fault=fault),
+                slots=slot_ids, lengths=lengths, block_tables=tables,
+                prefix_lens=starts)
+            sub, nkeys = _advance(keys)
+            first = _sample(logits[:, 0, :], sub)
+            first = jnp.where(final_mask, first, jnp.int32(-1))
+            nkeys = jnp.where(final_mask[:, None], nkeys, keys)
+            return first, new_cache, flag, nkeys
+
         self._decode = jax.jit(_decode_step)
         self._prefill = jax.jit(_prefill_step)
         self._prefill_prefix = jax.jit(_prefill_prefix_step)
+        self._prefill_chunk = jax.jit(_prefill_chunk_step)
 
     # ------------------------------------------------------------ admission
     def free_slots(self) -> list:
-        return [s for s in range(self.slots) if s not in self.active]
+        return [s for s in range(self.slots)
+                if s not in self.active and s not in self._prefill_cursors]
 
     def _release(self, slot: int) -> None:
         """Drop a slot's cache references (paged: refcount decrements;
@@ -486,6 +627,27 @@ class ServeEngine:
                 r.uid == fault_uid for r in admitted):
             fault = None    # campaign target never reached prefill
 
+        if self.chunk_tokens is not None:
+            # chunked-prefill admission: allocation only — NO model call,
+            # so a 32k prompt costs the decode path nothing here.  The
+            # prompt becomes a chunk cursor; step() co-schedules its
+            # chunks against resident decodes under the token budget.
+            if cow_pairs:
+                self.cache = self.model.copy_paged_blocks(
+                    self.cache, [s for s, _ in cow_pairs],
+                    [d for _, d in cow_pairs])
+                self.stats.cow_copies += len(cow_pairs)
+            for slot, req, plan in zip(slot_list, admitted, prefix_plans):
+                start = plan.match_len if plan is not None else 0
+                self._prefill_cursors[slot] = _ChunkCursor(
+                    req=req, total=len(req.prompt), filled=start,
+                    prefix=start)
+                self.pos[slot] = start
+            if fault is not None and fault_uid is not None:
+                # campaign injection fires at the target's first chunk
+                self._pending_prefill_fault = (fault_uid, fault)
+            return consumed
+
         slot_ids = np.asarray(slot_list, np.int32)
         full_lens = np.asarray([len(r.prompt) for r in admitted], np.int32)
         prefix = np.asarray(
@@ -551,9 +713,15 @@ class ServeEngine:
 
         self.cache = new_cache
         self.keys = self.keys.at[jnp.asarray(slot_ids)].set(nkeys)
+        # admit-time monolithic prefill is a prefill-only "step" in the
+        # selection trace: the whole-prompt token mass lands in one call
+        # (exactly the composition the chunked scheduler bounds)
+        self._observe_step_mix(0, int(lengths.sum()))
         first = np.asarray(first)
+        now = time.perf_counter()
         for i, (slot, req) in enumerate(zip(slot_ids, admitted)):
             req.generated.append(int(first[i]))
+            req.times.append(now)
             self.stats.tokens += 1
             self.stats.prompt_tokens_total += int(full_lens[i])
             self.stats.prefix_tokens_shared += int(prefix[i])
@@ -571,6 +739,191 @@ class ServeEngine:
 
     # ------------------------------------------------------------ decoding
     def step(self, fault: ModelFault | None = None) -> dict:
+        """One engine step.  Returns {uid: token} for decoded slots.
+
+        Unchunked: one decode step for all active slots (admission
+        already prefilled them whole).  Chunked (``chunk_tokens`` set):
+        one *budgeted* step — all resident decode tokens first, then the
+        leftover budget is filled with prefill chunks from the cursor
+        queue (see module docstring)."""
+        if self.chunk_tokens is not None:
+            return self._step_chunked(fault)
+        before = self.stats.steps
+        out = self._decode_core(fault)
+        if self.stats.steps > before:
+            self._observe_step_mix(len(out), 0)
+        return out
+
+    def _observe_step_mix(self, decode_tokens: int,
+                          prefill_tokens: int) -> None:
+        """Re-run the paper's intensity-guided selection for THIS step's
+        actual token composition and record (intensity, scheme) in the
+        stats trace.  The representative dims are the widest per-token
+        projection (d_model x d_ff); the jitted calls re-resolve
+        Scheme.AUTO per GEMM shape at trace time anyway — this records
+        the step-level decision those shapes imply."""
+        tokens = decode_tokens + prefill_tokens
+        if tokens == 0:
+            return
+        cfg = self.model.cfg
+        dims = step_gemm_dims(tokens, cfg.d_model, cfg.d_ff,
+                              dtype_bytes=self._dtype_bytes)
+        scheme = self.abft.resolve(dims)    # one policy path — protected.py
+        self.stats.observe_selection(decode_tokens, prefill_tokens,
+                                     dims.arithmetic_intensity,
+                                     scheme.value)
+
+    def _plan_chunks(self, budget: int) -> list:
+        """Pick this step's prefill chunks: cursors in admission (FIFO)
+        order, each taking ``min(budget left, tokens left)``.  Returns
+        [(slot, cursor, take, final)]."""
+        rows = []
+        for slot, cur in self._prefill_cursors.items():
+            if budget <= 0:
+                break
+            take = min(budget, cur.total - cur.filled)
+            rows.append((slot, cur, take, cur.filled + take == cur.total))
+            budget -= take
+        return rows
+
+    def _step_chunked(self, fault: ModelFault | None = None) -> dict:
+        """One budgeted mixed step: decode tokens are packed first (every
+        resident stream advances every step — the starvation guarantee),
+        then prefill chunks fill ``chunk_tokens - n_decode``.  An injected
+        step fault lands on the prefill chunk when one is scheduled, else
+        on the decode call — each call retries independently, so a chunk
+        fault re-executes ONLY that chunk."""
+        n_decode = len(self.active)
+        rows = self._plan_chunks(max(0, self.chunk_tokens - n_decode))
+        prefill_tokens = sum(take for _, _, take, _ in rows)
+        chunk_fault = fault if rows else None
+        decode_fault = fault if not rows else None
+
+        out = {}
+        steps_before = self.stats.steps
+        if self.active:
+            out = self._decode_core(decode_fault)
+        if rows:
+            committed = self._run_prefill_chunk(rows, chunk_fault)
+            if not committed:
+                prefill_tokens = 0     # discarded: never actually served
+            if self.stats.steps == steps_before:
+                # the chunk ran even if decode didn't (no actives, or the
+                # growth guard evicted them all before executing) — count
+                # the step so run()'s fault_at disarm check sees it and
+                # never re-injects a fault this chunk already consumed
+                self.stats.steps += 1
+        if self.stats.steps > steps_before:
+            self._observe_step_mix(len(out), prefill_tokens)
+        return out
+
+    def _run_prefill_chunk(self, rows: list,
+                           fault: ModelFault | None) -> bool:
+        """Execute one co-scheduled prefill-chunk batch (host side of the
+        chunk state machine).  Cursor/table state mutates only outside
+        the attempt/retry window; a detected fault re-executes the chunk
+        from the pre-chunk cache — earlier chunks and this step's decode
+        are never re-run.  Returns True when the chunk committed, False
+        when a persistent fault discarded it (the batch was evicted and
+        its tokens were never served)."""
+        A = len(rows)
+        slot_list = [s for s, _, _, _ in rows]
+        # pending admission-campaign fault: consumed by the first chunk
+        # batch containing the target (one fault per jitted call — if a
+        # step fault is already routed here, the campaign entry is
+        # retired rather than left to linger past the target's prefill)
+        if self._pending_prefill_fault is not None:
+            uid, pf = self._pending_prefill_fault
+            if any(cur.req.uid == uid for _, cur, _, _ in rows):
+                if fault is None:
+                    fault = pf
+                self._pending_prefill_fault = None
+
+        Apad = _pad_rows(A, self.slots)
+        Lpad = min(_pad_len(max(take for _, _, take, _ in rows)),
+                   self.max_len)
+        toks = np.zeros((Apad, Lpad), np.int32)
+        slot_ids = np.full((Apad,), slot_list[0], np.int32)
+        lengths = np.zeros((Apad,), np.int32)
+        starts = np.zeros((Apad,), np.int32)
+        final = np.zeros((Apad,), bool)
+        for i, (slot, cur, take, fin) in enumerate(rows):
+            toks[i, :take] = cur.req.prompt[cur.filled:cur.filled + take]
+            slot_ids[i] = slot
+            lengths[i] = take
+            starts[i] = cur.filled
+            final[i] = fin
+        # padding rows alias row 0's slot with lengths == 0: their cache
+        # writes route to the drop sentinel and their sampled token / key
+        # advance are masked by ``final`` — pure shape ballast so the jit
+        # cache is keyed by (row bucket, length bucket) only
+
+        tables = (self.pool.device_tables(slot_ids)
+                  if self.pool is not None else None)
+        keys = self.keys[jnp.asarray(slot_ids)]
+        prev_cache = self.cache        # pre-chunk state, kept for retry
+        args = (self.params, jnp.asarray(toks), jnp.asarray(slot_ids),
+                jnp.asarray(lengths), jnp.asarray(starts),
+                jnp.asarray(final))
+
+        def attempt(fa):
+            return self._prefill_chunk(
+                args[0], args[1], prev_cache, args[2], args[3], keys,
+                tables, args[4], args[5], fa)
+
+        f = fault if fault is not None else ModelFault.none()
+        first, new_cache, flag, nkeys = attempt(f)
+        if bool(flag):
+            self.stats.faults_detected += 1
+            for _ in range(self.policy.max_retries):
+                self.stats.retries += 1
+                self.stats.chunk_retries += 1
+                first, new_cache, flag, nkeys = attempt(ModelFault.none())
+                if not bool(flag):
+                    break
+            if bool(flag):
+                # persistent chunk fault: evict ONLY this chunk batch's
+                # requests (their earlier chunks die with their blocks —
+                # refcounts protect any shared prefix a live sharer
+                # holds); the committed cache stays pre-chunk
+                self.stats.hard_faults += 1
+                for slot, cur, _, _ in rows:
+                    self._finish(cur.req, "hard_fault:prefill", evict=True)
+                    del self._prefill_cursors[slot]
+                    self._release(slot)
+                    if self._pending_prefill_fault is not None and \
+                            self._pending_prefill_fault[0] == cur.req.uid:
+                        self._pending_prefill_fault = None  # target gone
+                return False
+
+        self.cache = new_cache
+        self.keys = self.keys.at[jnp.asarray(slot_list)].set(
+            jnp.asarray(nkeys)[:A])
+        self.stats.prefill_chunks += A
+        first = np.asarray(first)
+        now = time.perf_counter()
+        for i, (slot, cur, take, fin) in enumerate(rows):
+            cur.filled += take
+            self.pos[slot] = cur.filled
+            if not fin:
+                continue
+            req = cur.req
+            req.generated.append(int(first[i]))
+            req.times.append(now)
+            self.stats.tokens += 1
+            self.stats.prompt_tokens_total += cur.total
+            self.stats.prefix_tokens_shared += cur.prefix
+            del self._prefill_cursors[slot]
+            if len(req.generated) >= req.max_new_tokens:
+                self._finish(req)          # budget met at prefill
+                self._release(slot)
+                continue
+            self.active[slot] = req
+            if self.index is not None:
+                self.index.add(req.prompt, self.pool.tables[slot])
+        return True
+
+    def _decode_core(self, fault: ModelFault | None = None) -> dict:
         """One decode step for all active slots.  Returns {uid: token}."""
         if self.pool is not None:
             # on-demand growth: claim the block the cursor is about to
@@ -659,9 +1012,11 @@ class ServeEngine:
         out = {}
         nxt = np.asarray(nxt)
         finished = []
+        now = time.perf_counter()
         for s, req in list(self.active.items()):
             t = int(nxt[s])
             req.generated.append(t)
+            req.times.append(now)
             self.pos[s] += 1
             out[req.uid] = t
             self.stats.tokens += 1
@@ -693,7 +1048,7 @@ class ServeEngine:
         self._drain_finished()
         step_i = 0
         step_fault_armed = fault_at is not None
-        while pending or self.active:
+        while pending or self.active or self._prefill_cursors:
             if pending and self.free_slots():
                 if admit_fault_at is not None:
                     uid, afault = admit_fault_at
@@ -746,8 +1101,9 @@ class ServeEngine:
             "slots": self.slots,
             "max_len": self.max_len,
             "bytes_total": pytree_bytes(self.cache),
-            "active_tokens": int(sum(
-                int(self.pos[s]) for s in self.active)),
+            "active_tokens": int(
+                sum(int(self.pos[s]) for s in self.active)
+                + sum(int(self.pos[s]) for s in self._prefill_cursors)),
         }
         if self.pool is not None:
             allocated = self.pool.blocks_used * self.pool.block_size

@@ -1,4 +1,6 @@
 import os
+import signal
+import threading
 
 # Smoke tests and benches must see ONE device; only launch/dryrun.py sets
 # the 512-device XLA flag (and it runs in its own process).
@@ -6,6 +8,36 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import numpy as np
 import pytest
+
+# Per-test wall-clock budget: a scheduler deadlock (engine loop waiting
+# on a slot that never frees) should fail ONE test fast, not hang the
+# whole CI workflow until the job-level timeout.  SIGALRM-based because
+# the container has no pytest-timeout plugin; the first test in a
+# session pays jit compilation, hence the generous default.
+_TIMEOUT_S = int(os.environ.get("PYTEST_PER_TEST_TIMEOUT", "300"))
+
+
+@pytest.hookimpl(wrapper=True)
+def pytest_runtest_call(item):
+    if (
+        _TIMEOUT_S <= 0
+        or not hasattr(signal, "SIGALRM")
+        or threading.current_thread() is not threading.main_thread()
+    ):
+        return (yield)
+
+    def _expired(signum, frame):
+        raise TimeoutError(
+            f"{item.nodeid} exceeded the {_TIMEOUT_S}s per-test timeout "
+            "(PYTEST_PER_TEST_TIMEOUT)")
+
+    old = signal.signal(signal.SIGALRM, _expired)
+    signal.alarm(_TIMEOUT_S)
+    try:
+        return (yield)
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
 
 
 @pytest.fixture

@@ -1,0 +1,356 @@
+"""Chunked-prefill scheduler: stall-free mixed prefill+decode steps with
+per-step intensity-guided ABFT re-selection.
+
+Coverage:
+
+  * equivalence — greedy streams from the chunked engine are
+    byte-identical to the unchunked engine for dense, paged,
+    paged+prefix-sharing, and MLA caches, including odd chunk sizes that
+    split prompts at non-block, non-bucket boundaries (rotary offsets,
+    causal q_offset, and scatter starts are all computed from the true
+    logical position — any off-by-chunk bug shows up as divergence);
+  * fault isolation — a fault injected mid-chunk retries ONLY that chunk
+    (the step's decode call and earlier chunks are not re-executed), and
+    a persistent chunk fault evicts only that chunk batch's requests
+    while resident decodes keep their streams;
+  * scheduling — a stream of long prompts cannot stall a resident decode
+    beyond the token budget: decode tokens pack first, so every active
+    stream advances every step;
+  * selection trace — EngineStats records a per-step (intensity, scheme)
+    trace in which mixed steps select a different ABFT scheme than
+    decode-only steps (the paper's §5.3 decision re-made per step);
+  * compile bounding — chunk batches bucket rows and lengths, so a whole
+    varied run compiles O(log2(slots) x chunk/8) _prefill_chunk variants,
+    asserted via the jit cache size.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, scaled_down
+from repro.core import ABFTConfig, FaultSpec, Scheme
+from repro.core.hardware import HardwareSpec
+from repro.models import ModelFault, build_model
+from repro.serve.engine import RecoveryPolicy, Request, ServeEngine
+
+ABFT = ABFTConfig(scheme=Scheme.AUTO, use_pallas=False)
+
+# Hardware where the per-step selection genuinely flips: a weak VPU makes
+# fused block ABFT expensive once the step carries enough tokens, while
+# the fixed-op overhead keeps global ABFT losing on thin decode-only
+# steps.  With the scaled test model's (k=64, n=128) f32 projection this
+# selects block_1s for m <= 16 and global for m >= 32.
+FLIP_HW = HardwareSpec(
+    name="flip", peak_flops=1e10, vpu_flops=2.6e8, hbm_bw=1e9,
+    ici_bw=1e9, hbm_bytes=1 << 30, vmem_bytes=1 << 20,
+    fixed_op_overhead_s=1e-6)
+
+MIX = [(5, 4), (23, 5), (11, 3), (30, 4)]     # (prompt_len, budget)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = scaled_down(get_config("llama3.2-1b"), n_layers=2)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def mla_model():
+    cfg = scaled_down(get_config("deepseek-v3-671b"), n_layers=2)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(2), dtype=jnp.float32)
+    return cfg, model, params
+
+
+def _reqs(spec=MIX):
+    return [Request(uid=i, prompt=np.arange(1, 1 + L, dtype=np.int32),
+                    max_new_tokens=n)
+            for i, (L, n) in enumerate(spec)]
+
+
+def _engine(model, params, *, slots=2, max_len=64, **kw):
+    return ServeEngine(model, params, slots=slots, max_len=max_len,
+                       abft=ABFT, dtype=jnp.float32, **kw)
+
+
+@pytest.fixture(scope="module")
+def unchunked_streams(small_model):
+    """Reference greedy streams from the admit-time-prefill engine."""
+    _, model, params = small_model
+    return _engine(model, params).run(_reqs())
+
+
+# ================================================= equivalence
+
+def test_chunked_matches_unchunked_dense(small_model, unchunked_streams):
+    _, model, params = small_model
+    eng = _engine(model, params, chunk_tokens=8)
+    assert eng.run(_reqs()) == unchunked_streams
+    assert eng.stats.prefill_chunks > len(MIX)   # prompts really chunked
+    assert eng.stats.hard_faults == 0
+
+
+def test_chunked_matches_unchunked_paged_odd_chunk(small_model,
+                                                   unchunked_streams):
+    """chunk_tokens=5 splits every prompt at non-block, non-bucket
+    boundaries — scatter starts, rotary offsets and causal q_offset all
+    land mid-block."""
+    _, model, params = small_model
+    eng = _engine(model, params, cache_kind="paged", chunk_tokens=5)
+    assert eng.run(_reqs()) == unchunked_streams
+    assert eng.stats.hard_faults == 0
+
+
+def test_chunked_matches_unchunked_prefix_sharing(small_model):
+    """Chunking composes with refcounted prefix sharing: the cursor
+    starts at the matched prefix and only the unshared remainder is
+    chunked."""
+    _, model, params = small_model
+    tpl = np.arange(1, 37, dtype=np.int32)
+    spec = [
+        Request(uid=i,
+                prompt=np.concatenate(
+                    [tpl, (100 + 7 * i + np.arange(1 + i % 3,
+                                                   dtype=np.int32)) % 250]),
+                max_new_tokens=4 + i % 3)
+        for i in range(6)
+    ]
+
+    def clone():
+        return [Request(uid=r.uid, prompt=r.prompt,
+                        max_new_tokens=r.max_new_tokens) for r in spec]
+
+    ref = _engine(model, params, slots=3, cache_kind="paged").run(clone())
+    eng = _engine(model, params, slots=3, cache_kind="paged",
+                  prefix_sharing=True, chunk_tokens=8)
+    assert eng.run(clone()) == ref
+    assert eng.stats.prefix_tokens_shared > 0    # sharing really engaged
+
+
+def test_chunked_matches_unchunked_mla(mla_model):
+    _, model, params = mla_model
+    spec = [(7, 4), (21, 5)]
+    ref = _engine(model, params).run(_reqs(spec))
+    eng = _engine(model, params, cache_kind="paged", chunk_tokens=8)
+    assert eng.run(_reqs(spec)) == ref
+
+
+# ================================================= fault isolation
+
+def test_chunk_fault_retries_only_that_chunk(small_model):
+    """A fault landing in a mid-prompt chunk of a MIXED step retries the
+    chunk alone: the co-scheduled decode call is not re-executed (decode
+    retries stay zero) and both streams match the clean run."""
+    _, model, params = small_model
+    short = (5, 8)
+    long = (28, 3)
+
+    def serve(eng, **kw):
+        resident = _reqs([short])[0]
+        eng.admit([resident])
+        while eng._prefill_cursors:
+            eng.step()                    # resident now decoding
+        late = Request(uid=1, prompt=np.arange(1, 1 + long[0],
+                                               dtype=np.int32),
+                       max_new_tokens=long[1])
+        out = eng.run([late], **kw)
+        return resident.generated, out[1]
+
+    clean = serve(_engine(model, params, chunk_tokens=8))
+    eng = _engine(model, params, chunk_tokens=8,
+                  policy=RecoveryPolicy(max_retries=1))
+    fault = ModelFault.at(1, "mlp_down", FaultSpec.value(0, 2, 1e4))
+    faulted = serve(eng, admit_fault_at=(1, fault))
+    assert faulted == clean
+    assert eng.stats.faults_detected == 1
+    assert eng.stats.chunk_retries == 1
+    assert eng.stats.retries == 1         # no decode retry piggybacked
+    assert eng.stats.hard_faults == 0
+
+
+def test_chunk_hard_fault_evicts_only_chunk_batch(small_model):
+    """Persistent chunk fault (no retry budget): the chunking request is
+    evicted with a recorded error; the resident decode stream and later
+    admissions are unaffected."""
+    _, model, params = small_model
+    resident = _reqs([(5, 10)])[0]
+    victim = Request(uid=1, prompt=np.arange(1, 29, dtype=np.int32),
+                     max_new_tokens=4)
+    later = Request(uid=2, prompt=np.arange(1, 8, dtype=np.int32),
+                    max_new_tokens=3)
+
+    ref_eng = _engine(model, params, chunk_tokens=8)
+    ref_res = _reqs([(5, 10)])[0]
+    ref_eng.admit([ref_res])
+    while ref_eng._prefill_cursors:
+        ref_eng.step()
+    ref = ref_eng.run([Request(uid=2, prompt=later.prompt.copy(),
+                               max_new_tokens=3)])
+
+    eng = _engine(model, params, chunk_tokens=8,
+                  policy=RecoveryPolicy(max_retries=0))
+    eng.admit([resident])
+    while eng._prefill_cursors:
+        eng.step()
+    fault = ModelFault.at(1, "mlp_down", FaultSpec.value(0, 2, 1e4))
+    out = eng.run([victim, later], admit_fault_at=(1, fault))
+    assert victim.error == "hard_fault:prefill"
+    assert eng.stats.hard_faults == 1 and eng.stats.evictions == 1
+    assert resident.generated == ref_res.generated
+    assert out[2] == ref[2]
+    assert all(c.req.uid != 1
+               for c in eng._prefill_cursors.values())   # cursor gone
+
+
+def test_decode_fault_in_chunked_engine_recovers(small_model):
+    """A step fault landing on a decode-only step of the chunked engine
+    routes to the decode call (no chunk is scheduled): recovery retries
+    the decode, never a chunk, and streams match the clean run."""
+    _, model, params = small_model
+    spec = [(5, 6), (9, 6)]
+    clean = _engine(model, params, chunk_tokens=8).run(_reqs(spec))
+    eng = _engine(model, params, chunk_tokens=8,
+                  policy=RecoveryPolicy(max_retries=1))
+    fault = ModelFault.at(1, "mlp_down", FaultSpec.value(0, 2, 1e4))
+    out = eng.run(_reqs(spec), fault_at=(3, fault))
+    assert out == clean
+    assert eng.stats.faults_detected == 1
+    assert eng.stats.retries == 1
+    assert eng.stats.chunk_retries == 0   # fault hit the decode call only
+    assert eng.stats.hard_faults == 0
+
+
+# ================================================= scheduling
+
+def test_long_prompt_stream_cannot_starve_decode(small_model):
+    """Decode tokens pack FIRST: while a stream of long prompts chunks
+    through the budget, the resident stream emits exactly one token per
+    step until its own budget ends — its inter-token latency in steps is
+    1, never stretched by pending prefill work."""
+    _, model, params = small_model
+    C = 8
+    eng = _engine(model, params, slots=2, chunk_tokens=C)
+    resident = _reqs([(4, 14)])[0]
+    eng.admit([resident])
+    while eng._prefill_cursors:
+        eng.step()
+    assert eng.active                      # resident decoding
+
+    pending = [Request(uid=10 + i, prompt=np.arange(1, 31, dtype=np.int32),
+                       max_new_tokens=2) for i in range(3)]
+    overlap = 0
+    while not resident.done:
+        if pending and eng.free_slots():
+            eng.admit(pending)
+        overlap += bool(eng._prefill_cursors)
+        n = len(resident.generated)
+        eng.step()
+        assert len(resident.generated) == n + 1   # decode never skipped
+    assert overlap >= 5     # the backlog really was chunking alongside
+    while pending or eng.active or eng._prefill_cursors:
+        if pending and eng.free_slots():
+            eng.admit(pending)
+        eng.step()
+
+    # the budget rule held on every step: prefill filled only what the
+    # decode tokens left over
+    for e in eng.stats.selection_trace:
+        assert e["prefill"] <= max(0, C - e["decode"])
+    assert eng.stats.mixed_steps > 0
+
+
+def test_selection_trace_mixed_vs_decode_only(small_model):
+    """The per-step trace shows the intensity-guided selector choosing
+    DIFFERENT schemes for mixed and decode-only compositions: chunk-
+    carrying steps cross into the compute-bound regime (global ABFT),
+    decode-only steps stay memory-bound (fused block ABFT)."""
+    _, model, params = small_model
+    abft = ABFTConfig(scheme=Scheme.AUTO, use_pallas=False,
+                      hardware=FLIP_HW)
+    eng = ServeEngine(model, params, slots=2, max_len=64, abft=abft,
+                      dtype=jnp.float32, chunk_tokens=48)
+    resident = _reqs([(4, 12)])[0]
+    eng.admit([resident])
+    while eng._prefill_cursors:
+        eng.step()
+    pending = [Request(uid=10 + i, prompt=np.arange(1, 48, dtype=np.int32),
+                       max_new_tokens=2) for i in range(2)]
+    while pending or eng.active or eng._prefill_cursors:
+        if pending and eng.free_slots():
+            eng.admit(pending)
+        eng.step()
+
+    tr = eng.stats.selection_trace
+    mixed = [e for e in tr if e["decode"] and e["prefill"]]
+    dec = [e for e in tr if e["decode"] and not e["prefill"]]
+    assert mixed and dec
+    assert eng.stats.mixed_steps == len(mixed)
+    # every decode-only step is memory-bound -> fused block ABFT
+    assert {e["scheme"] for e in dec} == {Scheme.BLOCK_1S.value}
+    # budget-saturated mixed steps cross the regime -> global ABFT
+    big_mixed = [e for e in mixed if e["decode"] + e["prefill"] >= 32]
+    assert big_mixed
+    assert {e["scheme"] for e in big_mixed} == {Scheme.GLOBAL.value}
+    assert (min(e["intensity"] for e in big_mixed)
+            > max(e["intensity"] for e in dec))
+
+
+# ================================================= compile bounding
+
+def test_prefill_chunk_compile_count_bounded(small_model):
+    """Row counts bucket to powers of two (capped at slots) and chunk
+    lengths to multiples of 8, so a run over many distinct prompt
+    lengths compiles at most |row buckets| x |length buckets| variants
+    of the jitted chunk step."""
+    _, model, params = small_model
+    slots, C = 3, 16
+    eng = _engine(model, params, slots=slots, max_len=64,
+                  cache_kind="paged", chunk_tokens=C)
+    lens = [5, 9, 13, 17, 21, 25, 29, 3, 7, 30, 11, 19]
+    reqs = [Request(uid=i, prompt=np.arange(1, 1 + L, dtype=np.int32),
+                    max_new_tokens=1 + i % 3)
+            for i, L in enumerate(lens)]
+    eng.run(reqs)
+    assert eng.stats.prefill_chunks >= len(lens)
+    row_buckets = {1, 2, 3}                  # _pad_rows over 3 slots
+    len_buckets = {8, 16}                    # _pad_len up to chunk=16
+    bound = len(row_buckets) * len(len_buckets)
+    assert eng._prefill_chunk._cache_size() <= bound
+    assert eng._prefill_chunk._cache_size() >= 1
+
+
+# ================================================= gating & edges
+
+def test_chunked_rejects_unsupported_model():
+    cfg = scaled_down(get_config("jamba-v0.1-52b"))
+    model = build_model(cfg)
+    assert not model.supports_chunked_prefill
+    with pytest.raises(ValueError, match="chunk_tokens"):
+        ServeEngine(model, None, slots=2, max_len=64, chunk_tokens=8)
+
+
+def test_chunked_rejects_bad_budget(small_model):
+    _, model, params = small_model
+    with pytest.raises(ValueError, match="chunk_tokens"):
+        _engine(model, params, chunk_tokens=0)
+
+
+def test_budget_met_at_final_chunk_frees_slot(small_model):
+    """max_new_tokens=1 satisfied by the final chunk's sampled token: the
+    request finishes without ever occupying a decode slot; n=0 finishes
+    at admission."""
+    _, model, params = small_model
+    ref = _engine(model, params).run(_reqs([(20, 1)]))
+    eng = _engine(model, params, chunk_tokens=8)
+    one = _reqs([(20, 1)])[0]
+    zero = Request(uid=1, prompt=np.arange(1, 6, dtype=np.int32),
+                   max_new_tokens=0)
+    out = eng.run([one, zero])
+    assert out[0] == ref[0] and len(out[0]) == 1
+    assert zero.done and zero.generated == []
+    assert not eng.active and not eng._prefill_cursors
+    assert eng.free_slots() == [0, 1]
