@@ -20,12 +20,20 @@ from __future__ import annotations
 import json
 import sys
 
-# cell keys that only exist when the model supports the feature — their
-# absence in a run on e.g. a hybrid arch is not a schema regression
+# cell keys that only exist when the model supports the feature (or, for
+# the chunked_auto group, only on the long_prompt/intensity_guided cell) —
+# their absence in a run on e.g. a hybrid arch is not a schema regression
 _CONDITIONAL = {
     "paged_shared", "shared_matches_dense", "shared_blocks_frac",
     "paged_chunked", "chunked_matches_dense", "chunked_itl_p99_frac",
     "chunked_tput_frac",
+    # chunked-prefill budget keys (only on cells run with a budget)
+    "chunk_budget", "budget_retunes", "mixed_step_intensity", "cmr",
+    "modeled_step_tput",
+    # roofline-autotuned budget cell + its acceptance keys
+    "chunked_auto", "auto_budget", "auto_matches_dense",
+    "auto_clears_cmr", "auto_tput_frac", "auto_modeled_tput_frac",
+    "fixed_budget_sweep",
 }
 
 
@@ -68,10 +76,23 @@ def check(new: dict, baseline: dict) -> list:
                         f"{where}.{kind}.{lat}: percentiles not ordered "
                         f"({pct})")
         for verdict in ("paged_matches_dense", "chunked_matches_dense",
-                        "shared_matches_dense"):
+                        "shared_matches_dense", "auto_matches_dense"):
             if cell.get(verdict) is False:
                 errors.append(f"{where}: {verdict} is False — greedy "
                               "streams diverged")
+        for budget, entry in cell.get("fixed_budget_sweep", {}).items():
+            if entry.get("matches_dense") is False:
+                errors.append(f"{where}: fixed budget {budget} streams "
+                              "diverged from dense")
+        if cell.get("auto_clears_cmr") is False:
+            errors.append(f"{where}: auto chunk budget does not clear "
+                          "the CMR (tune_chunk_budget regression)")
+        if "auto_modeled_tput_frac" in cell and \
+                cell["auto_modeled_tput_frac"] < 0.9:
+            errors.append(
+                f"{where}: auto budget's modeled throughput is "
+                f"{cell['auto_modeled_tput_frac']:.2f}x the best fixed "
+                "budget (acceptance: within 10%)")
     if not new.get("cells"):
         errors.append("no cells in summary")
     return errors

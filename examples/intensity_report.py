@@ -1,31 +1,58 @@
 """Pre-deployment intensity report (paper §5.3 'integration with
-pre-deployment optimizers'): for any assigned architecture and serving
-shape, print the per-GEMM-site arithmetic intensity, the bound regime, and
-the ABFT scheme intensity-guided selection chooses.
+pre-deployment optimizers'): compile the architecture's ProtectionPlan
+for a serving shape and print, per GEMM site, the arithmetic intensity,
+the bound regime, and the scheme the ProtectionPolicy selected — plus
+the roofline-autotuned chunked-prefill budget for the device.
 
   PYTHONPATH=src python examples/intensity_report.py [arch] [n_tokens]
+      [--scale smoke] [--plan-out plan.json]
+
+The plan can be dumped as the JSON deployment artifact with --plan-out;
+reloading it (ProtectionPlan.from_json) reproduces identical per-step
+selections.
 """
 
-import sys
+import argparse
 
-from repro.configs import ALL_ARCHS, get_config
-from repro.core import TPU_V5E, select_scheme
-from repro.models.counting import aggregate_ai, layer_gemms
+from repro.configs import ALL_ARCHS, get_config, scaled_down
+from repro.core import TPU_V5E, IntensityGuidedPolicy, ProtectionPlan
+from repro.models.counting import aggregate_ai
 
-arch = sys.argv[1] if len(sys.argv) > 1 else "deepseek-v3-671b"
-n_tokens = int(sys.argv[2]) if len(sys.argv) > 2 else 128  # decode batch
+ap = argparse.ArgumentParser()
+ap.add_argument("arch", nargs="?", default="deepseek-v3-671b",
+                choices=ALL_ARCHS)
+ap.add_argument("n_tokens", nargs="?", type=int, default=128,
+                help="tokens per serving step (decode batch)")
+ap.add_argument("--scale", choices=["full", "smoke"], default="full",
+                help="smoke: scaled-down config (CI examples job)")
+ap.add_argument("--plan-out", default=None,
+                help="write the compiled ProtectionPlan JSON here")
+args = ap.parse_args()
 
-cfg = get_config(arch)
-print(f"arch={arch}  tokens-per-step={n_tokens}  "
-      f"device={TPU_V5E.name} (CMR={TPU_V5E.cmr:.0f})")
-print(f"aggregate AI: {aggregate_ai(cfg, n_tokens):.1f}\n")
+cfg = get_config(args.arch)
+if args.scale == "smoke":
+    cfg = scaled_down(cfg)
+
+plan = ProtectionPlan.for_model(
+    cfg, hw=TPU_V5E, policy=IntensityGuidedPolicy(),
+    phase="serve", n_tokens=args.n_tokens)
+
+print(f"arch={args.arch} ({plan.model})  tokens-per-step={args.n_tokens}  "
+      f"device={plan.hardware.name} (CMR={plan.hardware.cmr:.0f})")
+print(f"aggregate AI: {aggregate_ai(cfg, args.n_tokens):.1f}")
+budget = plan.tune_chunk_budget(lo=8, hi=32768)
+print(f"auto chunk budget: {budget} tokens "
+      f"(mixed-step AI {plan.step_intensity(budget):.1f})\n")
 print(f"{'site':18s} {'m':>9s} {'k':>7s} {'n':>7s} {'count':>6s} "
-      f"{'AI':>9s} {'bound':>10s}  scheme")
-for site, (dims, count) in layer_gemms(cfg, n_tokens).items():
-    sel = select_scheme(dims, TPU_V5E)
-    bound = "compute" if dims.arithmetic_intensity >= TPU_V5E.cmr \
-        else "bandwidth"
-    print(f"{site:18s} {dims.m:>9d} {dims.k:>7d} {dims.n:>7d} {count:>6d} "
-          f"{dims.arithmetic_intensity:>9.1f} {bound:>10s}  "
-          f"{sel.scheme.value}")
+      f"{'AI':>9s} {'bound':>10s} {'first':>6s}  scheme")
+for row in plan.report_rows():
+    print(f"{row['layer']:18s} {row['m']:>9d} {row['k']:>7d} "
+          f"{row['n']:>7d} {row['count']:>6d} {row['ai']:>9.1f} "
+          f"{row['bound']:>10s} {str(row['first']):>6s}  {row['scheme']}")
+
+if args.plan_out:
+    with open(args.plan_out, "w") as fh:
+        fh.write(plan.to_json())
+    print(f"\nwrote plan artifact -> {args.plan_out}")
+
 print("\n(available archs: " + ", ".join(ALL_ARCHS) + ")")

@@ -44,6 +44,28 @@ for r in report:
     print(f"   {r['layer']:20s} AI={r['ai']:9.1f} {r['bound']:9s} "
           f"-> {r['scheme']}")
 
+# ------------------------------------------------------- 2b. the policy API
+# selection_report above rides the legacy facade; the first-class surface
+# is a ProtectionPolicy compiled into a ProtectionPlan (JSON-serializable
+# deployment artifact with a cached per-step fast path):
+from repro.core import (
+    IntensityGuidedPolicy,
+    ProtectionPlan,
+    StepShape,
+    TPU_V5E,
+)
+
+plan = ProtectionPlan.build(
+    {"decode mlp (thin)": GemmDims(m=8, k=4096, n=14336),
+     "prefill mlp (fat)": GemmDims(m=131072, k=4096, n=14336)},
+    hw=TPU_V5E, policy=IntensityGuidedPolicy(),
+    step_shape=StepShape(d_model=4096, d_ff=14336))
+reloaded = ProtectionPlan.from_json(plan.to_json())
+assert [e.selection.scheme_name for e in reloaded.entries] == \
+    [e.selection.scheme_name for e in plan.entries]
+print(f"\n2b) plan round-trip: {len(plan.entries)} layers, "
+      f"decode-step scheme = {plan.for_step(8).scheme_name}")
+
 # ---------------------------------------------------------------- 3. a model
 from repro.configs import get_config, scaled_down
 from repro.models import LayerCtx, ModelFault, build_model
@@ -51,7 +73,8 @@ from repro.models import LayerCtx, ModelFault, build_model
 cfg = scaled_down(get_config("llama3.2-1b"))
 model = build_model(cfg)
 params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)
-ctx = LayerCtx(abft=ABFTConfig(scheme=Scheme.AUTO, use_pallas=False))
+ctx = LayerCtx(abft=ABFTConfig.from_policy(IntensityGuidedPolicy(),
+                                           use_pallas=False))
 batch = {"tokens": jnp.ones((2, 16), jnp.int32)}
 
 out = model.forward(params, batch, ctx)

@@ -12,9 +12,24 @@ from repro.core.hardware import DEFAULT, NVIDIA_T4, TPU_V5E, HardwareSpec
 from repro.core.intensity import (
     GemmDims,
     aggregate_intensity,
+    compute_bound_ai,
     gemm_time,
     is_compute_bound,
     roofline_time,
+)
+from repro.core.policy import (
+    FixedPolicy,
+    IntensityGuidedPolicy,
+    LayerSpec,
+    ProfileGuidedPolicy,
+    ProtectionPlan,
+    ProtectionPolicy,
+    SchemeRegistry,
+    SchemeSpec,
+    Selection,
+    StepShape,
+    default_registry,
+    policy_from_selector,
 )
 from repro.core.protected import (
     ABFTConfig,
@@ -37,20 +52,33 @@ __all__ = [
     "CheckResult",
     "DEFAULT",
     "FaultSpec",
+    "FixedPolicy",
     "GemmDims",
     "HardwareSpec",
+    "IntensityGuidedPolicy",
+    "LayerSpec",
     "NVIDIA_T4",
+    "ProfileGuidedPolicy",
+    "ProtectionPlan",
+    "ProtectionPolicy",
     "Scheme",
+    "SchemeRegistry",
+    "SchemeSpec",
+    "Selection",
     "SelectorConfig",
+    "StepShape",
     "TPU_V5E",
     "WeightChecksums",
     "aggregate_intensity",
+    "compute_bound_ai",
+    "default_registry",
     "gemm_time",
     "global_row_check",
     "global_scalar_check",
     "inject_output_fault",
     "is_compute_bound",
     "overhead_pct",
+    "policy_from_selector",
     "precompute_weight_checksums",
     "protected_matmul",
     "protected_time",

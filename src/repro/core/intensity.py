@@ -56,9 +56,19 @@ class GemmDims:
         return self.flops / self.bytes_total
 
 
+def compute_bound_ai(ai: float, hw: HardwareSpec) -> bool:
+    """Paper Eq. (1), the SINGLE boundary predicate: AI strictly greater
+    than the device CMR => compute bound.  AI exactly equal to the CMR is
+    bandwidth-bound (the kernel still saturates HBM).  Every consumer —
+    ``is_compute_bound``, the policy reason strings, the report tables,
+    and the chunk-budget autotuner — goes through this one function, so
+    the classification can never disagree with itself at the boundary."""
+    return float(ai) > hw.cmr
+
+
 def is_compute_bound(dims: GemmDims, hw: HardwareSpec) -> bool:
-    """Paper Eq. (1): AI > CMR => compute bound."""
-    return dims.arithmetic_intensity > hw.cmr
+    """Paper Eq. (1): AI > CMR => compute bound (see compute_bound_ai)."""
+    return compute_bound_ai(dims.arithmetic_intensity, hw)
 
 
 def gemm_time(dims: GemmDims, hw: HardwareSpec) -> float:

@@ -72,3 +72,20 @@ def build_profile_table(
         times = profile_layer(dims, candidates, **kw)
         table[dims] = min(times, key=times.get)
     return table
+
+
+def build_profile_policy(
+    layer_dims,
+    candidates=DEFAULT_CANDIDATES,
+    fallback=None,
+    **kw,
+):
+    """Measure the given shapes and return the ``ProfileGuidedPolicy``
+    that serves them from the table, falling back to the analytic
+    roofline for unprofiled shapes (paper §5.3's pre-deployment flow as
+    a first-class policy object)."""
+    from repro.core.policy import IntensityGuidedPolicy, ProfileGuidedPolicy
+
+    table = build_profile_table(layer_dims, candidates, **kw)
+    return ProfileGuidedPolicy(
+        table=table, fallback=fallback or IntensityGuidedPolicy())

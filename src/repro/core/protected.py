@@ -1,15 +1,27 @@
 """``protected_matmul`` — the paper's contribution as a composable JAX op.
 
 Every linear layer in the framework calls this instead of ``x @ w``.  The
-intensity-guided selector (paper §5.3) resolves Scheme.AUTO per layer shape
-at trace time; the chosen scheme executes and returns (y, CheckResult).
+active ProtectionPolicy (core/policy.py, paper §5.3) resolves the scheme
+per layer shape at trace time; the chosen scheme's registered *executor*
+runs and returns (y, CheckResult).
 
-Scheme dispatch:
-  GLOBAL   — XLA dot + Hari-style global check using the offline weight
+Scheme dispatch goes through the SchemeRegistry — the executors defined
+here register at import for the built-ins:
+  global   — XLA dot + Hari-style global check using the offline weight
              checksum (precompute via ``precompute_weight_checksums``).
-  BLOCK_*  — the fused Pallas kernel (kernels/ops.py).
-  REPLICA  — fused kernel in replica mode (ablation baseline).
-  NONE     — plain dot, clean CheckResult.
+  block_*  — the fused Pallas kernel (kernels/ops.py), or the XLA
+             emulation of its semantics when ``use_pallas=False``.
+  replica  — fused kernel in replica mode (ablation baseline).
+  none     — plain dot, clean CheckResult.
+A newly registered scheme (cost model + executor) dispatches here with no
+edit to this module.
+
+``ABFTConfig`` below is the DEPRECATED facade: it survives for existing
+callers and simply constructs a ProtectionPolicy (``effective_policy``) —
+an ``IntensityGuidedPolicy`` for ``scheme=AUTO``, a ``FixedPolicy``
+otherwise.  New code should build policies (and ``ProtectionPlan``s)
+directly and wrap them via ``ABFTConfig.from_policy`` where a config
+object is still required.
 
 Distribution note: under pjit/shard_map the GLOBAL path shards exactly like
 the dot it protects (the check einsums follow the same specs); the BLOCK
@@ -30,8 +42,14 @@ from repro.core.checksums import CheckResult
 from repro.core.faults import FaultSpec, inject_output_fault
 from repro.core.hardware import DEFAULT, HardwareSpec
 from repro.core.intensity import GemmDims
+from repro.core.policy import (
+    FixedPolicy,
+    ProtectionPolicy,
+    default_registry,
+    policy_from_selector,
+)
 from repro.core.schemes import BlockShape, Scheme
-from repro.core.selector import SelectorConfig, select_scheme
+from repro.core.selector import SelectorConfig
 
 
 class WeightChecksums(NamedTuple):
@@ -50,7 +68,13 @@ def precompute_weight_checksums(w: jnp.ndarray) -> WeightChecksums:
 
 @dataclasses.dataclass(frozen=True)
 class ABFTConfig:
-    """Framework-wide ABFT policy, threaded through model construction."""
+    """Framework-wide ABFT config, threaded through model construction.
+
+    DEPRECATED as a policy surface: selection lives in the
+    ProtectionPolicy API (core/policy.py); this object merely carries
+    execution knobs (hardware, kernel choice, c_factor) plus the policy.
+    ``scheme``/``selector`` survive for legacy callers and are folded
+    into ``effective_policy()``; prefer ``ABFTConfig.from_policy``."""
 
     enabled: bool = True
     scheme: Scheme = Scheme.AUTO
@@ -64,19 +88,40 @@ class ABFTConfig:
     # protects attention's own GEMMs in-kernel and keeps score chunks in
     # VMEM (the §Perf-identified lever).  XLA chunked attention otherwise.
     flash_attention: bool = False
+    # the first-class selection strategy; None falls back to the legacy
+    # scheme/selector fields (exact same decisions, same code path)
+    policy: ProtectionPolicy | None = None
 
-    def resolve(self, dims: GemmDims, first_layer: bool = False) -> Scheme:
+    def effective_policy(self) -> ProtectionPolicy:
+        """The ProtectionPolicy this config denotes (the facade's whole
+        job).  Precedence: disabled > explicit policy > fixed legacy
+        scheme > legacy SelectorConfig."""
         if not self.enabled:
-            return Scheme.NONE
+            return FixedPolicy(Scheme.NONE)
+        if self.policy is not None:
+            return self.policy
         if self.scheme != Scheme.AUTO:
-            return self.scheme
-        return select_scheme(
-            dims, self.hardware, self.selector, first_layer=first_layer
-        ).scheme
+            return FixedPolicy(self.scheme)
+        return policy_from_selector(self.selector)
+
+    def resolve(self, dims: GemmDims, first_layer: bool = False):
+        """Scheme for one GEMM shape (Scheme enum for built-ins, name
+        string for registered plug-in schemes).  Passes itself as the
+        policy's ``cfg`` so registry availability predicates see the
+        active backend."""
+        return self.effective_policy().select(
+            dims, self.hardware, first_layer=first_layer,
+            cfg=self).scheme
 
     @staticmethod
     def off() -> "ABFTConfig":
         return ABFTConfig(enabled=False)
+
+    @staticmethod
+    def from_policy(policy: ProtectionPolicy, **kw) -> "ABFTConfig":
+        """Wrap a ProtectionPolicy for call sites that still take the
+        config object (models, engine, trainer)."""
+        return ABFTConfig(policy=policy, **kw)
 
 
 def _gemm_dims(x: jnp.ndarray, w: jnp.ndarray, out_dtype) -> GemmDims:
@@ -108,76 +153,103 @@ def protected_matmul(
     ``fault`` (optional) injects a single output fault for testing — on the
     block path it corrupts the kernel accumulator; on the global path the
     materialized output.
+
+    The active policy resolves the scheme for these dims at trace time;
+    the scheme's registered executor (SchemeRegistry) runs it.
     """
     out_dtype = out_dtype or x.dtype
     dims = _gemm_dims(x, w, out_dtype)
     scheme = cfg.resolve(dims, first_layer=first_layer)
+    executor = default_registry().executor(scheme)
+    return executor(x, w, cfg, wsums=wsums, out_dtype=out_dtype,
+                    fault=fault)
 
-    if scheme == Scheme.NONE:
-        y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
-        y = y.astype(out_dtype)
-        if fault is not None:
-            y = inject_output_fault(y, fault)
-        return y, CheckResult.clean()
 
-    if scheme == Scheme.GLOBAL:
-        y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
-        y = y.astype(out_dtype)
-        if fault is not None:
-            y = inject_output_fault(y, fault)
-        if wsums is None:
-            wsums = precompute_weight_checksums(w)
-        x2 = x.reshape((-1, x.shape[-1]))
-        y2 = y.reshape((-1, y.shape[-1]))
-        check = checksums.global_row_check(
-            x2, wsums.w_sum, wsums.w_abs_sum, y2, c_factor=cfg.c_factor
-        )
-        return y, check
+# ------------------------------------------------------------- executors
+# The built-in schemes' execution paths, registered below.  Signature:
+# (x, w, cfg, *, wsums, out_dtype, fault) -> (y, CheckResult).
 
-    # Block-level schemes — fused Pallas kernel (or jnp oracle fallback).
-    mode = {
-        Scheme.BLOCK_1S: "1s",
-        Scheme.BLOCK_2S: "2s",
-        Scheme.REPLICA: "replica",
-    }[scheme]
-    if cfg.use_pallas:
-        from repro.kernels import ops
-
-        return ops.abft_matmul(
-            x, w, mode=mode, blocks=cfg.blocks, out_dtype=out_dtype,
-            fault=fault, c_factor=cfg.c_factor,
-        )
-    # XLA emulation of the fused kernel's *semantics* (used inside the
-    # 512-device dry-run, where interpret-mode pallas_call cannot lower):
-    # the one-sided check with the weight checksum recomputed inline, as
-    # the kernel does.  Sharding-friendly: pure einsums, no reshapes of
-    # sharded dims.  On real TPU the Pallas kernel replaces this path; its
-    # internal costs are modeled analytically for the roofline since a
-    # custom-call's internals are opaque to cost_analysis either way.
-    f32 = jnp.float32
-    y = jnp.matmul(x, w, preferred_element_type=f32).astype(out_dtype)
+def _plain_dot(x, w, out_dtype, fault):
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    y = y.astype(out_dtype)
     if fault is not None:
         y = inject_output_fault(y, fault)
-    # reductions accumulate in f32 via dtype= — materializing .astype(f32)
-    # copies of the weights would add 3x weight traffic per layer to the
-    # emulation (measured; the fused kernel pays none of this)
-    w_sum = jnp.sum(w, axis=-1, dtype=f32)
-    w_abs = jnp.sum(jnp.abs(w), axis=-1, dtype=f32)
-    check = jnp.einsum("...mk,k->...m", x, w_sum.astype(x.dtype),
-                       preferred_element_type=f32)
-    bound = jnp.einsum("...mk,k->...m", jnp.abs(x), w_abs.astype(x.dtype),
-                       preferred_element_type=f32)
-    yf = y.astype(f32)
-    rowsum = jnp.sum(y, axis=-1, dtype=f32)
-    res = jnp.abs(check - rowsum)
-    rtol = checksums.tolerance_scale(x.shape[-1], c=cfg.c_factor)
-    if x.dtype != f32:
-        # w_sum was quantized to the activation dtype for the check
-        # einsum: absorb its quantization into the threshold
-        rtol = rtol + 0.5 * checksums.eps_of(x.dtype)
-    tau = checksums.ATOL + rtol * bound
-    if y.dtype != f32:
-        tau = tau + 0.5 * checksums.eps_of(y.dtype) * jnp.sum(
-            jnp.abs(yf), axis=-1)
-    flag = checksums.flag_from(res, tau)
-    return y, CheckResult(flag=flag, residual=res, threshold=tau)
+    return y
+
+
+def _exec_none(x, w, cfg, *, wsums, out_dtype, fault):
+    return _plain_dot(x, w, out_dtype, fault), CheckResult.clean()
+
+
+def _exec_global(x, w, cfg, *, wsums, out_dtype, fault):
+    y = _plain_dot(x, w, out_dtype, fault)
+    if wsums is None:
+        wsums = precompute_weight_checksums(w)
+    x2 = x.reshape((-1, x.shape[-1]))
+    y2 = y.reshape((-1, y.shape[-1]))
+    check = checksums.global_row_check(
+        x2, wsums.w_sum, wsums.w_abs_sum, y2, c_factor=cfg.c_factor
+    )
+    return y, check
+
+
+def _block_executor(mode: str):
+    """Block-level schemes — fused Pallas kernel, or the XLA emulation of
+    the fused kernel's *semantics* when ``use_pallas=False`` (used inside
+    the 512-device dry-run, where interpret-mode pallas_call cannot
+    lower): the one-sided check with the weight checksum recomputed
+    inline, as the kernel does.  Sharding-friendly: pure einsums, no
+    reshapes of sharded dims.  On real TPU the Pallas kernel replaces
+    this path; its internal costs are modeled analytically for the
+    roofline since a custom-call's internals are opaque to cost_analysis
+    either way."""
+
+    def _exec(x, w, cfg, *, wsums, out_dtype, fault):
+        if cfg.use_pallas:
+            from repro.kernels import ops
+
+            return ops.abft_matmul(
+                x, w, mode=mode, blocks=cfg.blocks, out_dtype=out_dtype,
+                fault=fault, c_factor=cfg.c_factor,
+            )
+        f32 = jnp.float32
+        y = jnp.matmul(x, w, preferred_element_type=f32).astype(out_dtype)
+        if fault is not None:
+            y = inject_output_fault(y, fault)
+        # reductions accumulate in f32 via dtype= — materializing
+        # .astype(f32) copies of the weights would add 3x weight traffic
+        # per layer to the emulation (measured; the fused kernel pays
+        # none of this)
+        w_sum = jnp.sum(w, axis=-1, dtype=f32)
+        w_abs = jnp.sum(jnp.abs(w), axis=-1, dtype=f32)
+        check = jnp.einsum("...mk,k->...m", x, w_sum.astype(x.dtype),
+                           preferred_element_type=f32)
+        bound = jnp.einsum("...mk,k->...m", jnp.abs(x),
+                           w_abs.astype(x.dtype),
+                           preferred_element_type=f32)
+        yf = y.astype(f32)
+        rowsum = jnp.sum(y, axis=-1, dtype=f32)
+        res = jnp.abs(check - rowsum)
+        rtol = checksums.tolerance_scale(x.shape[-1], c=cfg.c_factor)
+        if x.dtype != f32:
+            # w_sum was quantized to the activation dtype for the check
+            # einsum: absorb its quantization into the threshold
+            rtol = rtol + 0.5 * checksums.eps_of(x.dtype)
+        tau = checksums.ATOL + rtol * bound
+        if y.dtype != f32:
+            tau = tau + 0.5 * checksums.eps_of(y.dtype) * jnp.sum(
+                jnp.abs(yf), axis=-1)
+        flag = checksums.flag_from(res, tau)
+        return y, CheckResult(flag=flag, residual=res, threshold=tau)
+
+    return _exec
+
+
+for _name, _exec in (
+    ("none", _exec_none),
+    ("global", _exec_global),
+    ("block_1s", _block_executor("1s")),
+    ("block_2s", _block_executor("2s")),
+    ("replica", _block_executor("replica")),
+):
+    default_registry().set_executor(_name, _exec)

@@ -68,75 +68,114 @@ class SchemeCost:
     fixed_ops: int        # extra *unfused* dispatched ops (checks, reduces)
 
 
+def _grid(dims: GemmDims, blocks: BlockShape) -> tuple:
+    """Effective grid extents (ceil-div; thin GEMMs clamp to one block)."""
+    gm = max(1, -(-dims.m // blocks.bm))
+    gn = max(1, -(-dims.n // blocks.bn))
+    return gm, gn
+
+
+def cost_none(
+    dims: GemmDims,
+    blocks: BlockShape = BlockShape(),
+    first_layer: bool = False,
+) -> SchemeCost:
+    return SchemeCost(0.0, 0.0, 0.0, 0)
+
+
+def cost_global(
+    dims: GemmDims,
+    blocks: BlockShape = BlockShape(),
+    first_layer: bool = False,
+) -> SchemeCost:
+    # Online: activation checksum colsum(A) (fused unless first layer),
+    # checksum product a_sum @ B -> (1, n) [the vector check, which also
+    # *locates* the faulty column], output column-summation of C, and a
+    # residual compare.  Weight checksum rowsum(B) is built offline.
+    #
+    # ``first_layer``: the activation checksum of A normally fuses into
+    # the previous layer's epilogue; the first protected layer has no
+    # producer to fuse with and pays an extra read of A.
+    b, m, k, n = dims.batch, dims.m, dims.k, dims.n
+    flops_vpu = b * (m * k + m * n)         # colsum(A) + colsum(C)
+    flops_mxu = b * 2.0 * k * n             # a_sum @ B on the MXU
+    bytes_hbm = b * float(m * n * dims.out_dtype_bytes)  # re-read C
+    if first_layer:
+        bytes_hbm += dims.bytes_a
+    # separate check op: the reduction over C does not fuse into the
+    # dot custom-call; the compare itself is tiny but dispatched.
+    return SchemeCost(flops_mxu, flops_vpu, bytes_hbm, 2)
+
+
+def cost_block_1s(
+    dims: GemmDims,
+    blocks: BlockShape = BlockShape(),
+    first_layer: bool = False,
+) -> SchemeCost:
+    # Per k-step per block: b_sum (bk*bn adds, recomputed gm times),
+    # weighted row-sum acc += A_tile @ b_sum as VPU multiply-add
+    # (2*bm*bk, recomputed gn times), plus the magnitude accumulator for
+    # the principled threshold (same cost again), plus final row-sum of
+    # the output tile (bm*bn once per block).
+    b, m, k, n = dims.batch, dims.m, dims.k, dims.n
+    gm, gn = _grid(dims, blocks)
+    flops_vpu = b * (
+        gm * (k * n)            # b_sum recomputation across block rows
+        + 2.0 * m * k * gn * 2  # weighted row-sum + |.| bound accumulator
+        + m * n                 # output-tile row sums
+    )
+    bytes_hbm = b * float(gm * gn * 4 * 2)  # per-block residual flags
+    return SchemeCost(0.0, flops_vpu, bytes_hbm, 0)
+
+
+def cost_block_2s(
+    dims: GemmDims,
+    blocks: BlockShape = BlockShape(),
+    first_layer: bool = False,
+) -> SchemeCost:
+    # a_sum per block (bm*bk per step, recomputed gn times), b_sum
+    # (recomputed gm times), scalar dot (2*bk per step per block),
+    # output-tile total sum (bm*bn per block).
+    b, m, k, n = dims.batch, dims.m, dims.k, dims.n
+    gm, gn = _grid(dims, blocks)
+    flops_vpu = b * (
+        m * k * gn
+        + k * n * gm
+        + 2.0 * k * gm * gn
+        + m * n
+    )
+    bytes_hbm = b * float(gm * gn * 4 * 2)
+    return SchemeCost(0.0, flops_vpu, bytes_hbm, 0)
+
+
+def cost_replica(
+    dims: GemmDims,
+    blocks: BlockShape = BlockShape(),
+    first_layer: bool = False,
+) -> SchemeCost:
+    # Replicated block matmul accumulating to a single vector: the MXU
+    # work doubles (paper §4); comparison is in-register.
+    b, m, n = dims.batch, dims.m, dims.n
+    return SchemeCost(dims.flops, b * float(m * n), 0.0, 0)
+
+
 def scheme_cost(
-    scheme: Scheme,
+    scheme,
     dims: GemmDims,
     blocks: BlockShape = BlockShape(),
     first_layer: bool = False,
 ) -> SchemeCost:
     """Analytic redundant-work model, per DESIGN.md §2 / paper Table 1.
 
-    ``first_layer``: for GLOBAL ABFT the activation checksum of A normally
-    fuses into the previous layer's epilogue; the first protected layer has
-    no producer to fuse with and pays an extra read of A.
-    """
-    b, m, k, n = dims.batch, dims.m, dims.k, dims.n
-    bm, bk, bn = blocks.bm, blocks.bk, blocks.bn
-    # Effective grid extents (ceil-div; thin GEMMs clamp to one block).
-    gm = max(1, -(-m // bm))
-    gn = max(1, -(-n // bn))
-
-    if scheme in (Scheme.NONE, Scheme.AUTO):
+    ``scheme`` is a Scheme enum or a registered scheme name; dispatch goes
+    through the SchemeRegistry (core/policy.py), so a newly registered
+    scheme's cost model participates here — and therefore in the
+    intensity-guided selection — without touching this module."""
+    if scheme in (Scheme.AUTO, "auto"):
         return SchemeCost(0.0, 0.0, 0.0, 0)
+    from repro.core.policy import default_registry
 
-    if scheme == Scheme.GLOBAL:
-        # Online: activation checksum colsum(A) (fused unless first layer),
-        # checksum product a_sum @ B -> (1, n) [the vector check, which also
-        # *locates* the faulty column], output column-summation of C, and a
-        # residual compare.  Weight checksum rowsum(B) is built offline.
-        flops_vpu = b * (m * k + m * n)         # colsum(A) + colsum(C)
-        flops_mxu = b * 2.0 * k * n             # a_sum @ B on the MXU
-        bytes_hbm = b * float(m * n * dims.out_dtype_bytes)  # re-read C
-        if first_layer:
-            bytes_hbm += dims.bytes_a
-        # separate check op: the reduction over C does not fuse into the
-        # dot custom-call; the compare itself is tiny but dispatched.
-        fixed_ops = 2
-        return SchemeCost(flops_mxu, flops_vpu, bytes_hbm, fixed_ops)
-
-    if scheme == Scheme.BLOCK_1S:
-        # Per k-step per block: b_sum (bk*bn adds, recomputed gm times),
-        # weighted row-sum acc += A_tile @ b_sum as VPU multiply-add
-        # (2*bm*bk, recomputed gn times), plus the magnitude accumulator for
-        # the principled threshold (same cost again), plus final row-sum of
-        # the output tile (bm*bn once per block).
-        flops_vpu = b * (
-            gm * (k * n)            # b_sum recomputation across block rows
-            + 2.0 * m * k * gn * 2  # weighted row-sum + |.| bound accumulator
-            + m * n                 # output-tile row sums
-        )
-        bytes_hbm = b * float(gm * gn * 4 * 2)  # per-block residual flags
-        return SchemeCost(0.0, flops_vpu, bytes_hbm, 0)
-
-    if scheme == Scheme.BLOCK_2S:
-        # a_sum per block (bm*bk per step, recomputed gn times), b_sum
-        # (recomputed gm times), scalar dot (2*bk per step per block),
-        # output-tile total sum (bm*bn per block).
-        flops_vpu = b * (
-            m * k * gn
-            + k * n * gm
-            + 2.0 * k * gm * gn
-            + m * n
-        )
-        bytes_hbm = b * float(gm * gn * 4 * 2)
-        return SchemeCost(0.0, flops_vpu, bytes_hbm, 0)
-
-    if scheme == Scheme.REPLICA:
-        # Replicated block matmul accumulating to a single vector: the MXU
-        # work doubles (paper §4); comparison is in-register.
-        return SchemeCost(dims.flops, b * float(m * n), 0.0, 0)
-
-    raise ValueError(f"unhandled scheme {scheme}")
+    return default_registry().get(scheme).cost(dims, blocks, first_layer)
 
 
 def protected_time(

@@ -1,77 +1,59 @@
-"""Intensity-guided per-layer ABFT scheme selection (paper §5.3).
+"""Legacy selection facade (DEPRECATED — use core/policy.py).
 
-The selector picks, for every linear layer, the ABFT scheme with the lowest
-modeled execution-time overhead.  Two modes:
+The intensity-guided per-layer selection (paper §5.3) now lives in the
+ProtectionPolicy API: ``IntensityGuidedPolicy`` (analytic roofline),
+``ProfileGuidedPolicy`` (empirical table + analytic fallback),
+``FixedPolicy``, and the compiled ``ProtectionPlan``.  This module keeps
+the original entry points as thin delegations so existing callers and
+scripts keep working:
 
-* ``analytic`` (default) — the roofline model of schemes.py; paper §7.2
-  explicitly endorses substituting the empirical profile with an analytic
-  model.  Layers with AI below the device CMR end up on block-level ABFT,
-  layers above on global ABFT, exactly the paper's guideline.
-* ``profile`` — an empirical table measured by a pre-deployment profiling
-  pass (``repro.core.profiler``), mirroring the paper's CUTLASS-profiler
-  integration.  Falls back to analytic for unprofiled layers.
-
-Selections are cached per (dims, hardware) so the decision is made once per
-layer shape at trace time — never inside the compiled graph.
+* ``select_scheme(dims, hw, SelectorConfig(...))`` — builds the
+  equivalent policy (``policy_from_selector``) and delegates; decisions
+  are bit-identical to the policy API because they ARE the policy API.
+* ``selection_report`` — builds a ``ProtectionPlan`` whose layer
+  descriptors carry the explicit ``first`` flag (a Mapping input marks
+  its first entry, matching the old enumeration behavior; pass
+  ``LayerSpec``s to place the flag on the true first layer).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Mapping
 
 from repro.core.hardware import DEFAULT, HardwareSpec
 from repro.core.intensity import GemmDims
-from repro.core.schemes import BlockShape, Scheme, overhead_pct, protected_time
+from repro.core.policy import (
+    LayerSpec,
+    ProtectionPlan,
+    Selection,
+    default_registry,
+    policy_from_selector,
+)
+from repro.core.schemes import BlockShape, Scheme, protected_time
 
-# Schemes eligible for automatic selection.  REPLICA and BLOCK_2S are kept
-# out of AUTO (the paper shows one-sided dominates both, §6.5) but remain
-# selectable explicitly for ablations.
-_AUTO_CANDIDATES = (Scheme.GLOBAL, Scheme.BLOCK_1S)
-
-
-@dataclasses.dataclass(frozen=True)
-class Selection:
-    scheme: Scheme
-    arithmetic_intensity: float
-    cmr: float
-    modeled_overhead_pct: dict
-    reason: str
+__all__ = [
+    "LayerSpec",
+    "Selection",
+    "SelectorConfig",
+    "select_scheme",
+    "selection_report",
+    "modeled_layer_time",
+]
 
 
 @dataclasses.dataclass(frozen=True)
 class SelectorConfig:
+    """DEPRECATED mode-string selector config; ``policy_from_selector``
+    maps it onto the ProtectionPolicy it denotes."""
+
     mode: str = "analytic"                 # "analytic" | "profile" | "fixed"
     fixed_scheme: Scheme = Scheme.BLOCK_1S  # used when mode == "fixed"
     blocks: BlockShape = BlockShape()
-    candidates: tuple = _AUTO_CANDIDATES
-
-
-@functools.lru_cache(maxsize=4096)
-def _select_analytic(
-    dims: GemmDims,
-    hw: HardwareSpec,
-    blocks: BlockShape,
-    candidates: tuple,
-    first_layer: bool,
-) -> Selection:
-    overheads = {
-        s: overhead_pct(s, dims, hw, blocks, first_layer) for s in candidates
-    }
-    best = min(candidates, key=lambda s: (overheads[s], s.value))
-    ai = dims.arithmetic_intensity
-    reason = (
-        f"AI={ai:.1f} {'<' if ai < hw.cmr else '>='} CMR={hw.cmr:.0f}; "
-        f"min modeled overhead -> {best.value}"
-    )
-    return Selection(
-        scheme=best,
-        arithmetic_intensity=ai,
-        cmr=hw.cmr,
-        modeled_overhead_pct={s.value: overheads[s] for s in candidates},
-        reason=reason,
-    )
+    # () => every auto-eligible AND available registered scheme (the
+    # built-ins: global + block_1s — REPLICA/BLOCK_2S stay out, one-sided
+    # dominates both per paper §6.5); pin a tuple to override
+    candidates: tuple = ()
 
 
 def select_scheme(
@@ -81,56 +63,38 @@ def select_scheme(
     profile_table: Mapping[GemmDims, Scheme] | None = None,
     first_layer: bool = False,
 ) -> Selection:
-    """Pick the ABFT scheme for one linear layer."""
-    if config.mode == "fixed":
-        return Selection(
-            scheme=config.fixed_scheme,
-            arithmetic_intensity=dims.arithmetic_intensity,
-            cmr=hw.cmr,
-            modeled_overhead_pct={},
-            reason=f"fixed scheme {config.fixed_scheme.value}",
-        )
+    """Pick the ABFT scheme for one linear layer (legacy entry point)."""
     if config.mode == "profile" and profile_table and dims in profile_table:
-        scheme = profile_table[dims]
+        # legacy semantics preserved: a LIVE O(1) table hit per call —
+        # canonicalizing the whole table into a ProfileGuidedPolicy per
+        # select would re-sort it for every layer site.  Long-lived
+        # tables should build the policy once (profiler.
+        # build_profile_policy) instead of passing a dict here.
         return Selection(
-            scheme=scheme,
+            scheme=default_registry().get(profile_table[dims]).scheme,
             arithmetic_intensity=dims.arithmetic_intensity,
             cmr=hw.cmr,
             modeled_overhead_pct={},
             reason="empirical profile table",
         )
-    return _select_analytic(
-        dims, hw, config.blocks, tuple(config.candidates), first_layer
-    )
+    policy = policy_from_selector(config)
+    return policy.select(dims, hw, first_layer=first_layer)
 
 
 def selection_report(
-    layer_dims: Mapping[str, GemmDims],
+    layer_dims,
     hw: HardwareSpec = DEFAULT,
     config: SelectorConfig = SelectorConfig(),
 ) -> list[dict]:
     """Human-readable per-layer selection table (used by the examples and
-    the pre-deployment report)."""
-    rows = []
-    for i, (name, dims) in enumerate(layer_dims.items()):
-        sel = select_scheme(dims, hw, config, first_layer=(i == 0))
-        rows.append(
-            {
-                "layer": name,
-                "m": dims.m,
-                "k": dims.k,
-                "n": dims.n,
-                "batch": dims.batch,
-                "ai": round(sel.arithmetic_intensity, 2),
-                "bound": "compute" if sel.arithmetic_intensity >= hw.cmr
-                else "bandwidth",
-                "scheme": sel.scheme.value,
-                "overheads_pct": {
-                    k: round(v, 3) for k, v in sel.modeled_overhead_pct.items()
-                },
-            }
-        )
-    return rows
+    the pre-deployment report).  ``layer_dims``: a ``{name: GemmDims}``
+    mapping (first entry explicitly flagged as the first protected
+    layer) or an iterable of ``LayerSpec`` with the flag placed by the
+    caller."""
+    plan = ProtectionPlan.build(
+        layer_dims, hw=hw, policy=policy_from_selector(config),
+        model="report", phase="report")
+    return plan.report_rows()
 
 
 def modeled_layer_time(

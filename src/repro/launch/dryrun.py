@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.configs import ALL_ARCHS, get_config
 from repro.core.hardware import TPU_V5E
+from repro.core.policy import FixedPolicy, IntensityGuidedPolicy
 from repro.core.protected import ABFTConfig
 from repro.core.schemes import Scheme
 from repro.distributed import sharding as shd
@@ -64,16 +65,18 @@ def skip_reason(arch: str, shape: str) -> str | None:
 
 
 def dryrun_abft(arch: str) -> ABFTConfig:
-    """ABFT policy used inside the dry-run graph: auto-selected schemes with
-    the XLA emulation of the fused kernel (use_pallas=False; see
-    core/protected.py — a custom-call's internals are opaque to
-    cost_analysis either way)."""
+    """ABFT policy used inside the dry-run graph: intensity-guided
+    selection (ProtectionPolicy API) with the XLA emulation of the fused
+    kernel (use_pallas=False; see core/protected.py — a custom-call's
+    internals are opaque to cost_analysis either way)."""
     mode = VARIANT.get("abft", "auto")
     if mode == "off":
         return ABFTConfig.off()
     if mode == "auto":
-        return ABFTConfig(scheme=Scheme.AUTO, use_pallas=False)
-    return ABFTConfig(scheme=Scheme(mode), use_pallas=False)
+        return ABFTConfig.from_policy(IntensityGuidedPolicy(),
+                                      use_pallas=False)
+    return ABFTConfig.from_policy(FixedPolicy(Scheme(mode)),
+                                  use_pallas=False)
 
 
 def _moment_dtype(cfg) -> str:

@@ -15,11 +15,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ALL_ARCHS, get_config, scaled_down
+from repro.core.policy import FixedPolicy, IntensityGuidedPolicy
 from repro.core.protected import ABFTConfig
 from repro.core.faults import FaultSpec
 from repro.core.schemes import Scheme
 from repro.models import ModelFault, build_model
 from repro.serve.engine import RecoveryPolicy, Request, ServeEngine
+
+
+def _chunk_tokens(v: str):
+    """--chunk-tokens value: an int budget or 'auto' (roofline-tuned)."""
+    if str(v).lower() == "auto":
+        return "auto"
+    return int(v)
 
 
 def main(argv=None) -> int:
@@ -49,11 +57,18 @@ def main(argv=None) -> int:
     ap.add_argument("--admit-lookahead", type=int, default=8,
                     help="bounded admission lookahead past a deferred "
                          "head request (HOL-blocking fix)")
-    ap.add_argument("--chunk-tokens", type=int, default=None,
+    ap.add_argument("--chunk-tokens", type=_chunk_tokens, default=None,
                     help="chunked-prefill step token budget: decode "
                          "tokens pack first, the remainder is filled "
                          "with prompt chunks, so admission never stalls "
-                         "decode (attention-only models)")
+                         "decode (attention-only models).  'auto' picks "
+                         "the smallest budget whose mixed-step intensity "
+                         "clears the device CMR (roofline autotuning) "
+                         "and re-tunes as occupancy drifts")
+    ap.add_argument("--plan-out", default=None,
+                    help="dump the engine's compiled ProtectionPlan "
+                         "(per-layer selections + step fast path) as a "
+                         "JSON deployment artifact")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 samples per slot")
     ap.add_argument("--top-k", type=int, default=0)
@@ -67,8 +82,9 @@ def main(argv=None) -> int:
     params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)
     abft = (
         ABFTConfig.off() if args.abft == "off"
-        else ABFTConfig(
-            scheme=Scheme.AUTO if args.abft == "auto" else Scheme(args.abft),
+        else ABFTConfig.from_policy(
+            IntensityGuidedPolicy() if args.abft == "auto"
+            else FixedPolicy(Scheme(args.abft)),
             use_pallas=False)
     )
     policy = RecoveryPolicy(
@@ -84,6 +100,10 @@ def main(argv=None) -> int:
                          chunk_tokens=args.chunk_tokens,
                          temperature=args.temperature, top_k=args.top_k,
                          seed=args.seed)
+    if args.plan_out:
+        with open(args.plan_out, "w") as fh:
+            fh.write(engine.plan.to_json())
+        print(f"wrote protection plan -> {args.plan_out}")
     rng = np.random.default_rng(0)
     reqs = [
         Request(uid=i,
@@ -114,6 +134,8 @@ def main(argv=None) -> int:
         "prefill_chunks": engine.stats.prefill_chunks,
         "mixed_steps": engine.stats.mixed_steps,
         "decode_only_steps": engine.stats.decode_only_steps,
+        "chunk_tokens": engine.chunk_tokens,
+        "chunk_budget_retunes": engine.stats.chunk_budget_retunes,
         "errors": {r.uid: r.error for r in reqs if r.error},
         "cache": engine.cache_stats(),
     }))

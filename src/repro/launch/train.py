@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ALL_ARCHS, get_config, scaled_down
+from repro.core.policy import FixedPolicy, IntensityGuidedPolicy
 from repro.core.protected import ABFTConfig
 from repro.core.schemes import Scheme
 from repro.data.pipeline import DataConfig
@@ -43,11 +44,15 @@ def scale_config(cfg, scale: str):
 
 
 def abft_config(mode: str) -> ABFTConfig:
+    """Mode string -> ABFT config via the ProtectionPolicy API (the
+    ABFTConfig facade only carries execution knobs)."""
     if mode == "off":
         return ABFTConfig.off()
     if mode == "auto":
-        return ABFTConfig(scheme=Scheme.AUTO, use_pallas=False)
-    return ABFTConfig(scheme=Scheme(mode), use_pallas=False)
+        return ABFTConfig.from_policy(IntensityGuidedPolicy(),
+                                      use_pallas=False)
+    return ABFTConfig.from_policy(FixedPolicy(Scheme(mode)),
+                                  use_pallas=False)
 
 
 def main(argv=None) -> int:

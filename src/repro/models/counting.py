@@ -167,6 +167,33 @@ def layer_gemms(
     return sites
 
 
+def layer_specs(
+    cfg: ModelConfig, n_tokens: int, phase: str = "prefill",
+    dtype_bytes: int = 2,
+) -> list:
+    """Plan-ready layer descriptors (``policy.LayerSpec``) for one
+    representative layer of each kind plus the head.
+
+    The ``first`` flag — global ABFT's unfused activation-checksum read
+    (schemes.cost_global) — is placed EXPLICITLY on the mixer projection
+    of the model's actual first layer (``layer_tags(cfg)[0]``), not on
+    whichever site happens to enumerate first in the dict.  A jamba-style
+    hybrid whose stack opens with a mamba block therefore flags
+    ``ssm.in``, never ``attn.q``."""
+    from repro.core.policy import LayerSpec
+
+    sites = layer_gemms(cfg, n_tokens, phase, dtype_bytes)
+    first_mixer = layer_tags(cfg)[0].split(":")[0]
+    first_site = {
+        "attn": "attn.q", "mla": "mla.q_a", "mamba": "ssm.in",
+    }.get(first_mixer)
+    return [
+        LayerSpec(name=name, dims=dims, count=count,
+                  first=(name == first_site))
+        for name, (dims, count) in sites.items()
+    ]
+
+
 def aggregate_ai(cfg: ModelConfig, n_tokens: int, phase: str = "prefill"):
     """Aggregate arithmetic intensity over all linear layers (paper §3.2)."""
     sites = layer_gemms(cfg, n_tokens, phase)

@@ -80,7 +80,8 @@ def constrain(ctx, x, *spec):
 
 @dataclasses.dataclass(frozen=True)
 class LayerCtx:
-    """Per-forward context: static ABFT policy + traced fault target +
+    """Per-forward context: the static ABFT config (a facade over the
+    active ProtectionPolicy, core/policy.py) + traced fault target +
     traced current layer index (set inside scanned stacks)."""
 
     abft: ABFTConfig = ABFTConfig()
@@ -93,7 +94,14 @@ class LayerCtx:
 
 
 def dense(x, w, ctx: LayerCtx, site: str, b=None, out_dtype=None):
-    """ABFT-protected ``x @ w (+ b)``.  Returns (y, flag: scalar bool)."""
+    """ABFT-protected ``x @ w (+ b)``.  Returns (y, flag: scalar bool).
+
+    Scheme selection happens at trace time via the config's
+    ProtectionPolicy (``ctx.abft.effective_policy()``).  Layers inside
+    scanned stacks share one trace, so per-layer static distinctions —
+    like the first protected layer's extra activation-checksum read —
+    live in the analytic ``ProtectionPlan`` (explicit ``LayerSpec.first``
+    descriptors), not here."""
     fault = None
     if ctx.fault is not None:
         here = ctx.fault.site == SITES[site]

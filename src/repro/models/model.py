@@ -566,6 +566,21 @@ class Model:
         token prefix.)"""
         return self.supports_prefix_sharing
 
+    def protection_plan(self, hw=None, policy=None, *,
+                        phase: str = "serve", n_tokens: int = 1,
+                        dtype_bytes: int = 2):
+        """Compile this model's ProtectionPlan (core/policy.py): per-site
+        intensity-guided selections with the explicit first-layer flag,
+        plus the serving fast paths (``for_step``, ``tune_chunk_budget``)
+        the engine consults.  ``n_tokens`` sets the representative GEMM M
+        dim (batch*seq for full passes; batch/slots for decode)."""
+        from repro.core.hardware import DEFAULT
+        from repro.core.policy import ProtectionPlan
+
+        return ProtectionPlan.for_model(
+            self.cfg, hw=hw or DEFAULT, policy=policy, phase=phase,
+            n_tokens=n_tokens, dtype_bytes=dtype_bytes)
+
     def copy_paged_blocks(self, cache, src, dst):
         """Functional device copy ``pool[dst[i]] <- pool[src[i]]`` on
         every paged attention leaf — the COW payload move.  Walks the

@@ -78,17 +78,27 @@ cache; the step's decode call and earlier chunks are never re-executed.
 Requires ``model.supports_chunked_prefill`` (attention-only stacks —
 SSM recurrence state cannot resume mid-prompt through the prefill path).
 
-Per-step intensity-guided re-selection: each executed step's ACTUAL
-token composition (decode + chunk tokens) defines a representative
-``GemmDims`` whose arithmetic intensity is fed back through
-``select_scheme`` — decode-only steps sit deep in the memory-bound
-regime (fused block ABFT), mixed steps carrying a chunk can cross into
-the compute-bound regime (global ABFT).  The per-step ``(composition,
-intensity, scheme)`` decisions are recorded in
-``EngineStats.selection_trace``; the jitted calls resolve ``Scheme.AUTO``
+Per-step intensity-guided re-selection: the engine compiles a
+``ProtectionPlan`` (core/policy.py) for its (model, hardware, serving)
+triple at construction; each executed step's ACTUAL token composition
+(decode + chunk tokens) goes through the plan's cached
+``for_step(decode, prefill)`` fast path — decode-only steps sit deep in
+the memory-bound regime (fused block ABFT), mixed steps carrying a
+chunk can cross into the compute-bound regime (global ABFT).  The
+per-step ``(composition, intensity, scheme)`` decisions are recorded in
+``EngineStats.selection_trace``; the jitted calls resolve the scheme
 per GEMM shape at trace time, so distinct compositions genuinely execute
 distinct schemes (the paper's §5.3 selection re-made at serving time,
 per step instead of per static phase).
+
+``chunk_tokens="auto"`` delegates the budget itself to the plan's
+roofline autotuner (``plan.tune_chunk_budget``): the smallest per-step
+token budget whose mixed-step arithmetic intensity clears the device
+CMR (or, when the step geometry cannot reach the CMR, the
+maximum-intensity budget under ``max_len``).  The budget re-tunes as
+slot occupancy drifts — its floor tracks resident decode tokens so
+prefill always progresses — with re-tunes counted in
+``EngineStats.chunk_budget_retunes``.
 
 Engine API
 ----------
@@ -169,7 +179,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.intensity import step_gemm_dims
 from repro.core.protected import ABFTConfig
 from repro.models.layers import LayerCtx, ModelFault
 from repro.models.model import Model
@@ -239,6 +248,7 @@ class EngineStats:
     # chunked prefill
     prefill_chunks: int = 0    # prompt-chunks executed (one per row per step)
     chunk_retries: int = 0     # clean re-executions of a faulted chunk only
+    chunk_budget_retunes: int = 0  # auto-budget changes as occupancy drifts
     mixed_steps: int = 0       # steps carrying decode AND prefill tokens
     decode_only_steps: int = 0
     prefill_only_steps: int = 0
@@ -339,7 +349,7 @@ class ServeEngine:
                  cache_kind: str = "dense", block_size: int = 16,
                  num_blocks: int | None = None,
                  prefix_sharing: bool = False, admit_lookahead: int = 8,
-                 chunk_tokens: int | None = None,
+                 chunk_tokens: int | str | None = None,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0):
         assert slots >= 1
         self.model = model
@@ -357,8 +367,25 @@ class ServeEngine:
         self.top_k = int(top_k)
         self.admit_lookahead = int(admit_lookahead)
         self._dtype_bytes = jnp.dtype(dtype).itemsize
-        # chunked-prefill scheduler: per-step token budget + chunk cursors
+        # compiled protection plan for this (model, hardware, serving)
+        # triple: the per-step intensity-guided fast path step() consults
+        # plus the roofline chunk-budget autotuner (core/policy.py)
+        self.plan = model.protection_plan(
+            hw=abft.hardware, policy=abft.effective_policy(),
+            phase="serve", n_tokens=slots, dtype_bytes=self._dtype_bytes)
+        # chunked-prefill scheduler: per-step token budget + chunk cursors.
+        # chunk_tokens="auto" asks the plan for the smallest budget whose
+        # mixed-step arithmetic intensity clears the device CMR (ROADMAP
+        # autotuning item); the budget re-tunes as slot occupancy drifts
+        # (_retune_chunk_budget).
+        self.chunk_auto = chunk_tokens == "auto"
+        if self.chunk_auto:
+            chunk_tokens = self.plan.tune_chunk_budget(lo=8, hi=max_len)
         if chunk_tokens is not None:
+            if not isinstance(chunk_tokens, int):
+                raise ValueError(
+                    f"chunk_tokens must be an int or 'auto', got "
+                    f"{chunk_tokens!r}")
             if chunk_tokens < 1:
                 raise ValueError("chunk_tokens must be >= 1")
             if not model.supports_chunked_prefill:
@@ -756,22 +783,30 @@ class ServeEngine:
 
     def _observe_step_mix(self, decode_tokens: int,
                           prefill_tokens: int) -> None:
-        """Re-run the paper's intensity-guided selection for THIS step's
-        actual token composition and record (intensity, scheme) in the
-        stats trace.  The representative dims are the widest per-token
-        projection (d_model x d_ff); the jitted calls re-resolve
-        Scheme.AUTO per GEMM shape at trace time anyway — this records
-        the step-level decision those shapes imply."""
-        tokens = decode_tokens + prefill_tokens
-        if tokens == 0:
+        """Record THIS step's intensity-guided (composition, intensity,
+        scheme) decision via the plan's cached per-step fast path
+        (``plan.for_step``).  The representative dims are the widest
+        per-token projection (d_model x d_ff); the jitted calls
+        re-resolve the scheme per GEMM shape at trace time anyway — this
+        records the step-level decision those shapes imply."""
+        if decode_tokens + prefill_tokens == 0:
             return
-        cfg = self.model.cfg
-        dims = step_gemm_dims(tokens, cfg.d_model, cfg.d_ff,
-                              dtype_bytes=self._dtype_bytes)
-        scheme = self.abft.resolve(dims)    # one policy path — protected.py
+        sel = self.plan.for_step(decode_tokens, prefill_tokens)
         self.stats.observe_selection(decode_tokens, prefill_tokens,
-                                     dims.arithmetic_intensity,
-                                     scheme.value)
+                                     sel.arithmetic_intensity,
+                                     sel.scheme_name)
+
+    def _retune_chunk_budget(self) -> None:
+        """Auto-budget re-tuning as slot occupancy drifts: the budget
+        floor tracks resident decode tokens (decode packs first — the
+        floor guarantees prefill a quantum of progress every step),
+        while the CMR target keeps full mixed steps compute-bound
+        whenever the step geometry can reach it."""
+        budget = self.plan.tune_chunk_budget(
+            decode_tokens=len(self.active), lo=8, hi=self.max_len)
+        if budget != self.chunk_tokens:
+            self.chunk_tokens = budget
+            self.stats.chunk_budget_retunes += 1
 
     def _plan_chunks(self, budget: int) -> list:
         """Pick this step's prefill chunks: cursors in admission (FIFO)
@@ -793,6 +828,8 @@ class ServeEngine:
         step fault lands on the prefill chunk when one is scheduled, else
         on the decode call — each call retries independently, so a chunk
         fault re-executes ONLY that chunk."""
+        if self.chunk_auto:
+            self._retune_chunk_budget()
         n_decode = len(self.active)
         rows = self._plan_chunks(max(0, self.chunk_tokens - n_decode))
         prefill_tokens = sum(take for _, _, take, _ in rows)

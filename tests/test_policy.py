@@ -1,0 +1,473 @@
+"""ProtectionPolicy API tests: scheme registry, policy/legacy golden
+equivalence, the AI==CMR boundary predicate, explicit first-layer flags,
+ProtectionPlan JSON round-trip, chunk-budget autotuning, and engine
+facade equivalence (ABFTConfig streams == ProtectionPolicy streams)."""
+
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, scaled_down
+from repro.core import (
+    ABFTConfig,
+    FaultSpec,
+    FixedPolicy,
+    GemmDims,
+    IntensityGuidedPolicy,
+    LayerSpec,
+    NVIDIA_T4,
+    ProfileGuidedPolicy,
+    ProtectionPlan,
+    Scheme,
+    SchemeSpec,
+    SelectorConfig,
+    StepShape,
+    TPU_V5E,
+    compute_bound_ai,
+    default_registry,
+    is_compute_bound,
+    overhead_pct,
+    protected_matmul,
+    scheme_cost,
+    select_scheme,
+    selection_report,
+)
+from repro.core.checksums import CheckResult
+from repro.core.hardware import HardwareSpec
+from repro.core.policy import SchemeRegistry, policy_from_json
+from repro.core.schemes import SchemeCost, cost_none
+from repro.models import ModelFault, build_model
+from repro.serve.engine import Request, ServeEngine
+
+# hardware with a CMR the scaled test model's f32 step geometry can
+# actually clear (see test_chunked_prefill.FLIP_HW): the autotuner has a
+# real crossing to find instead of saturating at the cap
+FLIP_HW = HardwareSpec(
+    name="flip", peak_flops=1e10, vpu_flops=2.6e8, hbm_bw=1e9,
+    ici_bw=1e9, hbm_bytes=1 << 30, vmem_bytes=1 << 20,
+    fixed_op_overhead_s=1e-6)
+
+
+# ---------------------------------------------------------------- registry
+
+def test_registry_duplicate_registration_rejected():
+    reg = SchemeRegistry()
+    reg.register(SchemeSpec("custom", cost_none))
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register(SchemeSpec("custom", cost_none))
+    reg.register(SchemeSpec("custom", cost_none), override=True)  # explicit
+
+
+def test_registry_unknown_scheme_rejected():
+    reg = SchemeRegistry()
+    with pytest.raises(KeyError, match="unknown scheme 'nope'"):
+        reg.get("nope")
+    with pytest.raises(KeyError, match="unknown scheme"):
+        FixedPolicy("nope").select(GemmDims(m=8, k=8, n=8), TPU_V5E)
+
+
+def test_registry_builtins_and_auto_candidates():
+    reg = default_registry()
+    assert set(reg.names()) >= {"none", "global", "block_1s", "block_2s",
+                                "replica"}
+    # one-sided dominates (paper §6.5): only global + block_1s are auto
+    assert reg.auto_candidates() == ("block_1s", "global")
+
+
+def test_registered_scheme_is_a_registration_not_a_core_edit(rng):
+    """An FT-CNN-style plug-in scheme: registering (cost, executor) makes
+    it flow through scheme_cost AND protected_matmul with no edit to
+    schemes.py / protected.py."""
+    reg = default_registry()
+    name = "test_plugin_echo"
+    if name not in reg:
+        def _cost(dims, blocks, first_layer):
+            return SchemeCost(0.0, float(dims.m), 0.0, 1)
+
+        def _exec(x, w, cfg, *, wsums, out_dtype, fault):
+            y = jnp.matmul(x, w).astype(out_dtype)
+            return y, CheckResult.clean()
+
+        reg.register(SchemeSpec(name, _cost, executor=_exec))
+    c = scheme_cost(name, GemmDims(m=32, k=16, n=8))
+    assert (c.flops_vpu, c.fixed_ops) == (32.0, 1)
+    x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    y, chk = protected_matmul(
+        x, w, ABFTConfig.from_policy(FixedPolicy(name)),
+        out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=1e-5)
+    assert not bool(chk.flag)
+    assert overhead_pct(name, GemmDims(m=32, k=16, n=8), TPU_V5E) > 0
+
+
+def test_registry_mutation_invalidates_cached_selections():
+    """Re-registering a scheme with a different cost model must not
+    serve stale memoized selections (register/unregister clear the
+    analytic-selection cache)."""
+    reg = default_registry()
+    name = "test_cheap_then_pricey"
+    dims = GemmDims(m=16, k=64, n=64)
+    zero = SchemeCost(0.0, 0.0, 0.0, 0)
+    pricey = SchemeCost(1e18, 1e18, 1e18, 64)
+    reg.register(SchemeSpec(name, lambda d, b, f: zero,
+                            auto_eligible=True))
+    try:
+        pol = IntensityGuidedPolicy()
+        assert pol.select(dims, TPU_V5E).scheme_name == name
+        reg.register(SchemeSpec(name, lambda d, b, f: pricey,
+                                auto_eligible=True), override=True)
+        assert pol.select(dims, TPU_V5E).scheme_name != name
+    finally:
+        reg.unregister(name)
+    assert IntensityGuidedPolicy().select(dims, TPU_V5E).scheme_name in (
+        "block_1s", "global")
+
+
+def test_availability_predicate_sees_the_active_config(rng):
+    """A kernel-gated auto-eligible scheme is offered to selection only
+    on backends whose ABFTConfig satisfies its predicate — resolve()
+    threads the config through to auto_candidates()."""
+    reg = default_registry()
+    name = "test_pallas_gated"
+    seen = []
+
+    def _avail(cfg):
+        seen.append(cfg)
+        return cfg is not None and cfg.use_pallas
+
+    def _must_not_run(*a, **k):
+        raise AssertionError("gated executor must not run on this backend")
+
+    reg.register(SchemeSpec(name, cost_none, executor=_must_not_run,
+                            available=_avail, auto_eligible=True))
+    try:
+        cfg_no = ABFTConfig(use_pallas=False)
+        assert name not in reg.auto_candidates(cfg_no)
+        assert name in reg.auto_candidates(
+            ABFTConfig(use_pallas=True))
+        # backend unknown (plan building / legacy select_scheme): refused
+        assert name not in reg.auto_candidates(None)
+        x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+        seen.clear()
+        protected_matmul(x, w, cfg_no, out_dtype=jnp.float32)
+        assert seen and all(c is cfg_no for c in seen)
+    finally:
+        reg.unregister(name)
+    with pytest.raises(KeyError):
+        reg.get(name)
+
+
+# --------------------------------------------------- golden equivalence
+
+def _legacy_select(dims, hw, first_layer):
+    """The pre-redesign _select_analytic, verbatim: candidate with the
+    min modeled overhead, ties broken by scheme value."""
+    candidates = (Scheme.GLOBAL, Scheme.BLOCK_1S)
+    overheads = {
+        s: overhead_pct(s, dims, hw, first_layer=first_layer)
+        for s in candidates
+    }
+    best = min(candidates, key=lambda s: (overheads[s], s.value))
+    return best, {s.value: overheads[s] for s in candidates}
+
+
+def test_golden_equivalence_policy_vs_legacy_grid():
+    """New-policy selections match the legacy selector across a
+    (m, k, n, batch) x hardware x first_layer grid — schemes AND modeled
+    overheads."""
+    policy = IntensityGuidedPolicy()
+    grid = itertools.product(
+        (1, 8, 64, 512, 2048),          # m
+        (64, 1024, 8192),               # k
+        (64, 4096),                     # n
+        (1, 4),                         # batch
+        (TPU_V5E, NVIDIA_T4),
+        (False, True),                  # first_layer
+    )
+    for m, k, n, b, hw, first in grid:
+        dims = GemmDims(m=m, k=k, n=n, batch=b)
+        want_scheme, want_over = _legacy_select(dims, hw, first)
+        sel = policy.select(dims, hw, first_layer=first)
+        assert sel.scheme == want_scheme, (dims, hw.name, first)
+        assert sel.modeled_overhead_pct == pytest.approx(want_over)
+        # and the legacy select_scheme entry point agrees too
+        legacy = select_scheme(dims, hw, first_layer=first)
+        assert legacy.scheme == want_scheme
+
+
+def test_fixed_and_profile_policies_match_selector_modes():
+    d = GemmDims(m=4096, k=4096, n=4096)
+    assert FixedPolicy(Scheme.REPLICA).select(d).scheme == Scheme.REPLICA
+    assert select_scheme(
+        d, config=SelectorConfig(mode="fixed", fixed_scheme=Scheme.REPLICA)
+    ).scheme == Scheme.REPLICA
+    small = GemmDims(m=64, k=64, n=64)
+    pol = ProfileGuidedPolicy(table={small: Scheme.GLOBAL})
+    hit = pol.select(small)
+    assert hit.scheme == Scheme.GLOBAL
+    assert hit.reason == "empirical profile table"
+    # unprofiled shape: analytic fallback, identical to the pure policy
+    miss = pol.select(d, TPU_V5E)
+    assert miss.scheme == IntensityGuidedPolicy().select(d, TPU_V5E).scheme
+
+
+# ---------------------------------------------------- AI == CMR boundary
+
+def test_boundary_ai_equals_cmr_is_bandwidth_everywhere():
+    """Regression (the old selector printed '>=' while is_compute_bound
+    used '>'): at AI exactly == CMR every surface agrees on
+    bandwidth-bound."""
+    dims = GemmDims(m=256, k=256, n=256)
+    hw = dataclasses.replace(
+        TPU_V5E, peak_flops=dims.arithmetic_intensity, hbm_bw=1.0)
+    assert hw.cmr == dims.arithmetic_intensity          # exact boundary
+    assert not is_compute_bound(dims, hw)
+    assert not compute_bound_ai(dims.arithmetic_intensity, hw)
+    sel = IntensityGuidedPolicy().select(dims, hw)
+    assert "<=" in sel.reason and ">" not in sel.reason.split("->")[0]
+    rows = selection_report({"boundary": dims}, hw)
+    assert rows[0]["bound"] == "bandwidth"
+    # one epsilon above the boundary flips every surface together
+    hw_lo = dataclasses.replace(hw, peak_flops=hw.peak_flops * (1 - 1e-9))
+    assert is_compute_bound(dims, hw_lo)
+    assert selection_report({"boundary": dims}, hw_lo)[0]["bound"] == \
+        "compute"
+
+
+# ------------------------------------------------- explicit first flag
+
+def test_layer_spec_first_flag_is_explicit_not_positional():
+    """The plan honors LayerSpec.first wherever it sits — the old
+    enumeration heuristic flagged whichever entry came first."""
+    thin = GemmDims(m=16, k=4096, n=4096)
+    specs = [
+        LayerSpec("a", thin, first=False),
+        LayerSpec("b", thin, first=True),
+    ]
+    plan = ProtectionPlan.build(specs, TPU_V5E, IntensityGuidedPolicy())
+    over = {e.layer.name: e.selection.modeled_overhead_pct["global"]
+            for e in plan.entries}
+    # the first-flagged layer pays global ABFT's extra read of A
+    assert over["b"] > over["a"]
+    rows = plan.report_rows()
+    assert [r["first"] for r in rows] == [False, True]
+    # legacy mapping input: first entry flagged, matching old behavior
+    rows = selection_report({"x": thin, "y": thin})
+    assert [r["first"] for r in rows] == [True, False]
+
+
+def test_model_layer_specs_flag_true_first_mixer():
+    from repro.models.counting import layer_specs
+
+    cfg = scaled_down(get_config("llama3.2-1b"), n_layers=2)
+    specs = layer_specs(cfg, 32)
+    flags = {s.name: s.first for s in specs}
+    assert flags["attn.q"] and not any(
+        v for k, v in flags.items() if k != "attn.q")
+    # hybrid whose stack opens with a mamba block flags ssm.in instead
+    jcfg = scaled_down(get_config("jamba-v0.1-52b"))
+    jflags = {s.name: s.first for s in layer_specs(jcfg, 32)}
+    assert jflags["ssm.in"] and not jflags.get("attn.q", False)
+
+
+# ------------------------------------------------------- plan round-trip
+
+def test_plan_json_roundtrip_identical_selections():
+    cfg = scaled_down(get_config("llama3.2-1b"), n_layers=2)
+    plan = ProtectionPlan.for_model(
+        cfg, hw=FLIP_HW, policy=IntensityGuidedPolicy(), phase="serve",
+        n_tokens=4, dtype_bytes=4)
+    plan2 = ProtectionPlan.from_json(plan.to_json())
+    assert plan2.hardware == plan.hardware
+    assert plan2.policy == plan.policy
+    assert [e.layer for e in plan2.entries] == [e.layer for e in plan.entries]
+    for e, e2 in zip(plan.entries, plan2.entries):
+        assert e2.selection.scheme_name == e.selection.scheme_name
+    # identical per-step schemes after reload — the artifact contract
+    for decode, prefill in itertools.product((0, 1, 4), (0, 8, 40, 200)):
+        if decode + prefill == 0:
+            continue
+        assert (plan2.for_step(decode, prefill).scheme_name
+                == plan.for_step(decode, prefill).scheme_name)
+    assert plan2.tune_chunk_budget(lo=8, hi=512) == \
+        plan.tune_chunk_budget(lo=8, hi=512)
+
+
+def test_plan_roundtrip_fixed_and_profile_policies():
+    step = StepShape(d_model=64, d_ff=128, dtype_bytes=4)
+    small = GemmDims(m=8, k=64, n=128, dtype_bytes=4)
+    for pol in (
+        FixedPolicy(Scheme.GLOBAL),
+        ProfileGuidedPolicy(table={small: Scheme.GLOBAL}),
+    ):
+        plan = ProtectionPlan.build(
+            {"l0": small}, FLIP_HW, pol, step_shape=step)
+        plan2 = ProtectionPlan.from_json(plan.to_json())
+        assert plan2.policy == plan.policy
+        assert plan2.for_step(8).scheme_name == plan.for_step(8).scheme_name
+
+
+def test_policy_json_unknown_kind_rejected():
+    with pytest.raises(ValueError, match="unknown policy kind"):
+        policy_from_json({"kind": "martian"})
+
+
+# -------------------------------------------------- chunk-budget tuning
+
+def _flip_plan():
+    cfg = scaled_down(get_config("llama3.2-1b"), n_layers=2)
+    return ProtectionPlan.for_model(
+        cfg, hw=FLIP_HW, policy=IntensityGuidedPolicy(), phase="serve",
+        n_tokens=4, dtype_bytes=4)
+
+
+def test_tune_chunk_budget_smallest_clearing_budget():
+    """tput_margin=None: the bare roofline crossing — the smallest
+    quantized budget whose mixed-step AI strictly clears the CMR."""
+    plan = _flip_plan()
+    b = plan.tune_chunk_budget(lo=8, hi=768, tput_margin=None)
+    assert b % 8 == 0
+    assert compute_bound_ai(plan.step_intensity(b), plan.hardware)
+    assert not compute_bound_ai(plan.step_intensity(b - 8), plan.hardware)
+    # floor tracks occupancy: below the crossing the smallest clearing
+    # budget is unchanged; above it the budget rides decode + quantum
+    for decode in (0, 4, 16):
+        assert plan.tune_chunk_budget(decode_tokens=decode, lo=8, hi=768,
+                                      tput_margin=None) == b
+    assert plan.tune_chunk_budget(decode_tokens=200, lo=8, hi=768,
+                                  tput_margin=None) == 208
+
+
+def test_tune_chunk_budget_throughput_margin():
+    """Default margin: the budget still clears the CMR but walks past
+    the knee until modeled per-token time is within 10% of the cap's —
+    so no fixed budget under the cap can beat it by more than 10%."""
+    plan = _flip_plan()
+    crossing = plan.tune_chunk_budget(lo=8, hi=768, tput_margin=None)
+    b = plan.tune_chunk_budget(lo=8, hi=768)
+    assert b >= crossing and b % 8 == 0
+    assert compute_bound_ai(plan.step_intensity(b), plan.hardware)
+    per_tok = plan.modeled_step_time(b) / b
+    cap_tok = plan.modeled_step_time(768) / 768
+    assert per_tok <= 1.1 * cap_tok
+    # every fixed budget in [crossing, cap]: auto within 10% modeled tput
+    for fixed in range(crossing, 769, 8):
+        fixed_tok = plan.modeled_step_time(fixed) / fixed
+        assert (1 / per_tok) / (1 / fixed_tok) >= 1 / 1.1 - 1e-9
+
+
+def test_tune_chunk_budget_caps_when_cmr_unattainable():
+    cfg = scaled_down(get_config("llama3.2-1b"), n_layers=2)
+    plan = ProtectionPlan.for_model(
+        cfg, hw=TPU_V5E, policy=IntensityGuidedPolicy(), n_tokens=4,
+        dtype_bytes=4)
+    # v5e CMR (~241) is unreachable for the 64x128 step geometry: the
+    # tuner returns the cap (max-intensity budget), never loops forever
+    assert plan.tune_chunk_budget(lo=8, hi=256) == 256
+
+
+# ---------------------------------------------------- engine integration
+
+MIX = [(5, 4), (23, 5), (11, 3), (30, 4)]     # (prompt_len, budget)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = scaled_down(get_config("llama3.2-1b"), n_layers=2)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)
+    return cfg, model, params
+
+
+def _mk_requests():
+    return [
+        Request(uid=i, prompt=(1 + np.arange(L, dtype=np.int32) % 50),
+                max_new_tokens=b)
+        for i, (L, b) in enumerate(MIX)
+    ]
+
+
+def _run(model, params, abft, *, fault_at=None, **kw):
+    eng = ServeEngine(model, params, slots=2, max_len=64, abft=abft,
+                      dtype=jnp.float32, **kw)
+    res = eng.run(_mk_requests(), fault_at=fault_at)
+    return eng, res
+
+
+def test_facade_equivalence_streams(small_model):
+    """Acceptance: engine streams under ABFTConfig(...) are byte-identical
+    to the same run under the equivalent ProtectionPolicy — dense, paged,
+    and chunked, faults included."""
+    _, model, params = small_model
+    legacy = ABFTConfig(scheme=Scheme.AUTO, use_pallas=False)
+    policy = ABFTConfig.from_policy(IntensityGuidedPolicy(),
+                                    use_pallas=False)
+    fault = (2, ModelFault.at(0, "mlp_down", FaultSpec.value(0, 1, 1e5)))
+    for kw in (
+        {},
+        {"cache_kind": "paged", "block_size": 16},
+        {"chunk_tokens": 16},
+        {"cache_kind": "paged", "block_size": 16, "chunk_tokens": 16},
+    ):
+        e1, r1 = _run(model, params, legacy, fault_at=fault, **kw)
+        e2, r2 = _run(model, params, policy, fault_at=fault, **kw)
+        assert r1 == r2, kw
+        assert e1.stats.faults_detected == e2.stats.faults_detected
+        assert e1.stats.selection_trace == e2.stats.selection_trace
+
+
+def test_engine_auto_chunk_budget(small_model):
+    """chunk_tokens='auto': the tuned budget clears the CMR, streams stay
+    byte-identical to the same budget passed explicitly (and to the
+    unchunked engine), and the trace shows compute-bound mixed steps."""
+    _, model, params = small_model
+    abft = ABFTConfig(scheme=Scheme.AUTO, use_pallas=False,
+                      hardware=FLIP_HW)
+    e_auto, r_auto = _run(model, params, abft, chunk_tokens="auto")
+    assert e_auto.chunk_auto
+    budget = e_auto.chunk_tokens
+    assert budget == e_auto.plan.tune_chunk_budget(lo=8, hi=64)
+    assert compute_bound_ai(e_auto.plan.step_intensity(budget), FLIP_HW)
+    e_fixed, r_fixed = _run(model, params, abft, chunk_tokens=budget)
+    assert r_auto == r_fixed
+    _, r_plain = _run(model, params, abft)
+    assert r_auto == r_plain
+    # full mixed steps carried `budget` tokens -> compute-bound -> global
+    mixed = [t for t in e_auto.stats.selection_trace
+             if t["decode"] and t["prefill"]]
+    full = [t for t in mixed if t["decode"] + t["prefill"] == budget]
+    assert all(t["scheme"] == "global" for t in full)
+
+
+def test_engine_auto_budget_retunes_with_occupancy(small_model):
+    """With a tiny CMR the smallest clearing budget IS the occupancy
+    floor, so the budget tracks resident decode tokens — slots filling
+    up re-tunes it upward, slots draining re-tunes it back (the ROADMAP
+    're-tune as slot occupancy drifts' behavior)."""
+    _, model, params = small_model
+    tiny_cmr = dataclasses.replace(FLIP_HW, peak_flops=5e8)   # CMR = 0.5
+    abft = ABFTConfig(scheme=Scheme.AUTO, use_pallas=False,
+                      hardware=tiny_cmr)
+    eng = ServeEngine(model, params, slots=4, max_len=64, abft=abft,
+                      dtype=jnp.float32, chunk_tokens="auto")
+    assert eng.chunk_tokens == 8                   # floor at 0 occupancy
+    reqs = [Request(uid=i, prompt=(1 + np.arange(3, dtype=np.int32)),
+                    max_new_tokens=6) for i in range(4)]
+    eng.run(reqs)
+    # once slots were occupied the floor rose past 8 -> budget re-tuned
+    assert eng.stats.chunk_budget_retunes >= 1
+    assert eng.chunk_tokens > 8
+
+
+def test_engine_rejects_bogus_chunk_tokens(small_model):
+    _, model, params = small_model
+    with pytest.raises(ValueError, match="int or 'auto'"):
+        ServeEngine(model, params, slots=2, max_len=64,
+                    abft=ABFTConfig(use_pallas=False), dtype=jnp.float32,
+                    chunk_tokens="fastest")
