@@ -1,0 +1,110 @@
+"""Schema + invariant gate for the protection-coverage audit JSON.
+
+CI runs ``python -m repro.launch.audit --all --json audit_coverage.json``
+and then this script: the fresh report must contain every key path the
+committed baseline (``AUDIT_coverage.json``) contains — including every
+audited config name — plus the audit's own acceptance invariants.  A
+model change that silently drops a config from the audit, de-registers a
+protected site, or reintroduces an unmarked GEMM fails the job instead
+of shipping.
+
+  PYTHONPATH=src python benchmarks/check_audit_schema.py new.json \
+      [baseline.json]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+# keys whose presence depends on the model family, not the schema:
+# known-unprotected kinds only exist for the archs that have the region,
+# and per-op diagnostic lists are empty when coverage is clean
+_CONDITIONAL = {"mla", "ssm_scan", "conv_stem", "unprotected",
+                "dim_mismatches", "plan_only", "trace_only"}
+
+
+def key_paths(node, prefix=()) -> set:
+    """All dict key paths in a JSON tree; list elements merge under one
+    wildcard step so entry counts don't matter."""
+    paths = set()
+    if isinstance(node, dict):
+        for k, v in node.items():
+            paths.add(prefix + (k,))
+            paths |= key_paths(v, prefix + (k,))
+    elif isinstance(node, list):
+        for item in node:
+            paths |= key_paths(item, prefix + ("[]",))
+    return paths
+
+
+def check(new: dict, baseline: dict) -> list:
+    errors = []
+    if new.get("schema") != baseline.get("schema"):
+        errors.append(
+            f"schema id {new.get('schema')!r} != "
+            f"baseline {baseline.get('schema')!r}")
+
+    missing = sorted(
+        key_paths(baseline) - key_paths(new),
+        key=lambda p: (len(p), p))
+    missing = [p for p in missing if not (set(p) & _CONDITIONAL)]
+    for p in missing:
+        errors.append(f"missing key path: {'.'.join(p)}")
+
+    for name, rep in sorted(new.get("configs", {}).items()):
+        frac = rep.get("protected_fraction")
+        if not isinstance(frac, (int, float)) or not 0.0 <= frac <= 1.0:
+            errors.append(f"{name}: protected_fraction {frac!r} not in "
+                          "[0, 1]")
+        elif frac < 1.0:
+            errors.append(
+                f"{name}: protected fraction {frac:.4f} < 1.0 — an "
+                "unmarked FLOP-carrying primitive reached the traced "
+                "entry points")
+        if not rep.get("crosscheck", {}).get("bijective"):
+            errors.append(f"{name}: plan <-> trace crosscheck is not "
+                          "bijective (stale or drifted ProtectionPlan)")
+        for ph, cov in sorted(rep.get("phases", {}).items()):
+            for op in cov.get("unprotected", []):
+                errors.append(
+                    f"{name}.{ph}: UNPROTECTED {op.get('primitive')} "
+                    f"({op.get('flops'):.3g} flops) at {op.get('path')}")
+            for kind, gap in sorted(
+                    cov.get("known_unprotected", {}).items()):
+                if not gap.get("note"):
+                    errors.append(
+                        f"{name}.{ph}: known-unprotected kind {kind!r} "
+                        "has no disposition note")
+        if rep.get("flash_consistent") is False:
+            errors.append(
+                f"{name}: flash allowlist inconsistent — softmax dots "
+                "survive a flash-enabled decode trace")
+    if not new.get("configs"):
+        errors.append("no configs in report")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    if not argv:
+        print(__doc__)
+        return 2
+    new_path = argv[0]
+    base_path = argv[1] if len(argv) > 1 else "AUDIT_coverage.json"
+    with open(new_path) as fh:
+        new = json.load(fh)
+    with open(base_path) as fh:
+        baseline = json.load(fh)
+    errors = check(new, baseline)
+    if errors:
+        for e in errors:
+            print(f"AUDIT REGRESSION: {e}")
+        return 1
+    print(f"audit schema OK: {new_path} covers {base_path} "
+          f"({len(new['configs'])} configs)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -30,7 +30,6 @@ SCHEMES = [Scheme.GLOBAL, Scheme.BLOCK_1S, Scheme.BLOCK_2S, Scheme.REPLICA]
 def run() -> list:
     rows = []
     for hw in (NVIDIA_T4, TPU_V5E):
-        crossover_checked = False
         for s in SIZES:
             d = GemmDims(m=s, k=s, n=s)
             ovh = {sc: overhead_pct(sc, d, hw) for sc in SCHEMES}

@@ -39,12 +39,13 @@ def run() -> list:
     # (paper §3.2: AI 7 at batch 1 -> 70-109 at batch 256; our byte model
     # also counts activation traffic so batch-1 values are lower, but the
     # ~2-orders-of-magnitude batch scaling must reproduce)
-    mlp_bottom = lambda b: [
-        GemmDims(m=b, k=13, n=512), GemmDims(m=b, k=512, n=256),
-        GemmDims(m=b, k=256, n=64)]
-    mlp_top = lambda b: [
-        GemmDims(m=b, k=479, n=512), GemmDims(m=b, k=512, n=256),
-        GemmDims(m=b, k=256, n=1)]
+    def mlp_bottom(b):
+        return [GemmDims(m=b, k=13, n=512), GemmDims(m=b, k=512, n=256),
+                GemmDims(m=b, k=256, n=64)]
+
+    def mlp_top(b):
+        return [GemmDims(m=b, k=479, n=512), GemmDims(m=b, k=512, n=256),
+                GemmDims(m=b, k=256, n=1)]
     for name, f in (("mlp_bottom", mlp_bottom), ("mlp_top", mlp_top)):
         ai1 = aggregate_intensity(f(1))
         ai256 = aggregate_intensity(f(256))

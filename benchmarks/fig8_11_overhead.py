@@ -15,7 +15,6 @@ from __future__ import annotations
 from benchmarks.common import row
 from repro.configs import ALL_ARCHS, get_config
 from repro.core import Scheme, TPU_V5E
-from repro.core.schemes import protected_time
 from repro.core.selector import modeled_layer_time, select_scheme
 from repro.models.counting import layer_gemms
 
@@ -50,7 +49,8 @@ def run() -> list:
             t_global = network_time(cfg, toks, Scheme.GLOBAL)
             t_block = network_time(cfg, toks, Scheme.BLOCK_1S)
             t_guided = network_time(cfg, toks, None)
-            ovh = lambda t: (t - t_none) / t_none * 100.0
+            def ovh(t):
+                return (t - t_none) / t_none * 100.0
             red = (ovh(t_global) / max(ovh(t_guided), 1e-9)
                    if ovh(t_guided) > 1e-9 else float("inf"))
             reductions.append(min(red, 100.0))

@@ -63,7 +63,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, scaled_down
-from repro.core import ABFTConfig, Scheme, compute_bound_ai
+from repro.core import ABFTConfig, FixedPolicy, Scheme, compute_bound_ai
 from repro.core.hardware import HardwareSpec
 from repro.models import build_model
 from repro.serve.engine import EngineStats, Request, ServeEngine
@@ -73,7 +73,8 @@ SCHEMES = {
     # none: protection off; traditional: one global checksum for every
     # layer (Hari et al.); guided: the paper's intensity-guided selector
     "none": ABFTConfig.off(),
-    "traditional": ABFTConfig(scheme=Scheme.GLOBAL, use_pallas=False),
+    "traditional": ABFTConfig.from_policy(
+        FixedPolicy(Scheme.GLOBAL), use_pallas=False),
     "intensity_guided": ABFTConfig(scheme=Scheme.AUTO, use_pallas=False),
 }
 
@@ -221,7 +222,7 @@ def run_cell(model, params, reqs, *, slots, max_len, abft, cache_kind,
         eng.index = PrefixIndex(block_size)
     eng.stats = EngineStats()
     t0 = time.perf_counter()
-    results = eng.run([r for r in reqs])
+    eng.run([r for r in reqs])
     dt = time.perf_counter() - t0
     stats = eng.cache_stats()
     cell = {

@@ -66,6 +66,19 @@ assert [e.selection.scheme_name for e in reloaded.entries] == \
 print(f"\n2b) plan round-trip: {len(plan.entries)} layers, "
       f"decode-step scheme = {plan.for_step(8).scheme_name}")
 
+# ------------------------------------------------- 2c. the coverage auditor
+# a plan *claims* protection; the auditor *proves* it: trace the model's
+# real prefill/decode entry points to jaxprs, walk every FLOP-carrying
+# primitive, and check each one sits inside a registered scheme's dispatch
+# scope — with the plan <-> trace site bijection as a second witness.
+# CLI equivalent: python -m repro.launch.audit --config llama3.2-1b
+from repro.analysis import audit_config
+
+rep = audit_config("llama3.2-1b", phase="decode", check_flash=False)
+assert rep.protected_fraction == 1.0 and rep.crosscheck.bijective
+print(f"\n2c) coverage audit: protected={rep.protected_fraction:.2f}; "
+      f"{rep.crosscheck.report()}")
+
 # ---------------------------------------------------------------- 3. a model
 from repro.configs import get_config, scaled_down
 from repro.models import LayerCtx, ModelFault, build_model

@@ -1,0 +1,50 @@
+"""Static protection-coverage analysis (the auditor).
+
+Proves — by tracing the engine's real entry points to jaxprs and walking
+every FLOP-carrying primitive — that each GEMM in the compiled step
+functions flows through a registered ABFT scheme, and that the compiled
+``ProtectionPlan`` and the traced computation agree site-for-site.
+
+Modules:
+  markers      — the ``jax.named_scope`` tagging protocol (survives
+                 tracing through jit/scan into ``eqn.source_info``).
+  jaxpr_walk   — recursive ClosedJaxpr walker + per-op FLOP accounting.
+  crosscheck   — plan <-> trace bijection (LayerSpec <-> protected site).
+  audit        — classification, coverage report, entry-point tracing.
+
+CLI: ``python -m repro.launch.audit --config <name> [--phase ...]``.
+
+Attribute access is lazy: core/protected.py imports the marker protocol
+at dispatch time, so this package must not eagerly import the model zoo
+(audit.py) back into core.
+"""
+
+_EXPORTS = {
+    "AuditReport": "repro.analysis.audit",
+    "ClassifiedOp": "repro.analysis.audit",
+    "PhaseCoverage": "repro.analysis.audit",
+    "audit_config": "repro.analysis.audit",
+    "audit_model": "repro.analysis.audit",
+    "classify": "repro.analysis.audit",
+    "flash_allowlist_check": "repro.analysis.audit",
+    "resolve_arch": "repro.analysis.audit",
+    "CrossCheckResult": "repro.analysis.crosscheck",
+    "crosscheck_plan": "repro.analysis.crosscheck",
+    "TracedOp": "repro.analysis.jaxpr_walk",
+    "flop_ops": "repro.analysis.jaxpr_walk",
+    "coverage_scope": "repro.analysis.markers",
+    "parse_name_stack": "repro.analysis.markers",
+    "protection_scope": "repro.analysis.markers",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    module = _EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(
+            f"module 'repro.analysis' has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(module), name)

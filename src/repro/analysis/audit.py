@@ -1,0 +1,412 @@
+"""The protection-coverage auditor: trace real entry points, walk every
+FLOP, prove each flows through a registered ABFT scheme.
+
+``audit_model`` traces the model's ACTUAL serving entry points —
+``Model.prefill``, ``Model.decode``, and (for chunked-prefill-capable
+stacks) the engine's jitted ``_prefill_chunk`` step — to ClosedJaxprs,
+walks them recursively (jaxpr_walk.py), and classifies every
+FLOP-carrying primitive by its trace markers (markers.py):
+
+``protected``
+    Inside an ``abft[<scheme>][<site>]`` scope — emitted by
+    ``protected_matmul``'s executor dispatch.  Includes the check
+    einsums: they are part of the protected surface.
+``allowlisted``
+    Inside ``flops[softmax]``: the attention score/PV contractions that
+    the fused flash-ABFT kernels replace when ``flash_attention=True``.
+    ``flash_allowlist_check`` validates the allowlist against the
+    model's real flash routing: re-tracing decode with flash enabled
+    must make these dots vanish.
+``known_unprotected``
+    Inside ``flops[mla|ssm_scan|conv_stem]``: FLOP regions with no
+    registered ABFT scheme yet, tracked explicitly (with a note) instead
+    of failing the audit — the whisper conv frontend (ROADMAP item 5a),
+    the MLA absorb einsums, the SSD scan contractions.
+``unprotected``
+    Everything else.  A dot_general with no marker is exactly the drift
+    this auditor exists to catch; it fails ``--fail-under 1.0``.
+
+The protected fraction is ``protected / (protected + unprotected)`` —
+allowlisted and known-unprotected FLOPs are excluded from the
+denominator because they are *accounted for*, not silently missing.
+
+A second pass (crosscheck.py) proves the compiled ``ProtectionPlan``
+and the traced site set are bijective.
+
+CLI: ``python -m repro.launch.audit``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.crosscheck import CrossCheckResult, crosscheck_plan
+from repro.analysis.jaxpr_walk import TracedOp, flop_ops
+from repro.analysis.markers import parse_name_stack
+
+PHASES = ("prefill", "decode", "mixed")
+
+KNOWN_UNPROTECTED_KINDS = ("mla", "ssm_scan", "conv_stem")
+ALLOWLISTED_KINDS = ("softmax",)
+
+# one-line dispositions surfaced next to every known-unprotected bucket
+KNOWN_GAP_NOTES = {
+    "conv_stem": (
+        "whisper conv frontend: no conv ABFT scheme registered; "
+        "ROADMAP item 5a tracks a checksummed im2col GEMM"),
+    "mla": (
+        "MLA absorb einsums + absorbed attention core: no fused ABFT "
+        "kernel (flash routing never reaches MLA)"),
+    "ssm_scan": (
+        "SSD scan / decode recurrence contractions: weight-free "
+        "data-data einsums outside the matmul-ABFT surface"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassifiedOp:
+    """One traced op with its audit disposition."""
+
+    op: TracedOp
+    status: str                 # protected|allowlisted|known_unprotected|
+                                # unprotected|kernel
+    scheme: str | None = None   # when protected
+    site: str | None = None     # when protected
+    kind: str | None = None     # when allowlisted / known_unprotected
+
+
+def classify(ops) -> tuple:
+    """Marker-based classification of a traced-op inventory.
+
+    Precedence: an ``abft`` marker wins outright (a protected dense call
+    inside a ``flops[...]`` region is still protected); among coverage
+    kinds, a known-unprotected kind (innermost first) beats the softmax
+    allowlist, so an SSD scan nested under a softmax-annotated caller is
+    reported as the gap it is."""
+    out = []
+    for op in ops:
+        m = parse_name_stack(op.name_stack)
+        if m.protected:
+            out.append(ClassifiedOp(op, "protected",
+                                    scheme=m.scheme, site=m.site))
+            continue
+        kind = next((k for k in reversed(m.kinds)
+                     if k in KNOWN_UNPROTECTED_KINDS), None)
+        if kind is not None:
+            out.append(ClassifiedOp(op, "known_unprotected", kind=kind))
+        elif any(k in ALLOWLISTED_KINDS for k in m.kinds):
+            out.append(ClassifiedOp(op, "allowlisted", kind="softmax"))
+        elif op.primitive == "pallas_call":
+            # an unmarked fused kernel (e.g. flash attention) carries its
+            # own in-kernel check; 0 traced FLOPs either way
+            out.append(ClassifiedOp(op, "kernel"))
+        else:
+            out.append(ClassifiedOp(op, "unprotected"))
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseCoverage:
+    """FLOP accounting of one traced phase."""
+
+    phase: str
+    ops: tuple                         # full ClassifiedOp inventory
+
+    def _sum(self, status: str) -> float:
+        return sum(c.op.flops for c in self.ops if c.status == status)
+
+    @property
+    def protected_flops(self) -> float:
+        return self._sum("protected")
+
+    @property
+    def allowlisted_flops(self) -> float:
+        return self._sum("allowlisted")
+
+    @property
+    def unprotected_flops(self) -> float:
+        return self._sum("unprotected")
+
+    @property
+    def known_unprotected(self) -> dict:
+        out: dict = {}
+        for c in self.ops:
+            if c.status == "known_unprotected":
+                out[c.kind] = out.get(c.kind, 0.0) + c.op.flops
+        return out
+
+    @property
+    def unprotected_ops(self) -> tuple:
+        return tuple(c for c in self.ops if c.status == "unprotected")
+
+    @property
+    def protected_fraction(self) -> float:
+        """Protected share of the FLOPs that are SUPPOSED to be on the
+        matmul-ABFT surface (allowlisted / known-unprotected excluded —
+        they are accounted for, not missing)."""
+        denom = self.protected_flops + self.unprotected_flops
+        return 1.0 if denom == 0 else self.protected_flops / denom
+
+    def to_json(self) -> dict:
+        return {
+            "phase": self.phase,
+            "n_ops": len(self.ops),
+            "protected_flops": self.protected_flops,
+            "allowlisted_flops": self.allowlisted_flops,
+            "unprotected_flops": self.unprotected_flops,
+            "known_unprotected": {
+                kind: {"flops": fl, "note": KNOWN_GAP_NOTES.get(kind, "")}
+                for kind, fl in sorted(self.known_unprotected.items())
+            },
+            "protected_fraction": self.protected_fraction,
+            "unprotected": [
+                {"path": c.op.path, "primitive": c.op.primitive,
+                 "flops": c.op.flops,
+                 "m": c.op.m, "k": c.op.k, "n": c.op.n}
+                for c in self.unprotected_ops
+            ],
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditReport:
+    """One model's full audit: per-phase coverage + plan crosscheck."""
+
+    model: str
+    phases: dict                       # phase -> PhaseCoverage
+    crosscheck: CrossCheckResult
+    flash_consistent: bool | None      # None: not applicable / untraceable
+
+    @property
+    def protected_fraction(self) -> float:
+        return min(p.protected_fraction for p in self.phases.values())
+
+    @property
+    def known_unprotected(self) -> dict:
+        out: dict = {}
+        for p in self.phases.values():
+            for kind, fl in p.known_unprotected.items():
+                out[kind] = max(out.get(kind, 0.0), fl)
+        return out
+
+    def to_json(self) -> dict:
+        return {
+            "model": self.model,
+            "protected_fraction": self.protected_fraction,
+            "phases": {ph: cov.to_json()
+                       for ph, cov in sorted(self.phases.items())},
+            "crosscheck": self.crosscheck.to_json(),
+            "flash_consistent": self.flash_consistent,
+        }
+
+    def summary(self) -> str:
+        lines = [f"coverage audit: {self.model}"]
+        for ph, cov in sorted(self.phases.items()):
+            gaps = ", ".join(
+                f"{k}={v:.3g}" for k, v in sorted(
+                    cov.known_unprotected.items())) or "none"
+            lines.append(
+                f"  {ph:8s} protected={cov.protected_fraction:.4f} "
+                f"({cov.protected_flops:.3g} flops; "
+                f"allowlisted={cov.allowlisted_flops:.3g}; "
+                f"known gaps: {gaps})")
+            for c in cov.unprotected_ops:
+                lines.append(
+                    f"    UNPROTECTED {c.op.primitive} "
+                    f"m={c.op.m} k={c.op.k} n={c.op.n} "
+                    f"flops={c.op.flops:.3g} at {c.op.path}")
+        lines.append("  " + self.crosscheck.report().replace("\n", "\n  "))
+        if self.flash_consistent is not None:
+            lines.append(
+                f"  flash allowlist consistent: {self.flash_consistent}")
+        return "\n".join(lines)
+
+
+# ------------------------------------------------------------ entry tracing
+
+def _audit_abft(flash: bool = False):
+    from repro.core.protected import ABFTConfig
+
+    # XLA emulation path: the fused kernel's internals are opaque to the
+    # walker, the emulation exposes the same semantics as real dots
+    return ABFTConfig(use_pallas=False, flash_attention=flash)
+
+
+def _zero_params(model, dtype):
+    """Parameter pytree of zeros with init_params' exact structure —
+    ``eval_shape`` keeps the audit from paying real RNG init."""
+    shapes = jax.eval_shape(
+        lambda k: model.init_params(k, dtype), jax.random.PRNGKey(0))
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+def _example_batch(model, batch: int, seq: int):
+    cfg = model.cfg
+    out = {"tokens": jnp.zeros((batch, seq), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        if cfg.n_mels:
+            # stride-2 SAME conv halves T: 2*enc_seq_len frames in
+            out["audio"] = jnp.zeros(
+                (batch, 2 * cfg.enc_seq_len, cfg.n_mels), jnp.float32)
+        else:
+            out["enc_input"] = jnp.zeros(
+                (batch, cfg.enc_seq_len, cfg.d_model), jnp.float32)
+    if cfg.vision_dim:
+        out["images"] = jnp.zeros(
+            (batch, cfg.n_image_tokens, cfg.vision_dim), jnp.float32)
+    return out
+
+
+def trace_prefill(model, params, abft, *, batch=2, seq=8,
+                  max_len=16, dtype=jnp.float32) -> list:
+    from repro.models.layers import LayerCtx
+
+    ctx = LayerCtx(abft=abft)
+    cache = model.init_cache(batch, max_len, dtype)
+    ex = _example_batch(model, batch, seq)
+    closed = jax.make_jaxpr(
+        lambda p, b, c: model.prefill(p, b, c, ctx))(params, ex, cache)
+    return flop_ops(closed, entry="prefill")
+
+
+def trace_decode(model, params, abft, *, batch=2, max_len=16,
+                 dtype=jnp.float32) -> list:
+    from repro.models.layers import LayerCtx
+
+    ctx = LayerCtx(abft=abft)
+    cache = model.init_cache(batch, max_len, dtype)
+    token = jnp.zeros((batch, 1), jnp.int32)
+    pos = jnp.zeros((batch,), jnp.int32)
+    closed = jax.make_jaxpr(
+        lambda p, t, c, q: model.decode(p, t, c, q, ctx))(
+            params, token, cache, pos)
+    return flop_ops(closed, entry="decode")
+
+
+def trace_engine_chunk(model, params, abft, *, batch=2, seq=8,
+                       max_len=16, dtype=jnp.float32) -> list:
+    """Trace the engine's REAL jitted ``_prefill_chunk`` step — the mixed
+    prefill+decode serving path — not a hand-rolled approximation."""
+    from repro.models.layers import ModelFault
+    from repro.serve.engine import ServeEngine
+
+    eng = ServeEngine(model, params, slots=batch, max_len=max_len,
+                      abft=abft, dtype=dtype, chunk_tokens=seq)
+    toks = jnp.zeros((batch, seq), jnp.int32)
+    slot_ids = jnp.arange(batch, dtype=jnp.int32)
+    lengths = jnp.full((batch,), seq, jnp.int32)
+    starts = jnp.zeros((batch,), jnp.int32)
+    final = jnp.ones((batch,), bool)
+    keys = eng.keys[:batch]
+    closed = jax.make_jaxpr(
+        lambda *a: eng._prefill_chunk(*a))(
+            eng.params, toks, eng.cache, slot_ids, lengths, keys,
+            None, starts, final, ModelFault.none())
+    return flop_ops(closed, entry="engine._prefill_chunk")
+
+
+def flash_allowlist_check(model, params, *, batch=2, max_len=16,
+                          dtype=jnp.float32):
+    """Validate the softmax allowlist against the model's real flash
+    routing: re-trace decode with ``flash_attention=True`` — the
+    allowlisted score/PV dots must vanish (the fused kernel replaces
+    them).  Returns None when the model has no flash-routed attention
+    (MLA never routes to flash; cross-attention is not flash-routed) or
+    the kernel wrapper rejects the audit shapes."""
+    from repro.models.model import layer_tags
+
+    cfg = model.cfg
+    if cfg.attention != "gqa" or cfg.cross_attn_every:
+        return None
+    if not any(t.split(":")[0] == "attn" for t in layer_tags(cfg)):
+        return None
+    try:
+        ops = trace_decode(model, params, _audit_abft(flash=True),
+                           batch=batch, max_len=max_len, dtype=dtype)
+    except Exception:
+        return None                    # kernel wrapper rejected shapes
+    leftovers = [
+        op for op in ops
+        if op.primitive == "dot_general"
+        and not parse_name_stack(op.name_stack).protected
+        and "softmax" in parse_name_stack(op.name_stack).kinds
+    ]
+    return not leftovers
+
+
+# ------------------------------------------------------------------ audits
+
+def audit_model(model, phase: str = "mixed", *, plan=None, batch=2,
+                seq=8, max_len=16, dtype=jnp.float32,
+                check_flash: bool = True) -> AuditReport:
+    """Audit one built Model.  ``phase``: prefill | decode | mixed
+    (mixed traces the engine's jitted ``_prefill_chunk`` when the stack
+    supports chunked prefill, else the prefill+decode union).  The plan
+    crosscheck always runs over the union of all traced phases — some
+    sites (``cross.k``, ``vision.proj``, ``enc.*``) execute only during
+    prefill."""
+    if phase not in PHASES:
+        raise ValueError(f"unknown phase {phase!r}; one of {PHASES}")
+    abft = _audit_abft()
+    params = _zero_params(model, dtype)
+
+    pre = trace_prefill(model, params, abft, batch=batch, seq=seq,
+                        max_len=max_len, dtype=dtype)
+    dec = trace_decode(model, params, abft, batch=batch,
+                       max_len=max_len, dtype=dtype)
+    traces = {"prefill": pre, "decode": dec}
+    if phase == "mixed":
+        if model.supports_chunked_prefill:
+            traces["mixed"] = trace_engine_chunk(
+                model, params, abft, batch=batch, seq=seq,
+                max_len=max_len, dtype=dtype) + dec
+        else:
+            traces["mixed"] = pre + dec
+
+    want = {"mixed": ("prefill", "decode", "mixed")}.get(phase, (phase,))
+    phases = {ph: PhaseCoverage(phase=ph, ops=classify(traces[ph]))
+              for ph in want}
+
+    union = [op for ops in traces.values() for op in ops]
+    plan = plan if plan is not None else model.protection_plan()
+    xc = crosscheck_plan(plan, union, model=model.cfg.name)
+
+    flash = (flash_allowlist_check(
+        model, params, batch=batch, max_len=max_len, dtype=dtype)
+        if check_flash else None)
+    return AuditReport(model=model.cfg.name, phases=phases,
+                       crosscheck=xc, flash_consistent=flash)
+
+
+def resolve_arch(name: str) -> str:
+    """Registry name for a CLI-friendly alias (dashes/dots/underscores
+    used interchangeably: ``llama3_2_1b`` -> ``llama3.2-1b``)."""
+    from repro.configs import list_archs
+
+    archs = list_archs()
+    if name in archs:
+        return name
+
+    def canon(s: str) -> str:
+        return s.replace("-", "_").replace(".", "_")
+
+    hits = [a for a in archs if canon(a) == canon(name)]
+    if len(hits) != 1:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {archs}")
+    return hits[0]
+
+
+def audit_config(name: str, phase: str = "mixed", **kw) -> AuditReport:
+    """Audit one registered architecture (scaled-down build: the audit
+    is a static shape-level property — site structure, not weights — so
+    the CPU-feasible config proves the same bijection)."""
+    from repro.configs import get_config, scaled_down
+    from repro.models.model import build_model
+
+    cfg = scaled_down(get_config(resolve_arch(name)))
+    return audit_model(build_model(cfg), phase=phase, **kw)

@@ -1,0 +1,85 @@
+"""The auditor's tagging protocol: ``jax.named_scope`` markers that survive
+tracing.
+
+JAX records the active name-scope stack into every equation's
+``source_info.name_stack`` — including equations inside ``pjit``/``scan``
+sub-jaxprs, where the *inner* primitives carry the full scope string even
+though the wrapping pjit/scan eqn itself does not.  That makes a scope
+opened around a dispatch site a reliable static marker: the walker
+(jaxpr_walk.py) reads it back off each ``dot_general`` without running any
+code.
+
+Two marker families:
+
+``abft[<scheme>][<site>]``
+    Opened by ``protected_matmul`` around the registered executor — every
+    dot the executor emits (the protected GEMM *and* its check einsums) is
+    stamped with the resolved scheme name and the plan-facing site tag
+    (``attn.q``, ``mlp.down``, ...).
+
+``flops[<kind>]``
+    Coverage annotations for FLOP-carrying regions that are deliberately
+    outside the matmul-ABFT surface: the attention softmax path
+    (``softmax`` — allowlisted, replaced by the fused flash-ABFT kernels
+    when ``flash_attention=True``), the MLA absorb einsums (``mla``), the
+    SSD scan einsums (``ssm_scan``), and the whisper conv stem
+    (``conv_stem``).  The audit classifies these explicitly instead of
+    reporting them as silent gaps.
+
+Scope names may not contain '/', so the bracket syntax doubles as the
+parse delimiter.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import NamedTuple
+
+import jax
+
+_ABFT_RE = re.compile(r"abft\[([^\]]*)\]\[([^\]]*)\]")
+_FLOPS_RE = re.compile(r"flops\[([^\]]*)\]")
+
+# kinds the audit recognizes (see audit.py for their dispositions)
+COVERAGE_KINDS = ("softmax", "mla", "ssm_scan", "conv_stem")
+
+
+def protection_scope(scheme_name: str, site: str):
+    """Scope marking 'ops in here belong to the <scheme> executor
+    protecting plan site <site>'."""
+    return jax.named_scope(f"abft[{scheme_name}][{site}]")
+
+
+def coverage_scope(kind: str):
+    """Scope marking a known non-GEMM-ABFT FLOP region (see module doc)."""
+    if kind not in COVERAGE_KINDS:
+        raise ValueError(
+            f"unknown coverage kind {kind!r}; known: {COVERAGE_KINDS}")
+    return jax.named_scope(f"flops[{kind}]")
+
+
+class Marker(NamedTuple):
+    """Parsed marker state of one equation's name stack."""
+
+    scheme: str | None          # abft[...] scheme, if inside one
+    site: str | None            # abft[...] site tag, if inside one
+    kinds: tuple                # flops[...] kinds, outermost first
+
+    @property
+    def protected(self) -> bool:
+        return self.scheme is not None
+
+
+def parse_name_stack(name_stack: str) -> Marker:
+    """Read the marker state back out of an eqn's name-stack string.
+
+    Innermost ``abft`` marker wins (nested protected calls would be a
+    bug, but the innermost is the one actually executing the op); all
+    ``flops`` kinds are collected since regions nest (an SSD scan inside
+    a softmax-annotated caller must classify as ``ssm_scan``)."""
+    abft = _ABFT_RE.findall(name_stack)
+    kinds = tuple(_FLOPS_RE.findall(name_stack))
+    if abft:
+        scheme, site = abft[-1]
+        return Marker(scheme=scheme, site=site, kinds=kinds)
+    return Marker(scheme=None, site=None, kinds=kinds)

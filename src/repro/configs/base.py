@@ -66,7 +66,9 @@ class ModelConfig:
     # encoder-decoder (whisper)
     is_encoder_decoder: bool = False
     n_enc_layers: int = 0
-    enc_seq_len: int = 1500         # whisper audio frames after conv stub
+    enc_seq_len: int = 1500         # whisper audio frames after conv stem
+    n_mels: int = 0                 # log-mel bins feeding the conv stem
+                                    # (0: stem disabled, enc_input stub)
 
     # VLM (llama-3.2-vision): cross-attention every k-th layer
     cross_attn_every: int = 0
@@ -180,6 +182,7 @@ def scaled_down(cfg: ModelConfig, **overrides) -> ModelConfig:
         experts_per_token=min(cfg.experts_per_token, 2),
         n_enc_layers=min(cfg.n_enc_layers, 2),
         enc_seq_len=16 if cfg.is_encoder_decoder else cfg.enc_seq_len,
+        n_mels=8 if cfg.n_mels else 0,
         q_lora_rank=32 if cfg.q_lora_rank else 0,
         kv_lora_rank=32 if cfg.kv_lora_rank else 0,
         qk_nope_head_dim=16 if cfg.qk_nope_head_dim else 0,

@@ -1,6 +1,7 @@
-"""Whisper-tiny — encoder-decoder audio backbone; conv frontend is a stub
-(input_specs provides precomputed frame embeddings).  [arXiv:2212.04356;
-unverified]"""
+"""Whisper-tiny — encoder-decoder audio backbone.  The conv frontend
+(two width-3 1-D convs over n_mels=80 log-mel frames) is real when the
+batch carries ``audio``; precomputed ``enc_input`` frame embeddings
+remain accepted as the stub path.  [arXiv:2212.04356; unverified]"""
 
 from repro.configs.base import ModelConfig, register
 
@@ -24,5 +25,6 @@ def whisper_tiny() -> ModelConfig:
         act="gelu",
         is_encoder_decoder=True,
         enc_seq_len=1500,
+        n_mels=80,
         rope_theta=0.0,        # whisper uses learned/sinusoidal positions
     )

@@ -400,6 +400,75 @@ def policy_from_selector(config, profile_table=None) -> ProtectionPolicy:
     return base
 
 
+class PlanValidationError(ValueError):
+    """A serialized ProtectionPlan failed static validation against the
+    live SchemeRegistry (unknown scheme, duplicate layer, stale dims)."""
+
+
+def _policy_scheme_names(d: dict) -> list:
+    """(path, scheme-name) pairs referenced by a serialized policy."""
+    kind = d.get("kind")
+    if kind == "fixed":
+        return [("policy.scheme", d.get("scheme"))]
+    if kind == "intensity":
+        return [(f"policy.candidates[{i}]", c)
+                for i, c in enumerate(d.get("candidates") or ())]
+    if kind == "profile":
+        out = [(f"policy.table[{i}].scheme", e.get("scheme"))
+               for i, e in enumerate(d.get("table") or ())]
+        out += [("policy.fallback." + p.removeprefix("policy."), n)
+                for p, n in _policy_scheme_names(d.get("fallback") or {})]
+        return out
+    return []
+
+
+def validate_plan_payload(d: dict) -> None:
+    """Static validation of a serialized plan against the live registry.
+
+    Raises ``PlanValidationError`` listing EVERY problem (diff-style, one
+    line per offense) rather than stopping at the first — a stale
+    deployment artifact should be fully diagnosable from one failure."""
+    reg = default_registry()
+    known = reg.names()
+    problems = []
+    seen: dict = {}
+    for i, e in enumerate(d.get("layers") or ()):
+        where = f"layers[{i}] {e.get('name')!r}"
+        name = e.get("name")
+        if name in seen:
+            problems.append(
+                f"{where}: duplicate layer name (first at "
+                f"layers[{seen[name]}])")
+        else:
+            seen[name] = i
+        if e.get("scheme") not in known:
+            problems.append(
+                f"{where}: unknown scheme {e.get('scheme')!r}; "
+                f"registered: {list(known)}")
+        dims = e.get("dims") or {}
+        mkn = {k: dims.get(k, 1) for k in ("m", "k", "n", "batch")}
+        if any(not isinstance(v, int) or v < 1 for v in mkn.values()):
+            problems.append(
+                f"{where}: stale dims "
+                + " ".join(f"{k}={v}" for k, v in mkn.items())
+                + " (m/k/n/batch must all be ints >= 1)")
+        count = e.get("count", 1)
+        if not isinstance(count, int) or count < 1:
+            problems.append(f"{where}: count={count!r} must be an "
+                            f"int >= 1")
+    for path, sname in _policy_scheme_names(d.get("policy") or {}):
+        if sname not in known:
+            problems.append(
+                f"{path}: unknown scheme {sname!r}; "
+                f"registered: {list(known)}")
+    if problems:
+        raise PlanValidationError(
+            f"ProtectionPlan JSON failed validation against the live "
+            f"SchemeRegistry ({len(problems)} problem"
+            f"{'s' if len(problems) != 1 else ''}):\n  - "
+            + "\n  - ".join(problems))
+
+
 def policy_from_json(d: dict) -> ProtectionPolicy:
     kind = d["kind"]
     if kind == "fixed":
@@ -670,6 +739,7 @@ class ProtectionPlan:
     @classmethod
     def from_json(cls, payload) -> "ProtectionPlan":
         d = json.loads(payload) if isinstance(payload, str) else payload
+        validate_plan_payload(d)
         entries = tuple(
             PlanEntry(
                 LayerSpec(name=e["name"], dims=GemmDims(**e["dims"]),

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.intensity import GemmDims
+from repro.core.policy import FixedPolicy
 from repro.core.protected import ABFTConfig, protected_matmul
 from repro.core.schemes import Scheme
 
@@ -53,7 +54,8 @@ def profile_layer(
     w = jnp.asarray(rng.standard_normal((dims.k, dims.n)), dtype)
     out = {}
     for sc in candidates:
-        cfg = ABFTConfig(scheme=sc, use_pallas=use_pallas)
+        cfg = ABFTConfig.from_policy(FixedPolicy(sc),
+                                     use_pallas=use_pallas)
         fn = jax.jit(lambda a, b, _cfg=cfg: protected_matmul(
             a, b, _cfg, out_dtype=dtype)[0])
         out[sc] = _time(fn, x, w)

@@ -33,10 +33,12 @@ subproblem" principle lifted one level up the hierarchy.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import NamedTuple
 
 import jax.numpy as jnp
 
+from repro.analysis.markers import protection_scope
 from repro.core import checksums
 from repro.core.checksums import CheckResult
 from repro.core.faults import FaultSpec, inject_output_fault
@@ -47,6 +49,7 @@ from repro.core.policy import (
     ProtectionPolicy,
     default_registry,
     policy_from_selector,
+    scheme_name_of,
 )
 from repro.core.schemes import BlockShape, Scheme
 from repro.core.selector import SelectorConfig
@@ -91,6 +94,24 @@ class ABFTConfig:
     # the first-class selection strategy; None falls back to the legacy
     # scheme/selector fields (exact same decisions, same code path)
     policy: ProtectionPolicy | None = None
+
+    def __post_init__(self):
+        # Warn exactly when the legacy selection surface is in use: a
+        # non-AUTO fixed scheme or a non-default SelectorConfig with no
+        # first-class policy.  Plain ABFTConfig() / scheme=AUTO stays
+        # silent — those denote the default IntensityGuidedPolicy and are
+        # not steering selection through the deprecated fields.
+        # stacklevel=3: warn -> __init__ (generated) -> caller.
+        if self.policy is None and (
+                self.scheme != Scheme.AUTO
+                or self.selector != SelectorConfig()):
+            warnings.warn(
+                "ABFTConfig(scheme=..., selector=...) is deprecated as a "
+                "selection surface; build a ProtectionPolicy "
+                "(core/policy.py) and wrap it via ABFTConfig.from_policy "
+                "— FixedPolicy(scheme) replaces scheme=, "
+                "policy_from_selector(selector) replaces selector=",
+                DeprecationWarning, stacklevel=3)
 
     def effective_policy(self) -> ProtectionPolicy:
         """The ProtectionPolicy this config denotes (the facade's whole
@@ -146,6 +167,7 @@ def protected_matmul(
     out_dtype=None,
     fault: FaultSpec | None = None,
     first_layer: bool = False,
+    site: str = "unlabeled",
 ) -> tuple[jnp.ndarray, CheckResult]:
     """ABFT-protected ``y = x @ w``.
 
@@ -155,14 +177,20 @@ def protected_matmul(
     materialized output.
 
     The active policy resolves the scheme for these dims at trace time;
-    the scheme's registered executor (SchemeRegistry) runs it.
-    """
+    the scheme's registered executor (SchemeRegistry) runs it inside an
+    ``abft[<scheme>][<site>]`` named scope — the static marker the
+    coverage auditor (repro.analysis) reads back off the jaxpr to prove
+    every GEMM flows through a registered scheme.  ``site`` is the
+    plan-facing layer tag (``attn.q``, ``mlp.down``, ...) threaded down
+    from the model layers; audit cross-validation matches it against
+    ``ProtectionPlan`` LayerSpec names."""
     out_dtype = out_dtype or x.dtype
     dims = _gemm_dims(x, w, out_dtype)
     scheme = cfg.resolve(dims, first_layer=first_layer)
     executor = default_registry().executor(scheme)
-    return executor(x, w, cfg, wsums=wsums, out_dtype=out_dtype,
-                    fault=fault)
+    with protection_scope(scheme_name_of(scheme), site):
+        return executor(x, w, cfg, wsums=wsums, out_dtype=out_dtype,
+                        fault=fault)
 
 
 # ------------------------------------------------------------- executors

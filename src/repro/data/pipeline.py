@@ -18,8 +18,8 @@ checkpoint as a single integer.  Backends:
 from __future__ import annotations
 
 import dataclasses
-import threading
 import queue as queue_mod
+import threading
 
 import numpy as np
 

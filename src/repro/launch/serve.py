@@ -15,9 +15,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ALL_ARCHS, get_config, scaled_down
+from repro.core.faults import FaultSpec
 from repro.core.policy import FixedPolicy, IntensityGuidedPolicy
 from repro.core.protected import ABFTConfig
-from repro.core.faults import FaultSpec
 from repro.core.schemes import Scheme
 from repro.models import ModelFault, build_model
 from repro.serve.engine import RecoveryPolicy, Request, ServeEngine

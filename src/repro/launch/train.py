@@ -11,7 +11,6 @@ launched per host after jax.distributed.initialize (flag --distributed).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import time
 

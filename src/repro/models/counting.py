@@ -86,6 +86,10 @@ def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
     if cfg.is_encoder_decoder:
         total += cfg.n_enc_layers * (
             _attn_params(cfg) + _dense_ffn_params(cfg))
+        if cfg.n_mels:
+            # conv stem: two width-3 1-D convs + biases
+            total += (3 * cfg.n_mels * cfg.d_model + cfg.d_model
+                      + 3 * cfg.d_model * cfg.d_model + cfg.d_model)
     if cfg.vision_dim:
         total += cfg.vision_dim * cfg.d_model
     return total
@@ -137,8 +141,13 @@ def layer_gemms(
             sites["attn.o"] = (g(cfg.n_heads * hd, cfg.d_model), n_attn)
     if n_mamba:
         d_in = cfg.d_inner
-        proj = 2 * d_in + 2 * cfg.ssm_state + cfg.ssm_heads
-        sites["ssm.in"] = (g(cfg.d_model, proj), n_mamba)
+        # the in-projection is stored split (z / x / BC / dt; see
+        # models/mamba.py) so each split GEMM is its own plan site with
+        # its own arithmetic intensity
+        sites["ssm.in_z"] = (g(cfg.d_model, d_in), n_mamba)
+        sites["ssm.in_x"] = (g(cfg.d_model, d_in), n_mamba)
+        sites["ssm.in_bc"] = (g(cfg.d_model, 2 * cfg.ssm_state), n_mamba)
+        sites["ssm.in_dt"] = (g(cfg.d_model, cfg.ssm_heads), n_mamba)
         sites["ssm.out"] = (g(d_in, cfg.d_model), n_mamba)
     if n_dense_ffn:
         mult = 2 if cfg.act == "silu" else 1
@@ -162,7 +171,20 @@ def layer_gemms(
                 n_moe)
     if n_cross:
         sites["cross.q"] = (g(cfg.d_model, cfg.n_heads * hd), n_cross)
+        sites["cross.k"] = (g(cfg.d_model, cfg.n_kv_heads * hd), n_cross)
+        sites["cross.v"] = (g(cfg.d_model, cfg.n_kv_heads * hd), n_cross)
         sites["cross.o"] = (g(cfg.n_heads * hd, cfg.d_model), n_cross)
+    if cfg.is_encoder_decoder and cfg.n_enc_layers:
+        ne = cfg.n_enc_layers
+        mult = 2 if cfg.act == "silu" else 1
+        sites["enc.attn.q"] = (g(cfg.d_model, cfg.n_heads * hd), ne)
+        sites["enc.attn.k"] = (g(cfg.d_model, cfg.n_kv_heads * hd), ne)
+        sites["enc.attn.v"] = (g(cfg.d_model, cfg.n_kv_heads * hd), ne)
+        sites["enc.attn.o"] = (g(cfg.n_heads * hd, cfg.d_model), ne)
+        sites["enc.mlp.up"] = (g(cfg.d_model, cfg.d_ff), ne * mult)
+        sites["enc.mlp.down"] = (g(cfg.d_ff, cfg.d_model), ne)
+    if cfg.vision_dim:
+        sites["vision.proj"] = (g(cfg.vision_dim, cfg.d_model), 1)
     sites["lm_head"] = (g(cfg.d_model, cfg.vocab_size), 1)
     return sites
 
@@ -179,13 +201,13 @@ def layer_specs(
     of the model's actual first layer (``layer_tags(cfg)[0]``), not on
     whichever site happens to enumerate first in the dict.  A jamba-style
     hybrid whose stack opens with a mamba block therefore flags
-    ``ssm.in``, never ``attn.q``."""
+    ``ssm.in_z``, never ``attn.q``."""
     from repro.core.policy import LayerSpec
 
     sites = layer_gemms(cfg, n_tokens, phase, dtype_bytes)
     first_mixer = layer_tags(cfg)[0].split(":")[0]
     first_site = {
-        "attn": "attn.q", "mla": "mla.q_a", "mamba": "ssm.in",
+        "attn": "attn.q", "mla": "mla.q_a", "mamba": "ssm.in_z",
     }.get(first_mixer)
     return [
         LayerSpec(name=name, dims=dims, count=count,

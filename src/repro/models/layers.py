@@ -11,7 +11,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.checksums import CheckResult
+from repro.analysis.markers import coverage_scope
 from repro.core.faults import FaultSpec
 from repro.core.protected import ABFTConfig, protected_matmul
 
@@ -88,12 +88,17 @@ class LayerCtx:
     fault: ModelFault | None = None
     layer_idx: jnp.ndarray | None = None   # traced global layer index
     hints: ShardingHints | None = None
+    # static prefix for plan-facing site tags ("enc." inside the whisper
+    # encoder stack) so the coverage auditor can tell encoder GEMMs from
+    # identically-shaped decoder ones
+    site_prefix: str = ""
 
     def with_layer(self, idx) -> "LayerCtx":
         return dataclasses.replace(self, layer_idx=idx)
 
 
-def dense(x, w, ctx: LayerCtx, site: str, b=None, out_dtype=None):
+def dense(x, w, ctx: LayerCtx, site: str, b=None, out_dtype=None,
+          tag: str | None = None):
     """ABFT-protected ``x @ w (+ b)``.  Returns (y, flag: scalar bool).
 
     Scheme selection happens at trace time via the config's
@@ -101,7 +106,14 @@ def dense(x, w, ctx: LayerCtx, site: str, b=None, out_dtype=None):
     scanned stacks share one trace, so per-layer static distinctions —
     like the first protected layer's extra activation-checksum read —
     live in the analytic ``ProtectionPlan`` (explicit ``LayerSpec.first``
-    descriptors), not here."""
+    descriptors), not here.
+
+    ``site`` is the fault-injection site id (SITES); ``tag`` is the
+    plan-facing layer name (counting.layer_gemms keys, e.g. ``attn.q``)
+    stamped into the ``abft[...]`` trace marker for the coverage auditor
+    — it defaults to the fault site so an untagged call is still marked
+    (and shows up as a trace-only site in plan cross-validation, which
+    is precisely the drift the auditor exists to catch)."""
     fault = None
     if ctx.fault is not None:
         here = ctx.fault.site == SITES[site]
@@ -111,7 +123,8 @@ def dense(x, w, ctx: LayerCtx, site: str, b=None, out_dtype=None):
         fault = spec._replace(
             enabled=(spec.enabled.astype(bool) & here).astype(jnp.int32))
     y, chk = protected_matmul(
-        x, w, ctx.abft, out_dtype=out_dtype or x.dtype, fault=fault)
+        x, w, ctx.abft, out_dtype=out_dtype or x.dtype, fault=fault,
+        site=ctx.site_prefix + (tag or site))
     if b is not None:
         y = y + b.astype(y.dtype)
     return y, chk.flag
@@ -178,6 +191,12 @@ def chunked_attention(
     query and key chunks with online softmax.  Avoids materializing the
     (Lq, Lk) score matrix — required for the 32k prefill shapes.
 
+    The whole body runs inside a ``flops[softmax]`` coverage scope: the
+    score/PV einsums are outside the matmul-ABFT surface by design —
+    they are the ops the fused flash-ABFT kernels replace when
+    ``flash_attention=True`` — and the auditor allowlists them under
+    that kind instead of flagging them unprotected.
+
     q: (B, Lq, H, Dk); k: (B, Lk, KV, Dk); v: (B, Lk, KV, Dv).
     GQA: H must be a multiple of KV; KV == 1 is MQA (used by absorbed MLA).
     ``lengths``: optional (B,) int32 per-row valid key count — keys at
@@ -189,6 +208,15 @@ def chunked_attention(
     logical 0).  The scalar path is untouched bit-for-bit.
     Returns (B, Lq, H, Dv).
     """
+    with coverage_scope("softmax"):
+        return _chunked_attention_impl(
+            q, k, v, causal=causal, q_offset=q_offset, q_chunk=q_chunk,
+            k_chunk=k_chunk, scale=scale, lengths=lengths)
+
+
+def _chunked_attention_impl(
+    q, k, v, *, causal, q_offset, q_chunk, k_chunk, scale, lengths,
+):
     B, Lq, H, Dk = q.shape
     row_offset = getattr(q_offset, "ndim", 0) > 0          # (B,) vector?
     _, Lk, KV, Dv = v.shape[0], v.shape[1], v.shape[2], v.shape[3]
@@ -279,39 +307,50 @@ def decode_attention(q, k_cache, v_cache, length, scale=None):
 
     q: (B, 1, H, Dk); ``length``: number of valid cache positions
     (scalar or (B,)).  Returns (B, 1, H, Dv).
+
+    Runs inside a ``flops[softmax]`` coverage scope (see
+    chunked_attention) — ``flash_decode`` is the fused-ABFT replacement.
     """
-    B, _, H, Dk = q.shape
-    S, KV, Dv = k_cache.shape[1], k_cache.shape[2], v_cache.shape[3]
-    groups = H // KV
-    scale = scale if scale is not None else Dk ** -0.5
-    qg = q.reshape(B, KV, groups, Dk)
-    # storage-dtype operands: no materialized f32 cache copy (see above)
-    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
-                   preferred_element_type=F32) * scale
-    pos = jnp.arange(S)
-    valid = pos[None, :] < jnp.reshape(length, (-1, 1))
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgs,bskv->bkgv", p.astype(v_cache.dtype), v_cache,
-                     preferred_element_type=F32)
-    return out.reshape(B, 1, H, Dv).astype(q.dtype)
+    with coverage_scope("softmax"):
+        B, _, H, Dk = q.shape
+        S, KV, Dv = k_cache.shape[1], k_cache.shape[2], v_cache.shape[3]
+        groups = H // KV
+        scale = scale if scale is not None else Dk ** -0.5
+        qg = q.reshape(B, KV, groups, Dk)
+        # storage-dtype operands: no materialized f32 cache copy (above)
+        s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                       preferred_element_type=F32) * scale
+        pos = jnp.arange(S)
+        valid = pos[None, :] < jnp.reshape(length, (-1, 1))
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgs,bskv->bkgv", p.astype(v_cache.dtype),
+                         v_cache, preferred_element_type=F32)
+        return out.reshape(B, 1, H, Dv).astype(q.dtype)
 
 
 # ---------------------------------------------------------------- mlp
 
-def mlp(x, p, ctx: LayerCtx, act: str = "silu"):
-    """SwiGLU (silu) or plain GELU MLP; GEMMs are ABFT-protected."""
+def mlp(x, p, ctx: LayerCtx, act: str = "silu",
+        tags: tuple = ("mlp.up", "mlp.down")):
+    """SwiGLU (silu) or plain GELU MLP; GEMMs are ABFT-protected.
+    ``tags``: plan-facing (up, down) site tags — MoE shared experts pass
+    ("moe.shared_up", "moe.shared_down") so the auditor matches them to
+    their own plan entries."""
+    up_tag, down_tag = tags
     flags = []
     if act == "silu":
-        up, f1 = dense(x, p["up"], ctx, "mlp_up")
-        gate, f2 = dense(x, p["gate"], ctx, "mlp_up")
+        up, f1 = dense(x, p["up"], ctx, "mlp_up", tag=up_tag)
+        gate, f2 = dense(x, p["gate"], ctx, "mlp_up", tag=up_tag)
         h = jax.nn.silu(gate.astype(F32)).astype(x.dtype) * up
         flags += [f1, f2]
     else:
-        h, f1 = dense(x, p["up"], ctx, "mlp_up", b=p.get("up_b"))
+        h, f1 = dense(x, p["up"], ctx, "mlp_up", b=p.get("up_b"),
+                      tag=up_tag)
         h = jax.nn.gelu(h.astype(F32)).astype(x.dtype)
         flags.append(f1)
-    out, f3 = dense(h, p["down"], ctx, "mlp_down", b=p.get("down_b"))
+    out, f3 = dense(h, p["down"], ctx, "mlp_down", b=p.get("down_b"),
+                    tag=down_tag)
     flags.append(f3)
     return out, _or(flags)
 

@@ -19,6 +19,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.markers import coverage_scope
 from repro.configs.base import ModelConfig
 from repro.models import attention as attn
 from repro.models import mamba as mb
@@ -386,6 +387,16 @@ class Model:
                     "w": jnp.ones((cfg.d_model,), dtype),
                     "b": jnp.zeros((cfg.d_model,), dtype)},
             }
+        if cfg.is_encoder_decoder and cfg.n_mels:
+            ck = jax.random.split(k_misc, 2)
+            params["conv_stem"] = {
+                "w1": _init(ck[0], (3, cfg.n_mels, cfg.d_model),
+                            dtype=dtype),
+                "b1": jnp.zeros((cfg.d_model,), dtype),
+                "w2": _init(ck[1], (3, cfg.d_model, cfg.d_model),
+                            dtype=dtype),
+                "b2": jnp.zeros((cfg.d_model,), dtype),
+            }
         if cfg.vision_dim:
             params["vision_proj"] = _init(
                 k_misc, (cfg.vision_dim, cfg.d_model), dtype=dtype)
@@ -474,23 +485,52 @@ class Model:
         return self._stack_caches(one_layer)
 
     # -------------------------------------------------- memory (enc / vision)
+    def _conv_stem(self, params, audio):
+        """Whisper audio frontend: two width-3 1-D convs (stride 1 then 2)
+        with GELU, mapping (B, T, n_mels) log-mel frames to
+        (B, ceil(T/2), d_model).
+
+        flops[conv_stem]: conv FLOPs have no registered ABFT scheme —
+        the coverage auditor reports them as the known_unprotected conv
+        frontend (ROADMAP item 5a tracks closing the gap with a
+        checksummed im2col GEMM)."""
+        cs = params["conv_stem"]
+        with coverage_scope("conv_stem"):
+            h = jax.lax.conv_general_dilated(
+                audio.astype(cs["w1"].dtype), cs["w1"],
+                window_strides=(1,), padding="SAME",
+                dimension_numbers=("NWC", "WIO", "NWC"))
+            h = jax.nn.gelu(h + cs["b1"])
+            h = jax.lax.conv_general_dilated(
+                h, cs["w2"], window_strides=(2,), padding="SAME",
+                dimension_numbers=("NWC", "WIO", "NWC"))
+            h = jax.nn.gelu(h + cs["b2"])
+        return h
+
     def _memory(self, params, batch, ctx):
         """Encoder output (whisper) or projected vision tokens (vlm)."""
         cfg = self.cfg
         if cfg.is_encoder_decoder:
-            frames = batch["enc_input"]          # (B, S_enc, d_model) stub
+            if "audio" in batch and "conv_stem" in params:
+                # (B, T, n_mels) raw log-mel frames through the conv stem
+                frames = self._conv_stem(params, batch["audio"])
+            else:
+                frames = batch["enc_input"]      # (B, S_enc, d_model) stub
             B, S, _ = frames.shape
             pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
             h = frames + sinusoid_pos(pos, cfg.d_model).astype(frames.dtype)
+            # encoder sites get their own plan/audit namespace ("enc.")
+            enc_ctx = dataclasses.replace(ctx, site_prefix="enc.")
             h, _, flag, _ = run_stack(
-                h, params["encoder"]["segments"], self.enc_plan, cfg, ctx,
-                pos, "full", None, None, None, causal=False)
+                h, params["encoder"]["segments"], self.enc_plan, cfg,
+                enc_ctx, pos, "full", None, None, None, causal=False)
             h = norm(h, params["encoder"]["final_norm"], "layernorm",
                      cfg.norm_eps)
             return h, flag
         if cfg.vision_dim:
             img = batch["images"]                # (B, n_img, vision_dim)
-            mem, f = dense(img, params["vision_proj"], ctx, "cross_qkv")
+            mem, f = dense(img, params["vision_proj"], ctx, "cross_qkv",
+                           tag="vision.proj")
             return mem, f
         return None, jnp.zeros((), bool)
 
@@ -533,7 +573,8 @@ class Model:
         comb = jnp.concatenate(
             [norm(h, params["mtp"]["norm"], "rmsnorm", cfg.norm_eps),
              emb_next], axis=-1)
-        hm, f1 = dense(comb, params["mtp"]["proj"], ctx, "mlp_up")
+        hm, f1 = dense(comb, params["mtp"]["proj"], ctx, "mlp_up",
+                       tag="mtp.proj")
         hm, _, f2, _ = apply_layer(
             hm, params["mtp"]["layer"], layer_tags(cfg)[-1], cfg, ctx,
             positions, "full", None, None, None)
@@ -580,6 +621,15 @@ class Model:
         return ProtectionPlan.for_model(
             self.cfg, hw=hw or DEFAULT, policy=policy, phase=phase,
             n_tokens=n_tokens, dtype_bytes=dtype_bytes)
+
+    def audit_coverage(self, phase: str = "mixed", **kw):
+        """Static protection-coverage audit (repro.analysis): trace this
+        model's prefill/decode to jaxprs, walk every FLOP-carrying
+        primitive, and classify each as protected / allowlisted /
+        known-unprotected / UNPROTECTED.  Returns an ``AuditReport``."""
+        from repro.analysis.audit import audit_model
+
+        return audit_model(self, phase=phase, **kw)
 
     def copy_paged_blocks(self, cache, src, dst):
         """Functional device copy ``pool[dst[i]] <- pool[src[i]]`` on

@@ -51,10 +51,10 @@ def init_moe(cfg: ModelConfig, key, dtype) -> dict:
     return p
 
 
-def _batched_dense(x_e, w_e, ctx: LayerCtx, site: str):
+def _batched_dense(x_e, w_e, ctx: LayerCtx, site: str, tag=None):
     """Per-expert protected GEMM: x_e (E, C, D) @ w_e (E, D, F)."""
     y, flags = jax.vmap(
-        lambda xb, wb: dense(xb, wb, ctx, site))(x_e, w_e)
+        lambda xb, wb: dense(xb, wb, ctx, site, tag=tag))(x_e, w_e)
     return y, jnp.any(flags)
 
 
@@ -91,7 +91,7 @@ def moe_forward(x, p, cfg: ModelConfig, ctx: LayerCtx):
 
     # --- routing (router GEMM is protected; softmax in f32)
     logits, f_router = dense(xf, p["router"], ctx, "router",
-                             out_dtype=jnp.float32)
+                             out_dtype=jnp.float32, tag="moe.router")
     probs = jax.nn.softmax(logits.astype(F32), axis=-1)       # (G, Tl, E)
     topk_w, topk_i = jax.lax.top_k(probs, K)                  # (G, Tl, K)
     topk_w = topk_w / jnp.sum(topk_w, axis=-1, keepdims=True)
@@ -123,13 +123,15 @@ def moe_forward(x, p, cfg: ModelConfig, ctx: LayerCtx):
         buf = constrain(ctx, buf, ctx.hints.dp, e_ax, None, None)
 
     # --- expert GEMMs (SwiGLU) per (group, expert); E shardable over model
-    def expert_gemm(b, w, site):
-        return jax.vmap(lambda bg: _batched_dense(bg, w, ctx, site))(b)
+    def expert_gemm(b, w, site, tag):
+        return jax.vmap(
+            lambda bg: _batched_dense(bg, w, ctx, site, tag=tag))(b)
 
-    up, f1 = expert_gemm(buf, p["w_up"], "expert_up")
-    gate, f2 = expert_gemm(buf, p["w_gate"], "expert_up")
+    up, f1 = expert_gemm(buf, p["w_up"], "expert_up", "moe.expert_up")
+    gate, f2 = expert_gemm(buf, p["w_gate"], "expert_up", "moe.expert_up")
     h = jax.nn.silu(gate.astype(F32)).astype(x.dtype) * up
-    out_buf, f3 = expert_gemm(h, p["w_down"], "expert_down")
+    out_buf, f3 = expert_gemm(h, p["w_down"], "expert_down",
+                              "moe.expert_down")
     if ctx.hints is not None:
         out_buf = constrain(
             ctx, out_buf, ctx.hints.dp, e_ax, None, None)
@@ -151,7 +153,8 @@ def moe_forward(x, p, cfg: ModelConfig, ctx: LayerCtx):
 
     # --- shared experts (dense path, always on)
     if cfg.n_shared_experts:
-        ys, fs = mlp(xf, p["shared"], ctx, act="silu")
+        ys, fs = mlp(xf, p["shared"], ctx, act="silu",
+                     tags=("moe.shared_up", "moe.shared_down"))
         y = y + ys
         flag = or_flags(flag, fs)
 

@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import re
 
-import numpy as np
 
 from repro.core.hardware import TPU_V5E, HardwareSpec
 

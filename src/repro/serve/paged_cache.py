@@ -499,7 +499,6 @@ def paged_scatter_decode(pool, new, tables, pos):
     Inactive/freed slots carry sentinel tables, so their writes drop —
     no activity mask is needed (the table IS the guard)."""
     bs = pool.shape[1]
-    B = new.shape[0]
     blk = jnp.take_along_axis(
         tables, (pos[:, None] // bs).astype(jnp.int32), axis=1)[:, 0]
     off = pos % bs

@@ -16,7 +16,6 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.core.protected import ABFTConfig
 from repro.models.layers import LayerCtx, ModelFault
 from repro.models.model import Model

@@ -18,7 +18,6 @@ import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint.checkpoint import Checkpointer
 from repro.core.protected import ABFTConfig

@@ -1,7 +1,6 @@
 """Unit + property tests for the core ABFT library (checksums, selector,
 intensity model, protected_matmul dispatch)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -10,6 +9,7 @@ from _hypothesis_compat import given, settings, st
 from repro.core import (
     ABFTConfig,
     FaultSpec,
+    FixedPolicy,
     GemmDims,
     NVIDIA_T4,
     Scheme,
@@ -176,7 +176,12 @@ def test_property_global_check_no_false_positive(m, k, n, scale, seed):
 def test_protected_matmul_all_schemes(rng, scheme):
     x = jnp.asarray(rng.standard_normal((32, 128)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((128, 64)), jnp.float32)
-    cfg = ABFTConfig(scheme=scheme)
+    if scheme == Scheme.AUTO:
+        # AUTO denotes the default policy — not a deprecated surface
+        cfg = ABFTConfig(scheme=scheme)
+    else:
+        with pytest.warns(DeprecationWarning, match="ProtectionPolicy"):
+            cfg = ABFTConfig(scheme=scheme)
     y, chk = protected_matmul(x, w, cfg, out_dtype=jnp.float32)
     np.testing.assert_allclose(
         np.asarray(y), np.asarray(jnp.matmul(x, w)), rtol=1e-4)
@@ -188,8 +193,8 @@ def test_protected_matmul_detects_fault(rng, scheme):
     x = jnp.asarray(rng.standard_normal((32, 128)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((128, 64)), jnp.float32)
     y, chk = protected_matmul(
-        x, w, ABFTConfig(scheme=scheme), out_dtype=jnp.float32,
-        fault=FaultSpec.value(5, 6, 50.0))
+        x, w, ABFTConfig.from_policy(FixedPolicy(scheme)),
+        out_dtype=jnp.float32, fault=FaultSpec.value(5, 6, 50.0))
     assert bool(chk.flag)
 
 

@@ -1,0 +1,249 @@
+"""Tests for the protection-coverage auditor (src/repro/analysis/):
+jaxpr walking + FLOP accounting, marker classification, the full
+per-config audits, the plan <-> trace crosscheck, serialized-plan
+static validation, and the ABFTConfig deprecation surface."""
+
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.audit import (
+    KNOWN_GAP_NOTES,
+    audit_config,
+    classify,
+    resolve_arch,
+)
+from repro.analysis.crosscheck import crosscheck_plan
+from repro.analysis.jaxpr_walk import flop_ops
+from repro.configs import ALL_ARCHS, get_config, scaled_down
+from repro.core import ABFTConfig, FixedPolicy, Scheme, protected_matmul
+from repro.core.policy import PlanValidationError, validate_plan_payload
+from repro.models import build_model
+
+# ----------------------------------------------------------- jaxpr walker
+
+
+def test_unmarked_dot_detected_with_path_and_flops():
+    """A deliberately unmarked dot_general next to a protected one is
+    classified unprotected, with its path and exact FLOP count."""
+    abft = ABFTConfig(use_pallas=False)
+
+    def fn(x, w1, w2):
+        y, _ = protected_matmul(x, w1, abft, out_dtype=jnp.float32,
+                                site="toy.protected")
+        return y @ w2                      # the drift this auditor catches
+
+    x = jnp.zeros((4, 16))
+    w1 = jnp.zeros((16, 32))
+    w2 = jnp.zeros((32, 8))
+    ops = classify(flop_ops(jax.make_jaxpr(fn)(x, w1, w2), entry="toy"))
+
+    bad = [c for c in ops if c.status == "unprotected"]
+    assert len(bad) == 1
+    assert bad[0].op.primitive == "dot_general"
+    assert bad[0].op.flops == 2.0 * 4 * 32 * 8
+    assert bad[0].op.path.startswith("toy/")
+    good = [c for c in ops if c.status == "protected"]
+    assert {c.site for c in good} == {"toy.protected"}
+    assert all(c.scheme for c in good)
+
+
+def test_scan_multiplier_restores_layer_repeats():
+    """A scanned GEMM body traces once; the walker multiplies FLOPs by
+    the trip count and records it in ``repeats``."""
+    w = jnp.zeros((16, 16))
+
+    def body(x, _):
+        return x @ w, ()
+
+    def fn(x):
+        y, _ = jax.lax.scan(body, x, None, length=5)
+        return y
+
+    ops = flop_ops(jax.make_jaxpr(fn)(jnp.zeros((4, 16))), entry="t")
+    dots = [o for o in ops if o.primitive == "dot_general"]
+    assert len(dots) == 1
+    assert dots[0].repeats == 5
+    assert dots[0].flops == 5 * 2.0 * 4 * 16 * 16
+    assert "scan[x5]" in dots[0].path
+
+
+# ------------------------------------------------------------- full audits
+
+
+def test_llama_mixed_audit_full_coverage():
+    """The acceptance gate: llama3.2-1b at --phase mixed passes
+    --fail-under 1.0 with a bijective plan and a consistent flash
+    allowlist (alias spelling exercises resolve_arch)."""
+    rep = audit_config("llama3_2_1b", phase="mixed")
+    assert rep.protected_fraction == 1.0
+    assert set(rep.phases) == {"prefill", "decode", "mixed"}
+    assert all(not p.unprotected_ops for p in rep.phases.values())
+    assert rep.crosscheck.bijective
+    assert rep.flash_consistent is True
+    # attention score/PV contractions are allowlisted, not silently absent
+    assert rep.phases["mixed"].allowlisted_flops > 0
+
+
+def test_whisper_conv_stem_is_known_unprotected():
+    """The conv frontend shows up as an explicit, annotated gap — not as
+    a silent pass and not as an audit failure."""
+    rep = audit_config("whisper_tiny", phase="prefill", check_flash=False)
+    assert rep.protected_fraction == 1.0
+    gaps = rep.phases["prefill"].known_unprotected
+    assert gaps.get("conv_stem", 0) > 0
+    assert "5a" in KNOWN_GAP_NOTES["conv_stem"]
+    payload = rep.to_json()
+    note = (payload["phases"]["prefill"]["known_unprotected"]
+            ["conv_stem"]["note"])
+    assert "5a" in note and "conv" in note
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_plan_trace_bijection_every_config(arch):
+    """Every registered config's compiled ProtectionPlan and its traced
+    prefill+decode union agree site-for-site."""
+    from repro.analysis.audit import (
+        _audit_abft,
+        _zero_params,
+        trace_decode,
+        trace_prefill,
+    )
+
+    model = build_model(scaled_down(get_config(arch)))
+    params = _zero_params(model, jnp.float32)
+    abft = _audit_abft()
+    ops = (trace_prefill(model, params, abft)
+           + trace_decode(model, params, abft))
+    xc = crosscheck_plan(model.protection_plan(), ops, model=arch)
+    assert xc.bijective, xc.report()
+    assert len(xc.matched) >= 5
+
+
+def test_crosscheck_catches_plan_drift():
+    """Dropping a plan entry / renaming a site produces diff-style
+    plan-only / trace-only lines, not a silent pass."""
+    import dataclasses as dc
+
+    from repro.analysis.audit import (
+        _audit_abft,
+        _zero_params,
+        trace_decode,
+    )
+
+    model = build_model(scaled_down(get_config("llama3.2-1b")))
+    params = _zero_params(model, jnp.float32)
+    ops = trace_decode(model, params, _audit_abft())
+    plan = model.protection_plan()
+
+    dropped = dc.replace(plan, entries=plan.entries[1:])
+    xc = crosscheck_plan(dropped, ops, model="llama")
+    assert not xc.bijective
+    assert xc.trace_only == (plan.entries[0].layer.name,)
+    assert plan.entries[0].layer.name in xc.report()
+
+    e0 = plan.entries[0]
+    renamed = dc.replace(plan, entries=(
+        dc.replace(e0, layer=dc.replace(e0.layer, name="ghost.site")),
+    ) + plan.entries[1:])
+    xc = crosscheck_plan(renamed, ops, model="llama")
+    assert "ghost.site" in xc.plan_only
+    assert "plan-only" in xc.report()
+
+
+def test_resolve_arch_aliases_and_errors():
+    assert resolve_arch("llama3.2-1b") == "llama3.2-1b"
+    assert resolve_arch("llama3_2_1b") == "llama3.2-1b"
+    assert resolve_arch("whisper_tiny") == "whisper-tiny"
+    with pytest.raises(KeyError, match="unknown arch"):
+        resolve_arch("gpt-5")
+
+
+# ------------------------------------------------- plan static validation
+
+
+def _plan_payload():
+    model = build_model(scaled_down(get_config("llama3.2-1b")))
+    return json.loads(model.protection_plan().to_json())
+
+
+def test_plan_json_roundtrip_validates():
+    from repro.core.policy import ProtectionPlan
+
+    d = _plan_payload()
+    validate_plan_payload(d)               # no problems
+    plan = ProtectionPlan.from_json(json.dumps(d))
+    assert plan.entries
+
+
+def test_plan_unknown_scheme_rejected():
+    d = _plan_payload()
+    d["layers"][0]["scheme"] = "tmr_voting"
+    with pytest.raises(PlanValidationError) as ei:
+        validate_plan_payload(d)
+    msg = str(ei.value)
+    assert "unknown scheme 'tmr_voting'" in msg
+    assert "registered:" in msg            # actionable: lists valid names
+    assert d["layers"][0]["name"] in msg
+
+
+def test_plan_stale_dims_rejected():
+    d = _plan_payload()
+    d["layers"][1]["dims"]["k"] = 0
+    d["layers"][2]["dims"]["n"] = "4096"
+    with pytest.raises(PlanValidationError, match="2 problems"):
+        validate_plan_payload(d)
+
+
+def test_plan_duplicate_layer_rejected():
+    d = _plan_payload()
+    d["layers"].append(dict(d["layers"][0]))
+    with pytest.raises(PlanValidationError) as ei:
+        validate_plan_payload(d)
+    assert "duplicate layer name" in str(ei.value)
+    assert "first at layers[0]" in str(ei.value)
+
+
+def test_plan_policy_scheme_names_validated():
+    d = _plan_payload()
+    d["policy"] = {"kind": "fixed", "scheme": "parity_cache"}
+    with pytest.raises(PlanValidationError,
+                       match="policy.scheme: unknown scheme"):
+        validate_plan_payload(d)
+
+
+# --------------------------------------------------- deprecation surface
+
+
+def test_abftconfig_legacy_scheme_warns():
+    with pytest.warns(DeprecationWarning, match="ProtectionPolicy"):
+        ABFTConfig(scheme=Scheme.GLOBAL)
+
+
+def test_abftconfig_modern_surfaces_stay_silent():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ABFTConfig()                               # default AUTO
+        ABFTConfig(use_pallas=False, flash_attention=True)
+        ABFTConfig.from_policy(FixedPolicy(Scheme.GLOBAL))
+        ABFTConfig.off()
+
+
+# ----------------------------------------------------------------- the CLI
+
+
+def test_audit_cli_single_config(tmp_path):
+    from repro.launch.audit import main
+
+    out = tmp_path / "audit.json"
+    rc = main(["--config", "llama3_2_1b", "--phase", "decode",
+               "--fail-under", "1.0", "--json", str(out)])
+    assert rc == 0
+    payload = json.loads(out.read_text())
+    assert payload["schema"] == "repro/audit_coverage/v1"
+    rep = payload["configs"]["llama3.2-1b"]
+    assert rep["protected_fraction"] == 1.0
+    assert rep["crosscheck"]["bijective"]

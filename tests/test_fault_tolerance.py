@@ -188,7 +188,7 @@ def test_trainer_end_to_end_with_restart(tmp_path):
     tr2 = Trainer(model, params, tcfg, dcfg, rcfg, abft=abft)
     assert tr2.maybe_restore()
     assert tr2.step == 10  # latest checkpoint cadence multiple
-    hist2 = tr2.run()
+    tr2.run()
     assert tr2.step == 12
 
 

@@ -84,8 +84,6 @@ def test_shared_experts_add_dense_path():
 
 def test_grouped_dispatch_group_invariance():
     """dp_size-grouped dispatch equals ungrouped when tokens divide."""
-    from repro.models.layers import ShardingHints
-
     cfg = dataclasses.replace(_cfg(), capacity_factor=8.0)
     p = init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
     x = jnp.asarray(

@@ -7,8 +7,6 @@ Block sizes in the equivalence tests divide ``max_len`` so the paged
 attention shapes equal the dense ones — token streams must then match
 EXACTLY, with and without injected faults."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -318,7 +316,8 @@ def test_paged_mla_latent_matches_dense(mla_model):
     """deepseek MLA: the paged latent pool (kv_lora + rope dims) must
     reproduce the dense streams for mixed-length traffic."""
     _, model, params = mla_model
-    reqs = lambda: [_req(0, 5, 4), _req(1, 14, 4)]
+    def reqs():
+        return [_req(0, 5, 4), _req(1, 14, 4)]
     dense = _engine(model, params, max_len=32).run(reqs())
     paged = _engine(model, params, max_len=32, cache_kind="paged",
                     block_size=8).run(reqs())
@@ -329,7 +328,8 @@ def test_paged_hybrid_ssm_attention_matches_dense(hybrid_model):
     """jamba: the paged pool carries the attention layers while mamba
     conv/SSD state stays per-slot — streams must still match dense."""
     _, model, params = hybrid_model
-    reqs = lambda: [_req(0, 4, 4), _req(1, 13, 4)]
+    def reqs():
+        return [_req(0, 4, 4), _req(1, 13, 4)]
     dense = _engine(model, params, max_len=32).run(reqs())
     paged = _engine(model, params, max_len=32, cache_kind="paged",
                     block_size=8).run(reqs())
@@ -348,7 +348,8 @@ def test_cache_stats_reports_paged_savings(small_model):
     assert p["bytes_total"] == d["bytes_total"] // 4
     assert p["tokens_capacity"] == 64 and d["tokens_capacity"] == 256
     # skewed traffic: one long, three short — fits in 4 blocks
-    reqs = lambda: [_req(0, 30, 3), _req(1, 4, 3), _req(2, 5, 3)]
+    def reqs():
+        return [_req(0, 30, 3), _req(1, 4, 3), _req(2, 5, 3)]
     assert dense_eng.run(reqs()) == paged_eng.run(reqs())
     assert p["bytes_total"] == pytree_bytes(paged_eng.cache)
     # mid-run occupancy was visible through the pool, all freed at drain

@@ -270,10 +270,10 @@ def test_model_layer_specs_flag_true_first_mixer():
     flags = {s.name: s.first for s in specs}
     assert flags["attn.q"] and not any(
         v for k, v in flags.items() if k != "attn.q")
-    # hybrid whose stack opens with a mamba block flags ssm.in instead
+    # hybrid whose stack opens with a mamba block flags ssm.in_z instead
     jcfg = scaled_down(get_config("jamba-v0.1-52b"))
     jflags = {s.name: s.first for s in layer_specs(jcfg, 32)}
-    assert jflags["ssm.in"] and not jflags.get("attn.q", False)
+    assert jflags["ssm.in_z"] and not jflags.get("attn.q", False)
 
 
 # ------------------------------------------------------- plan round-trip

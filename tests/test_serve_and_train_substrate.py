@@ -9,7 +9,7 @@ import pytest
 from repro.configs import get_config, scaled_down
 from repro.core import ABFTConfig, FaultSpec, Scheme
 from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
-from repro.models import LayerCtx, ModelFault, build_model
+from repro.models import ModelFault, build_model
 from repro.serve.engine import Request, ServeEngine
 from repro.train import OptConfig, init_opt_state, lr_schedule, update
 from repro.train.optimizer import (
