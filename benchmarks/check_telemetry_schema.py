@@ -1,0 +1,167 @@
+"""Schema gate for serving telemetry artifacts.
+
+Two artifact shapes are accepted:
+
+* the **benchmark artifact** (``serve_throughput.py --telemetry-out``):
+  ``{"schema_version": 1, "cells": [{slots, mix, scheme, kind, metrics,
+  faultrate, trace, trace_events, counters_match_stats}, ...]}``;
+* the **driver snapshot** (``repro.launch.serve --metrics-out``): one
+  cell-shaped object with ``metrics``/``faultrate``/``engine_stats``/
+  ``counters_match_stats`` (pass ``--trace t.json`` to also validate the
+  matching ``--trace-out`` file).
+
+Checked invariants (the exportable-telemetry acceptance criteria):
+
+* every mirrored engine counter is present and the artifact's
+  ``counters_match_stats`` verdict is True — plus, when the artifact
+  embeds ``engine_stats``, the counter values are re-checked against it
+  here (the gate does not trust the producer's own verdict);
+* histograms are well-formed: cumulative bucket counts are
+  non-decreasing, bucket bounds strictly increasing, the ``+Inf`` count
+  equals ``count``;
+* the fault-rate surface carries the windowed + EWMA keys ROADMAP 5b's
+  adaptive policy consumes;
+* trace events parse under Perfetto's JSON schema assumptions
+  (``repro.obs.trace.check_events``: known phases, non-negative
+  ``ts``/``dur``, proper span nesting per thread).
+
+  PYTHONPATH=src python benchmarks/check_telemetry_schema.py \
+      telemetry.json [--trace trace.json]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.obs import ENGINE_COUNTERS
+from repro.obs.trace import check_events
+
+REQUIRED_FAULTRATE_KEYS = (
+    "window", "window_detection_rate", "window_detection_rate_per_token",
+    "window_retry_rate", "window_hard_fault_rate",
+    "ewma_detections_per_step", "total_detections", "total_steps",
+)
+
+REQUIRED_HISTOGRAMS = (
+    "serve_step_latency_seconds", "serve_ttft_seconds",
+    "serve_itl_seconds",
+)
+
+
+def _counter_value(metrics: dict, name: str):
+    m = metrics.get(name)
+    if not m or m.get("type") != "counter" or not m.get("series"):
+        return None
+    return m["series"][0].get("value")
+
+
+def check_metrics(metrics: dict, where: str,
+                  engine_stats: dict | None = None) -> list:
+    errors = []
+    for name in ENGINE_COUNTERS:
+        v = _counter_value(metrics, name)
+        if v is None:
+            errors.append(f"{where}: missing engine counter {name}")
+        elif engine_stats is not None and name in engine_stats and \
+                v != engine_stats[name]:
+            errors.append(
+                f"{where}: {name}={v} != engine_stats {engine_stats[name]}")
+    for name in REQUIRED_HISTOGRAMS:
+        m = metrics.get(name)
+        if not m or m.get("type") != "histogram":
+            errors.append(f"{where}: missing histogram {name}")
+            continue
+        for s in m.get("series", []):
+            buckets = s.get("buckets", [])
+            if not buckets or buckets[-1][0] != "+Inf":
+                errors.append(f"{where}: {name} lacks a +Inf bucket")
+                continue
+            counts = [c for _, c in buckets]
+            if counts != sorted(counts):
+                errors.append(
+                    f"{where}: {name} cumulative counts decrease")
+            bounds = [le for le, _ in buckets[:-1]]
+            if bounds != sorted(set(bounds)):
+                errors.append(
+                    f"{where}: {name} bounds not strictly increasing")
+            if counts[-1] != s.get("count"):
+                errors.append(
+                    f"{where}: {name} +Inf count {counts[-1]} != "
+                    f"count {s.get('count')}")
+    return errors
+
+
+def check_cell(cell: dict, where: str) -> list:
+    errors = []
+    metrics = cell.get("metrics")
+    if not isinstance(metrics, dict):
+        return [f"{where}: no metrics snapshot"]
+    errors += check_metrics(metrics, where, cell.get("engine_stats"))
+    if cell.get("counters_match_stats") is False:
+        errors.append(
+            f"{where}: counters_match_stats is False — mirrored "
+            "counters drifted from EngineStats")
+    fr = cell.get("faultrate")
+    if not isinstance(fr, dict):
+        errors.append(f"{where}: no faultrate surface")
+    else:
+        for k in REQUIRED_FAULTRATE_KEYS:
+            if k not in fr:
+                errors.append(f"{where}: faultrate missing {k}")
+    events = cell.get("trace_events")
+    if events is not None:
+        for p in check_events(events):
+            errors.append(f"{where}: trace: {p}")
+    return errors
+
+
+def check(doc: dict, trace_doc: dict | None = None) -> list:
+    errors = []
+    if "cells" in doc:
+        if not doc["cells"]:
+            errors.append("no telemetry cells")
+        for i, cell in enumerate(doc["cells"]):
+            where = (f"cells[{i}] ({cell.get('mix')}/"
+                     f"{cell.get('scheme')}/{cell.get('kind')})")
+            errors += check_cell(cell, where)
+    else:
+        errors += check_cell(doc, "snapshot")
+    if trace_doc is not None:
+        events = trace_doc.get("traceEvents")
+        if not isinstance(events, list) or not events:
+            errors.append("trace file: no traceEvents array")
+        else:
+            errors += [f"trace file: {p}" for p in check_events(events)]
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = list(argv if argv is not None else sys.argv[1:])
+    trace_path = None
+    if "--trace" in argv:
+        i = argv.index("--trace")
+        trace_path = argv[i + 1]
+        del argv[i:i + 2]
+    if not argv:
+        print(__doc__)
+        return 2
+    with open(argv[0]) as fh:
+        doc = json.load(fh)
+    trace_doc = None
+    if trace_path:
+        with open(trace_path) as fh:
+            trace_doc = json.load(fh)
+    errors = check(doc, trace_doc)
+    if errors:
+        for e in errors:
+            print(f"TELEMETRY SCHEMA: {e}")
+        return 1
+    n = len(doc.get("cells", [doc]))
+    print(f"telemetry schema OK: {argv[0]} ({n} cells"
+          + (", trace valid" if trace_doc is not None else "") + ")")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -66,6 +66,7 @@ from repro.configs import get_config, scaled_down
 from repro.core import ABFTConfig, FixedPolicy, Scheme, compute_bound_ai
 from repro.core.hardware import HardwareSpec
 from repro.models import build_model
+from repro.obs import EngineTelemetry
 from repro.serve.engine import EngineStats, Request, ServeEngine
 from repro.serve.paged_cache import blocks_for
 
@@ -202,7 +203,8 @@ def _selection_summary(stats: EngineStats) -> dict:
 
 def run_cell(model, params, reqs, *, slots, max_len, abft, cache_kind,
              num_blocks=None, block_size=16,
-             prefix_sharing=False, chunk_tokens=None) -> dict:
+             prefix_sharing=False, chunk_tokens=None,
+             telemetry: EngineTelemetry | None = None) -> dict:
     eng = ServeEngine(
         model, params, slots=slots, max_len=max_len, abft=abft,
         dtype=jnp.float32, cache_kind=cache_kind, block_size=block_size,
@@ -221,9 +223,20 @@ def run_cell(model, params, reqs, *, slots, max_len, abft, cache_kind,
 
         eng.index = PrefixIndex(block_size)
     eng.stats = EngineStats()
+    if telemetry is not None:
+        # attach AFTER the warm-up + stats reset: the mirrored counters
+        # are monotonic and must start from the fresh EngineStats (the
+        # timed run is also the only one worth exporting)
+        eng.attach_telemetry(telemetry)
     t0 = time.perf_counter()
     eng.run([r for r in reqs])
     dt = time.perf_counter() - t0
+    if telemetry is not None:
+        for r in reqs:
+            if r.times:
+                telemetry.observe_ttft(r.times[0] - t0)
+            for a, b in zip(r.times, r.times[1:]):
+                telemetry.observe_itl(b - a)
     stats = eng.cache_stats()
     cell = {
         "tokens": eng.stats.tokens,
@@ -261,6 +274,11 @@ def run_cell(model, params, reqs, *, slots, max_len, abft, cache_kind,
         cell["modeled_step_tput"] = (
             eng.chunk_tokens / eng.plan.modeled_step_time(eng.chunk_tokens))
     cell.update(_latency_stats(reqs, t0))
+    if telemetry is not None:
+        cell["telemetry"] = dict(
+            telemetry.snapshot(),
+            counters_match_stats=telemetry.counters_match(eng.stats),
+            trace_events=list(telemetry.tracer.events))
     return cell
 
 
@@ -287,6 +305,11 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true",
                     help="one slot count, two schemes")
     ap.add_argument("--out", default=None, help="write JSON here (else stdout)")
+    ap.add_argument("--telemetry-out", default=None,
+                    help="write a per-cell telemetry artifact: metrics "
+                         "snapshot, fault-rate surface, and a bounded "
+                         "span trace per engine cell (schema-gated in "
+                         "CI by benchmarks/check_telemetry_schema.py)")
     args = ap.parse_args(argv)
 
     cfg = scaled_down(get_config(args.arch), n_layers=args.n_layers)
@@ -309,6 +332,7 @@ def main(argv=None) -> int:
     share_ok = model.supports_prefix_sharing
     chunk_ok = model.supports_chunked_prefill
     cells = []
+    telemetry_cells = []
     for slots in slot_counts:
         for mix_name, mix in mixes.items():
             n_reqs = args.requests
@@ -343,6 +367,12 @@ def main(argv=None) -> int:
                     reqs = [Request(uid=r.uid, prompt=r.prompt,
                                     max_new_tokens=r.max_new_tokens)
                             for r in reqs_proto]
+                    # one fresh telemetry per cell (counters mirror ONE
+                    # engine's stats); the trace is event-bounded so the
+                    # artifact stays small across the whole sweep
+                    tel = (EngineTelemetry(trace=True,
+                                           trace_max_events=2000)
+                           if args.telemetry_out else None)
                     cell = run_cell(
                         model, params, reqs, slots=slots,
                         max_len=mix_max_len, abft=abft,
@@ -351,7 +381,13 @@ def main(argv=None) -> int:
                         num_blocks=None if kind == "dense" else nb,
                         prefix_sharing=(kind == "paged_shared"),
                         chunk_tokens=(chunk_tokens
-                                      if kind == "paged_chunked" else None))
+                                      if kind == "paged_chunked" else None),
+                        telemetry=tel)
+                    if tel is not None:
+                        telemetry_cells.append(dict(
+                            {"slots": slots, "mix": mix_name,
+                             "scheme": scheme_name, "kind": kind},
+                            **cell.pop("telemetry")))
                     streams[kind] = cell.pop("streams")
                     row[kind] = cell
                 row["paged_matches_dense"] = (
@@ -482,6 +518,12 @@ def main(argv=None) -> int:
         print(f"wrote {args.out}")
     else:
         print(payload)
+    if args.telemetry_out:
+        with open(args.telemetry_out, "w") as fh:
+            json.dump({"schema_version": 1, "cells": telemetry_cells},
+                      fh, indent=2)
+        print(f"wrote {args.telemetry_out} "
+              f"({len(telemetry_cells)} telemetry cells)")
     return 0
 
 

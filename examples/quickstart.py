@@ -79,6 +79,35 @@ assert rep.protected_fraction == 1.0 and rep.crosscheck.bijective
 print(f"\n2c) coverage audit: protected={rep.protected_fraction:.2f}; "
       f"{rep.crosscheck.report()}")
 
+# ---------------------------------------------------- 2d. observability
+# the serving telemetry stack is dependency-free and usable standalone:
+# a metrics registry (JSON + Prometheus exposition), a Perfetto-JSON
+# span tracer, and the rolling fault-rate monitor that feeds adaptive
+# protection (ROADMAP 5b).  The serve driver wires all three behind
+# --metrics-out / --trace-out / --log-events.
+from repro.obs import FaultRateMonitor, MetricsRegistry, Tracer
+
+reg = MetricsRegistry()
+detections = reg.counter("abft_faults_detected_total",
+                         "ABFT checksum mismatches", labels=("scheme",))
+detections.labels(scheme="global").inc()
+lat = reg.histogram("serve_step_latency_seconds", "step wall time",
+                    buckets=(0.001, 0.01, 0.1))
+lat.observe(0.004)
+
+tracer = Tracer()
+with tracer.span("decode_step", {"tokens": 8}):
+    with tracer.span("abft_check"):
+        pass
+tracer.instant("scheme_flip", {"scheme": "global", "intensity": 42.0})
+
+monitor = FaultRateMonitor(window=128)
+monitor.observe(steps=1, tokens=8, detections=1, retries=1)
+print("\n2d) telemetry:")
+print("   " + "\n   ".join(reg.render_prometheus().splitlines()[:4]))
+print(f"   trace events = {len(tracer.events)}, windowed detection "
+      f"rate = {monitor.window_detection_rate:.3f}/step")
+
 # ---------------------------------------------------------------- 3. a model
 from repro.configs import get_config, scaled_down
 from repro.models import LayerCtx, ModelFault, build_model

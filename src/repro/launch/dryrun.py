@@ -230,7 +230,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, outdir: pathlib.Path,
         print(f"[skipped] {arch} {shape}: {reason}")
         return rec
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     rec = dict(arch=arch, shape=shape, mesh=mesh_kind)
     try:
         mesh = make_production_mesh(multi_pod=(mesh_kind == "pod"))
@@ -238,9 +238,9 @@ def run_cell(arch: str, shape: str, mesh_kind: str, outdir: pathlib.Path,
         with mesh:
             jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
             lowered = jitted.lower(*args)
-            t_lower = time.time() - t0
+            t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.perf_counter() - t0 - t_lower
         hlo_text = compiled.as_text()
         if os.environ.get("DRYRUN_SAVE_HLO", "1") == "1":
             hlo_path = path.with_suffix(".hlo.txt.gz")

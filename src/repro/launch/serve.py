@@ -1,13 +1,22 @@
 """Production serving driver: continuous batching + ABFT recovery stats.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-      --scale smoke --requests 8 --new-tokens 16 [--inject-faults]
+      --scale smoke --requests 8 --new-tokens 16 [--inject-faults] \
+      [--metrics-out m.json] [--trace-out t.json] [--log-events]
+
+Telemetry flags (repro/obs): ``--metrics-out`` writes the metrics
+snapshot + fault-rate surface + final engine stats as one JSON artifact
+(``benchmarks/check_telemetry_schema.py`` validates it);
+``--trace-out`` writes a Chrome-trace/Perfetto JSON (load it at
+https://ui.perfetto.dev); ``--log-events`` streams every trace event as
+a JSON line to stderr while serving.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import jax
@@ -20,6 +29,7 @@ from repro.core.policy import FixedPolicy, IntensityGuidedPolicy
 from repro.core.protected import ABFTConfig
 from repro.core.schemes import Scheme
 from repro.models import ModelFault, build_model
+from repro.obs import ENGINE_COUNTERS, EngineTelemetry
 from repro.serve.engine import RecoveryPolicy, Request, ServeEngine
 
 
@@ -73,6 +83,18 @@ def main(argv=None) -> int:
                     help="0 = greedy; >0 samples per slot")
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the telemetry metrics snapshot "
+                         "(registry + fault-rate monitor + final engine "
+                         "stats) as a JSON artifact")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace/Perfetto JSON of the "
+                         "serving run (spans: admit/prefill/decode_step/"
+                         "abft_retry/...; instants: scheme flips, "
+                         "evictions, fault detections)")
+    ap.add_argument("--log-events", action="store_true",
+                    help="stream every trace event as a JSON line to "
+                         "stderr (structured event log)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -90,6 +112,15 @@ def main(argv=None) -> int:
     policy = RecoveryPolicy(
         max_retries=args.max_retries,
         evict_on_hard_fault=not args.raise_on_hard_fault)
+    telemetry = None
+    if args.metrics_out or args.trace_out or args.log_events:
+        sink = None
+        if args.log_events:
+            def sink(ev):
+                print(json.dumps(ev), file=sys.stderr)
+        telemetry = EngineTelemetry(
+            trace=bool(args.trace_out or args.log_events),
+            trace_sink=sink)
     engine = ServeEngine(model, params, slots=args.slots,
                          max_len=args.max_len, abft=abft,
                          dtype=jnp.float32, policy=policy,
@@ -99,7 +130,7 @@ def main(argv=None) -> int:
                          admit_lookahead=args.admit_lookahead,
                          chunk_tokens=args.chunk_tokens,
                          temperature=args.temperature, top_k=args.top_k,
-                         seed=args.seed)
+                         seed=args.seed, telemetry=telemetry)
     if args.plan_out:
         with open(args.plan_out, "w") as fh:
             fh.write(engine.plan.to_json())
@@ -117,9 +148,19 @@ def main(argv=None) -> int:
     if args.inject_faults:
         fault_at = (3, ModelFault.at(
             0, "mlp_down", FaultSpec.value(0, 1, 1e5)))
-    t0 = time.time()
+    # monotonic clock everywhere latency is derived: wall-clock
+    # adjustments must never produce negative TTFT/ITL
+    t0 = time.perf_counter()
     results = engine.run(reqs, fault_at=fault_at)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
+    if telemetry is not None:
+        # TTFT/ITL histograms: the driver owns arrival time, so the
+        # per-token engine stamps become latency observations here
+        for r in reqs:
+            if r.times:
+                telemetry.observe_ttft(r.times[0] - t0)
+            for a, b in zip(r.times, r.times[1:]):
+                telemetry.observe_itl(b - a)
     print(json.dumps({
         "requests": len(results),
         "tokens": engine.stats.tokens,
@@ -138,7 +179,22 @@ def main(argv=None) -> int:
         "chunk_budget_retunes": engine.stats.chunk_budget_retunes,
         "errors": {r.uid: r.error for r in reqs if r.error},
         "cache": engine.cache_stats(),
+        "telemetry": (telemetry.faults.snapshot()
+                      if telemetry is not None else None),
     }))
+    if args.metrics_out:
+        stats = engine.stats
+        artifact = telemetry.snapshot()
+        artifact["engine_stats"] = {
+            k: getattr(stats, a) for k, a in ENGINE_COUNTERS.items()}
+        artifact["counters_match_stats"] = telemetry.counters_match(stats)
+        with open(args.metrics_out, "w") as fh:
+            json.dump(artifact, fh, indent=2)
+        print(f"wrote metrics snapshot -> {args.metrics_out}")
+    if args.trace_out:
+        telemetry.tracer.write(args.trace_out)
+        print(f"wrote trace ({len(telemetry.tracer.events)} events) -> "
+              f"{args.trace_out}")
     return 0
 
 

@@ -93,9 +93,9 @@ def main(argv=None) -> int:
     if args.resume:
         trainer.maybe_restore()
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     hist = trainer.run()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     toks = args.steps * args.batch * args.seq
     print(json.dumps({
         "first_loss": hist[0]["loss"] if hist else None,

@@ -11,6 +11,10 @@ has one host).  The trainer consumes:
 * ``StragglerPolicy`` — per-step duration tracking; a worker persistently
   slower than median * threshold is flagged for replacement with a hot
   spare *before* it fails hard (tail-latency mitigation at scale).
+
+Pass a ``repro.obs.MetricsRegistry`` to ``HeartbeatMonitor`` to export
+``worker_alive{worker=}`` and ``worker_heartbeat_staleness_seconds``
+gauges alongside the serving telemetry.
 """
 
 from __future__ import annotations
@@ -27,17 +31,37 @@ class WorkerState:
 
 
 class HeartbeatMonitor:
-    def __init__(self, workers, timeout_s: float = 60.0, clock=time.monotonic):
+    def __init__(self, workers, timeout_s: float = 60.0, clock=time.monotonic,
+                 registry=None):
         self.timeout = timeout_s
         self.clock = clock
         self.workers = {
             w: WorkerState(last_beat=self.clock()) for w in workers}
+        self._g_alive = self._g_stale = None
+        if registry is not None:
+            self._g_alive = registry.gauge(
+                "worker_alive", "1 while the worker meets its heartbeat "
+                "deadline, 0 once declared dead", labels=("worker",))
+            self._g_stale = registry.gauge(
+                "worker_heartbeat_staleness_seconds",
+                "seconds since the worker's last heartbeat, as of the "
+                "last beat()/check()", labels=("worker",))
+        self._publish()
+
+    def _publish(self) -> None:
+        if self._g_alive is None:
+            return
+        now = self.clock()
+        for w, st in self.workers.items():
+            self._g_alive.labels(worker=str(w)).set(1 if st.alive else 0)
+            self._g_stale.labels(worker=str(w)).set(now - st.last_beat)
 
     def beat(self, worker) -> None:
         st = self.workers.get(worker)
         if st is not None:
             st.last_beat = self.clock()
             st.alive = True
+        self._publish()
 
     def check(self) -> list:
         """Returns newly-dead workers (deadline exceeded)."""
@@ -47,6 +71,7 @@ class HeartbeatMonitor:
             if st.alive and now - st.last_beat > self.timeout:
                 st.alive = False
                 dead.append(w)
+        self._publish()
         return dead
 
     @property
@@ -55,9 +80,13 @@ class HeartbeatMonitor:
 
     def remove(self, worker) -> None:
         self.workers.pop(worker, None)
+        if self._g_alive is not None:
+            self._g_alive.remove(worker=str(worker))
+            self._g_stale.remove(worker=str(worker))
 
     def add(self, worker) -> None:
         self.workers[worker] = WorkerState(last_beat=self.clock())
+        self._publish()
 
 
 class StragglerPolicy:

@@ -168,6 +168,26 @@ paged ``utilization`` against *allocated* tokens (``blocks_used *
 block_size``), so internal fragmentation is visible as its complement
 rather than hidden by the total-pool denominator, plus ``fragmentation``,
 ``blocks_shared``, and ``prefix_hit_rate``.
+
+Telemetry (``telemetry=EngineTelemetry(...)``, repro/obs/)
+----------------------------------------------------------
+An attached ``EngineTelemetry`` exports the engine's internals without
+changing them: every ``EngineStats`` counter is mirrored into the
+metrics registry after each ``admit()``/``step()`` (monotonic
+``inc_to`` — the exported counters equal the stats fields exactly, by
+construction), per-step deltas feed the rolling ``FaultRateMonitor``
+(the observed detection/retry-rate surface ROADMAP 5b's adaptive
+protection consumes), and — when tracing is enabled — the scheduler's
+phases are recorded as Chrome-trace spans (``admit``, ``prefill``,
+``prefill_chunk``, ``decode_step``, ``abft_check``, ``abft_retry``,
+``cow_copy``) fenced with ``jax.block_until_ready`` so asynchronous
+device work is attributed to the right span, plus instant events for
+fault detections, evictions/rejections, and intensity-guided
+``scheme_flip``s carrying {intensity, scheme, decode, prefill}.
+Telemetry is passive: greedy token streams are byte-identical with it
+enabled or disabled (fencing orders host timestamps, never values),
+and with no telemetry attached the instrumented paths reduce to no-op
+spans.
 """
 
 from __future__ import annotations
@@ -182,12 +202,17 @@ import numpy as np
 from repro.core.protected import ABFTConfig
 from repro.models.layers import LayerCtx, ModelFault
 from repro.models.model import Model
+from repro.obs.trace import Tracer
 from repro.serve.paged_cache import (
     BlockPool,
     PrefixIndex,
     blocks_for,
     pytree_bytes,
 )
+
+# shared no-op tracer for engines without telemetry: instrumented paths
+# cost one disabled-flag check, and hand out a singleton null span
+_NULL_TRACER = Tracer(enabled=False)
 
 
 @dataclasses.dataclass
@@ -260,6 +285,9 @@ class EngineStats:
     selection_trace: list = dataclasses.field(default_factory=list)
     selection_count: int = 0
     selection_stride: int = 1
+    # steps whose intensity-guided selection differs from the previous
+    # step's (the regime crossings telemetry emits as instant events)
+    scheme_flips: int = 0
     # per-step pool occupancy aggregates (one observation per executed
     # decode step on a paged engine).  The mean is exact (sum/count); the
     # median comes from a BOUNDED sample list kept small by deterministic
@@ -281,8 +309,14 @@ class EngineStats:
         if self.blocks_used_count % self.blocks_used_stride == 0:
             self.blocks_used_samples.append(used)
             if len(self.blocks_used_samples) > self.MAX_OCCUPANCY_SAMPLES:
-                # halve the sampling rate: keep every other sample
-                self.blocks_used_samples = self.blocks_used_samples[::2]
+                # halve the sampling rate.  Keep the ODD indices: entry k
+                # was recorded at observation (k+1)*stride, so [1::2]
+                # retains exactly the even multiples of the old stride —
+                # the multiples of the DOUBLED stride — and the
+                # "entry k <=> observation (k+1)*stride" alignment
+                # survives every decimation round ([::2] kept the odd
+                # multiples, which the new stride can never produce)
+                self.blocks_used_samples = self.blocks_used_samples[1::2]
                 self.blocks_used_stride *= 2
 
     def observe_selection(self, decode: int, prefill: int,
@@ -301,7 +335,12 @@ class EngineStats:
                 "intensity": intensity, "scheme": scheme,
             })
             if len(self.selection_trace) > self.MAX_OCCUPANCY_SAMPLES:
-                self.selection_trace = self.selection_trace[::2]
+                # decimation keeps the ODD indices (see
+                # observe_blocks_used): trace[k] stays the observation
+                # numbered (k+1)*selection_stride after ANY number of
+                # rounds, so downstream consumers can reconstruct true
+                # observation indices from (k, stride) alone
+                self.selection_trace = self.selection_trace[1::2]
                 self.selection_stride *= 2
 
     @property
@@ -350,7 +389,8 @@ class ServeEngine:
                  num_blocks: int | None = None,
                  prefix_sharing: bool = False, admit_lookahead: int = 8,
                  chunk_tokens: int | str | None = None,
-                 temperature: float = 0.0, top_k: int = 0, seed: int = 0):
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+                 telemetry=None):
         assert slots >= 1
         self.model = model
         self.params = params
@@ -367,6 +407,14 @@ class ServeEngine:
         self.top_k = int(top_k)
         self.admit_lookahead = int(admit_lookahead)
         self._dtype_bytes = jnp.dtype(dtype).itemsize
+        # observability (repro/obs): optional EngineTelemetry — metrics
+        # mirroring + fault-rate monitor + span tracer.  _tr is always a
+        # Tracer so instrumented paths need no None checks; _last_scheme
+        # tracks the per-step selection for scheme_flip instant events
+        self.telemetry = telemetry
+        self._tr = telemetry.tracer if telemetry is not None \
+            else _NULL_TRACER
+        self._last_scheme: str | None = None
         # compiled protection plan for this (model, hardware, serving)
         # triple: the per-step intensity-guided fast path step() consults
         # plus the roofline chunk-budget autotuner (core/policy.py)
@@ -513,6 +561,33 @@ class ServeEngine:
         self._prefill_prefix = jax.jit(_prefill_prefix_step)
         self._prefill_chunk = jax.jit(_prefill_chunk_step)
 
+    # ----------------------------------------------------------- telemetry
+    def attach_telemetry(self, telemetry) -> None:
+        """Attach (or replace) an ``EngineTelemetry`` mid-lifecycle —
+        e.g. after a warm-up run whose stats were reset, so the mirrored
+        counters start from the fresh ``EngineStats``.  The telemetry
+        object must be fresh too (counter mirroring is monotonic)."""
+        self.telemetry = telemetry
+        self._tr = telemetry.tracer if telemetry is not None \
+            else _NULL_TRACER
+
+    def _sync_telemetry(self) -> None:
+        """Mirror EngineStats into the registry + feed the fault-rate
+        monitor (one observation per admit/step)."""
+        if self.telemetry is None:
+            return
+        self.telemetry.sync(
+            self.stats,
+            active_slots=len(self.active),
+            prefill_cursors=len(self._prefill_cursors),
+            blocks_used=(self.pool.blocks_used
+                         if self.pool is not None else None),
+            blocks_free=(self.pool.blocks_free
+                         if self.pool is not None else None),
+            chunk_budget=(self.chunk_tokens
+                          if isinstance(self.chunk_tokens, int)
+                          else None))
+
     # ------------------------------------------------------------ admission
     def free_slots(self) -> list:
         return [s for s in range(self.slots)
@@ -538,8 +613,10 @@ class ServeEngine:
         req.done = True
         if reject:
             self.stats.rejections += 1
+            self._tr.instant("reject", {"uid": req.uid, "error": error})
         if evict:
             self.stats.evictions += 1
+            self._tr.instant("evict", {"uid": req.uid, "error": error})
         self._done_events.append(req)
 
     def _drain_finished(self) -> list:
@@ -556,6 +633,16 @@ class ServeEngine:
         past a transiently-deferred head (see module docstring).
         ``fault``/``fault_uid``: campaign injection applied only when the
         targeted request actually reaches prefill."""
+        with self._tr.span("admit") as sp:
+            consumed = self._admit_impl(pending, fault, fault_uid)
+            sp.set_args(consumed=len(consumed),
+                        admitted=len([r for r in consumed
+                                      if r.error is None]))
+        self._sync_telemetry()
+        return consumed
+
+    def _admit_impl(self, pending: list, fault: ModelFault | None = None,
+                    fault_uid: int | None = None) -> list:
         free = self.free_slots()
         if not pending or not free:
             return []
@@ -660,9 +747,12 @@ class ServeEngine:
             # prompt becomes a chunk cursor; step() co-schedules its
             # chunks against resident decodes under the token budget.
             if cow_pairs:
-                self.cache = self.model.copy_paged_blocks(
-                    self.cache, [s for s, _ in cow_pairs],
-                    [d for _, d in cow_pairs])
+                with self._tr.span("cow_copy",
+                                   {"pairs": len(cow_pairs)}) as sp:
+                    self.cache = self.model.copy_paged_blocks(
+                        self.cache, [s for s, _ in cow_pairs],
+                        [d for _, d in cow_pairs])
+                    sp.fence(self.cache)
                 self.stats.cow_copies += len(cow_pairs)
             for slot, req, plan in zip(slot_list, admitted, prefix_plans):
                 start = plan.match_len if plan is not None else 0
@@ -692,9 +782,12 @@ class ServeEngine:
             # COW payload moves are committed BEFORE the attempt so the
             # detect->retry window sees stable tables and block contents
             # (plain data movement, not an ABFT-protected GEMM)
-            self.cache = self.model.copy_paged_blocks(
-                self.cache, [s for s, _ in cow_pairs],
-                [d for _, d in cow_pairs])
+            with self._tr.span("cow_copy",
+                               {"pairs": len(cow_pairs)}) as sp:
+                self.cache = self.model.copy_paged_blocks(
+                    self.cache, [s for s, _ in cow_pairs],
+                    [d for _, d in cow_pairs])
+                sp.fence(self.cache)
             self.stats.cow_copies += len(cow_pairs)
 
         tables = (self.pool.device_tables(slot_ids)
@@ -716,15 +809,25 @@ class ServeEngine:
                 tables, fa)
 
         f = fault if fault is not None else ModelFault.none()
-        first, new_cache, flag, nkeys = attempt(f)
-        if bool(flag):
+        with self._tr.span("prefill", {"rows": len(admitted),
+                                       "tokens": int(lengths.sum())}) as sp:
+            first, new_cache, flag, nkeys = attempt(f)
+            sp.fence(first, flag)
+        with self._tr.span("abft_check", {"phase": "prefill"}):
+            faulted = bool(flag)
+        if faulted:
             self.stats.faults_detected += 1
+            self._tr.instant("fault_detected", {"phase": "prefill"})
             for _ in range(self.policy.max_retries):
                 self.stats.retries += 1
                 # clean retry from the PRE-admission cache — never from the
                 # possibly-corrupted attempt (mirrors decode's prev_cache);
                 # same keys, so the retry resamples the same token
-                first, new_cache, flag, nkeys = attempt(ModelFault.none())
+                with self._tr.span("abft_retry",
+                                   {"phase": "prefill"}) as sp:
+                    first, new_cache, flag, nkeys = attempt(
+                        ModelFault.none())
+                    sp.fence(first, flag)
                 if not bool(flag):
                     break
             if bool(flag):
@@ -733,6 +836,7 @@ class ServeEngine:
                 # _release drops refcounts only — a shared prefix block a
                 # LIVE request still references stays resident
                 self.stats.hard_faults += 1
+                self._tr.instant("hard_fault", {"phase": "prefill"})
                 for slot, r in zip(slot_ids, admitted):
                     self._finish(r, "hard_fault:prefill", evict=True)
                     self._release(int(slot))
@@ -773,12 +877,19 @@ class ServeEngine:
         one *budgeted* step — all resident decode tokens first, then the
         leftover budget is filled with prefill chunks from the cursor
         queue (see module docstring)."""
-        if self.chunk_tokens is not None:
-            return self._step_chunked(fault)
         before = self.stats.steps
-        out = self._decode_core(fault)
-        if self.stats.steps > before:
-            self._observe_step_mix(len(out), 0)
+        t0 = time.perf_counter()
+        if self.chunk_tokens is not None:
+            out = self._step_chunked(fault)
+        else:
+            out = self._decode_core(fault)
+            if self.stats.steps > before:
+                self._observe_step_mix(len(out), 0)
+        if self.telemetry is not None:
+            if self.stats.steps > before:
+                self.telemetry.observe_step_latency(
+                    time.perf_counter() - t0)
+            self._sync_telemetry()
         return out
 
     def _observe_step_mix(self, decode_tokens: int,
@@ -795,6 +906,18 @@ class ServeEngine:
         self.stats.observe_selection(decode_tokens, prefill_tokens,
                                      sel.arithmetic_intensity,
                                      sel.scheme_name)
+        if self._last_scheme is not None and \
+                sel.scheme_name != self._last_scheme:
+            # the paper's §5.3 decision changed regime between steps —
+            # exported as an instant event so a Perfetto timeline shows
+            # WHERE the serving mix crossed the CMR boundary
+            self.stats.scheme_flips += 1
+            self._tr.instant("scheme_flip", {
+                "intensity": sel.arithmetic_intensity,
+                "scheme": sel.scheme_name,
+                "decode": decode_tokens, "prefill": prefill_tokens,
+            })
+        self._last_scheme = sel.scheme_name
 
     def _retune_chunk_budget(self) -> None:
         """Auto-budget re-tuning as slot occupancy drifts: the budget
@@ -909,13 +1032,25 @@ class ServeEngine:
                 tables, args[4], args[5], fa)
 
         f = fault if fault is not None else ModelFault.none()
-        first, new_cache, flag, nkeys = attempt(f)
-        if bool(flag):
+        with self._tr.span(
+                "prefill_chunk",
+                {"rows": A,
+                 "tokens": int(sum(t for _, _, t, _ in rows))}) as sp:
+            first, new_cache, flag, nkeys = attempt(f)
+            sp.fence(first, flag)
+        with self._tr.span("abft_check", {"phase": "prefill_chunk"}):
+            faulted = bool(flag)
+        if faulted:
             self.stats.faults_detected += 1
+            self._tr.instant("fault_detected", {"phase": "prefill_chunk"})
             for _ in range(self.policy.max_retries):
                 self.stats.retries += 1
                 self.stats.chunk_retries += 1
-                first, new_cache, flag, nkeys = attempt(ModelFault.none())
+                with self._tr.span("abft_retry",
+                                   {"phase": "prefill_chunk"}) as sp:
+                    first, new_cache, flag, nkeys = attempt(
+                        ModelFault.none())
+                    sp.fence(first, flag)
                 if not bool(flag):
                     break
             if bool(flag):
@@ -924,6 +1059,8 @@ class ServeEngine:
                 # refcounts protect any shared prefix a live sharer
                 # holds); the committed cache stays pre-chunk
                 self.stats.hard_faults += 1
+                self._tr.instant("hard_fault",
+                                 {"phase": "prefill_chunk"})
                 for slot, cur, _, _ in rows:
                     self._finish(cur.req, "hard_fault:prefill", evict=True)
                     del self._prefill_cursors[slot]
@@ -989,9 +1126,12 @@ class ServeEngine:
                     self._finish(req, "oom:kv_blocks", evict=True)
                     self._release(s)
             if cow_pairs:
-                self.cache = self.model.copy_paged_blocks(
-                    self.cache, [a for a, _ in cow_pairs],
-                    [b for _, b in cow_pairs])
+                with self._tr.span("cow_copy",
+                                   {"pairs": len(cow_pairs)}) as sp:
+                    self.cache = self.model.copy_paged_blocks(
+                        self.cache, [a for a, _ in cow_pairs],
+                        [b for _, b in cow_pairs])
+                    sp.fence(self.cache)
                 self.stats.cow_copies += len(cow_pairs)
         if not self.active:
             return {}
@@ -1007,9 +1147,12 @@ class ServeEngine:
 
         prev_cache = self.cache
         prev_keys = self.keys
-        nxt, new_cache, flag, nkeys = self._decode(
-            self.params, jnp.asarray(toks), prev_cache, pos,
-            jnp.asarray(mask), prev_keys, tables, f)
+        with self._tr.span("decode_step",
+                           {"tokens": len(self.active)}) as sp:
+            nxt, new_cache, flag, nkeys = self._decode(
+                self.params, jnp.asarray(toks), prev_cache, pos,
+                jnp.asarray(mask), prev_keys, tables, f)
+            sp.fence(nxt, flag)
         self.stats.steps += 1
         if self.pool is not None:
             # per-step occupancy samples: benchmarks report mean/median/
@@ -1018,19 +1161,27 @@ class ServeEngine:
             self.stats.observe_blocks_used(self.pool.blocks_used)
             self.stats.blocks_shared_peak = max(
                 self.stats.blocks_shared_peak, self.pool.blocks_shared)
-        if bool(flag):
+        with self._tr.span("abft_check", {"phase": "decode"}):
+            faulted = bool(flag)
+        if faulted:
             # ABFT detection -> recompute from pre-step state (clean run,
             # same per-slot keys: the retry resamples the same token)
             self.stats.faults_detected += 1
+            self._tr.instant("fault_detected", {"phase": "decode"})
             for _ in range(self.policy.max_retries):
                 self.stats.retries += 1
-                nxt, new_cache, flag, nkeys = self._decode(
-                    self.params, jnp.asarray(toks), prev_cache, pos,
-                    jnp.asarray(mask), prev_keys, tables, ModelFault.none())
+                with self._tr.span("abft_retry",
+                                   {"phase": "decode"}) as sp:
+                    nxt, new_cache, flag, nkeys = self._decode(
+                        self.params, jnp.asarray(toks), prev_cache, pos,
+                        jnp.asarray(mask), prev_keys, tables,
+                        ModelFault.none())
+                    sp.fence(nxt, flag)
                 if not bool(flag):
                     break
             if bool(flag):
                 self.stats.hard_faults += 1
+                self._tr.instant("hard_fault", {"phase": "decode"})
                 if not self.policy.evict_on_hard_fault:
                     raise RuntimeError("persistent fault after retry")
                 # the flag is step-global: every in-flight request may be
