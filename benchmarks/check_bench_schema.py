@@ -34,6 +34,9 @@ _CONDITIONAL = {
     "chunked_auto", "auto_budget", "auto_matches_dense",
     "auto_clears_cmr", "auto_tput_frac", "auto_modeled_tput_frac",
     "fixed_budget_sweep",
+    # the --mesh sharded sweep (null when the flag is not passed; its
+    # sub-tree keys all sit under "sharded" so one entry covers them)
+    "sharded",
 }
 
 
@@ -56,7 +59,10 @@ def check(new: dict, baseline: dict) -> list:
     missing = sorted(
         key_paths(baseline) - key_paths(new),
         key=lambda p: (len(p), p))
-    missing = [p for p in missing if not (set(p) & _CONDITIONAL)]
+    # children of selection.schemes are per-step selection COUNTS — which
+    # schemes appear depends on the traffic mix, not on the schema
+    missing = [p for p in missing
+               if not (set(p) & _CONDITIONAL) and "schemes" not in p[:-1]]
     for p in missing:
         errors.append(f"missing key path: {'.'.join(p)}")
 
@@ -93,6 +99,26 @@ def check(new: dict, baseline: dict) -> list:
                 f"{where}: auto budget's modeled throughput is "
                 f"{cell['auto_modeled_tput_frac']:.2f}x the best fixed "
                 "budget (acceptance: within 10%)")
+    for i, row in enumerate((new.get("sharded") or {}).get("rows", [])):
+        where = f"sharded.rows[{i}] (mesh={row.get('mesh')})"
+        if "skipped" in row:
+            continue
+        if row.get("matches_mesh1") is False:
+            errors.append(f"{where}: matches_mesh1 is False — greedy "
+                          "streams diverged across mesh widths")
+        if row.get("tokens_per_s", 1) <= 0:
+            errors.append(f"{where}: tokens_per_s <= 0")
+        if not row.get("shard_plan"):
+            errors.append(f"{where}: missing per-shard protection plan")
+        elif row.get("model_parallel") != row.get("mesh"):
+            errors.append(f"{where}: model_parallel "
+                          f"{row.get('model_parallel')} != mesh width")
+    sharded = new.get("sharded")
+    if sharded and len(sharded.get("widths", [])) > 1 and \
+            not sharded.get("layers_flipping_scheme"):
+        errors.append(
+            "sharded: no layer changes scheme across mesh widths — the "
+            "per-shard intensity-guided selection stopped diverging")
     if not new.get("cells"):
         errors.append("no cells in summary")
     return errors

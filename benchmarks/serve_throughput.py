@@ -42,6 +42,14 @@ Every cell reports the fixed occupancy accounting — ``utilization``
 against allocated tokens, ``fragmentation``, ``blocks_shared``,
 ``prefix_hit_rate`` — plus the ``rejections`` / ``evictions`` split.
 
+``--mesh 1,2,4`` adds a sharded sweep: bf16 params + paged KV sharded
+over a (data=1, model=N) device mesh per width, each engine compiling
+its protection plan from the POST-sharding per-device GEMM shapes
+(``SHARD_SWEEP_HW`` is crafted so the selector lands on different
+schemes per width).  Each row reports tokens/s, the per-shard scheme
+table, and ``matches_mesh1`` — greedy streams must stay byte-identical
+to the width-1 baseline.
+
   PYTHONPATH=src python benchmarks/serve_throughput.py \
       [--quick] [--out results.json] [--slots 2,4] [--new-tokens 8] \
       [--mixes uniform_short,long_prompt] [--chunk-tokens 16]
@@ -78,6 +86,17 @@ SCHEMES = {
         FixedPolicy(Scheme.GLOBAL), use_pallas=False),
     "intensity_guided": ABFTConfig(scheme=Scheme.AUTO, use_pallas=False),
 }
+
+# Hardware for the --mesh sweep's per-shard plans: CMR=24 sits between
+# the smoke model's full-width mlp/lm_head intensities (25.6/28.4) and
+# every 4-way shard's (<=21.3), and the slow-VPU/cheap-fixed-op balance
+# makes global ABFT's dispatch cost amortize only over the full-width
+# GEMMs — so the width sweep shows the selector flipping scheme per
+# shard (tests/test_sharded_engine.py asserts the same divergence)
+SHARD_SWEEP_HW = HardwareSpec(
+    name="shard-flip", peak_flops=2.4e13, vpu_flops=1e11, hbm_bw=1e12,
+    ici_bw=1e11, hbm_bytes=1 << 34, vmem_bytes=1 << 24,
+    fixed_op_overhead_s=1e-7)
 
 # Hardware for the chunked_auto cell's budget autotuning: a CMR the
 # benchmark's scaled step geometry (k=64, n=128, f32) can actually clear,
@@ -203,13 +222,14 @@ def _selection_summary(stats: EngineStats) -> dict:
 
 def run_cell(model, params, reqs, *, slots, max_len, abft, cache_kind,
              num_blocks=None, block_size=16,
-             prefix_sharing=False, chunk_tokens=None,
+             prefix_sharing=False, chunk_tokens=None, mesh=None,
+             dtype=jnp.float32,
              telemetry: EngineTelemetry | None = None) -> dict:
     eng = ServeEngine(
         model, params, slots=slots, max_len=max_len, abft=abft,
-        dtype=jnp.float32, cache_kind=cache_kind, block_size=block_size,
+        dtype=dtype, cache_kind=cache_kind, block_size=block_size,
         num_blocks=num_blocks, prefix_sharing=prefix_sharing,
-        chunk_tokens=chunk_tokens)
+        chunk_tokens=chunk_tokens, mesh=mesh)
     # warm-up pass: serve a throwaway copy of the same traffic so jit
     # compilation (which dominates cold wall time on CPU) is excluded
     # from the reported tokens/s; shapes repeat, so the timed run below
@@ -260,6 +280,15 @@ def run_cell(model, params, reqs, *, slots, max_len, abft, cache_kind,
         "selection": _selection_summary(eng.stats),
         "streams": {r.uid: r.generated for r in reqs},
     }
+    if mesh is not None:
+        # the per-shard protection plan: compiled from POST-sharding
+        # per-device GEMM shapes, so a width sweep shows the
+        # intensity-guided selection re-deciding as TP narrows the GEMMs
+        cell["model_parallel"] = eng.model_parallel
+        cell["shard_plan"] = [
+            {"layer": r["layer"], "scheme": r["scheme"],
+             "ai": r["ai"], "bound": r["bound"]}
+            for r in eng.plan.report_rows()]
     if chunk_tokens is not None:
         # the EFFECTIVE budget (chunk_tokens="auto" resolves it via the
         # plan's roofline autotuner and may re-tune mid-run) plus the
@@ -302,6 +331,16 @@ def main(argv=None) -> int:
     ap.add_argument("--mixes", default=None,
                     help="comma-separated subset of mixes to run "
                          f"(default all: {','.join(MIXES)})")
+    ap.add_argument("--mesh", default=None,
+                    help="comma-separated tensor-parallel widths (e.g. "
+                         "'1,2,4'): adds a sharded sweep — params + paged "
+                         "KV sharded over a (data=1, model=N) mesh, bf16, "
+                         "per-shard intensity-guided plans — reporting "
+                         "tokens/s, the per-shard scheme table, and "
+                         "stream equality vs the width-1 baseline (widths "
+                         "beyond the visible device count are skipped; "
+                         "use XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=8 on CPU)")
     ap.add_argument("--quick", action="store_true",
                     help="one slot count, two schemes")
     ap.add_argument("--out", default=None, help="write JSON here (else stdout)")
@@ -502,6 +541,70 @@ def main(argv=None) -> int:
                       f"match={row['paged_matches_dense']}"
                       + shared_note + chunk_note + auto_note)
 
+    sharded = None
+    if args.mesh:
+        widths = sorted({int(w) for w in str(args.mesh).split(",")})
+        ndev = len(jax.devices())
+        # bf16: per-device partial GEMMs accumulate in f32 and round
+        # below output precision, so streams stay byte-identical across
+        # widths (the equality verdict below is exact, not approximate)
+        params_b = model.init_params(jax.random.PRNGKey(0),
+                                     dtype=jnp.bfloat16)
+        abft = ABFTConfig(scheme=Scheme.AUTO, use_pallas=False,
+                          hardware=SHARD_SWEEP_HW)
+        reqs_proto, lens = _requests(MIXES["uniform_short"],
+                                     args.requests, args.max_len,
+                                     args.new_tokens)
+        nb = _pool_blocks(lens, slot_counts[0], args.new_tokens,
+                          args.block_size)
+        rows, base_streams = [], None
+        for w in widths:
+            if w > ndev:
+                rows.append({"mesh": w, "skipped":
+                             f"needs {w} devices, have {ndev}"})
+                print(f"mesh={w}: skipped ({w} > {ndev} devices)")
+                continue
+            cell = run_cell(
+                model, params_b,
+                [Request(uid=r.uid, prompt=r.prompt,
+                         max_new_tokens=r.max_new_tokens)
+                 for r in reqs_proto],
+                slots=slot_counts[0], max_len=args.max_len, abft=abft,
+                cache_kind="paged", block_size=args.block_size,
+                num_blocks=nb, mesh=w, dtype=jnp.bfloat16)
+            streams = cell.pop("streams")
+            if base_streams is None:
+                base_streams = streams
+            cell["mesh"] = w
+            cell["matches_mesh1"] = streams == base_streams
+            rows.append(cell)
+            schemes_now = collections.Counter(
+                e["scheme"] for e in cell["shard_plan"])
+            print(f"mesh={w} tok/s={cell['tokens_per_s']:8.1f} "
+                  f"matches_mesh1={cell['matches_mesh1']} "
+                  f"shard_schemes={dict(schemes_now)}")
+        # the engine rows above carry decode-shaped plans (m = slots,
+        # bandwidth-bound at smoke scale); the divergence the paper's
+        # selector exhibits lives at prefill-representative token counts,
+        # so also compile the per-width plans at n_tokens=64 — device-
+        # independent, covers skipped widths too
+        divergence = {}
+        for w in widths:
+            p = model.protection_plan(
+                hw=SHARD_SWEEP_HW, phase="serve", n_tokens=64,
+                dtype_bytes=2, model_parallel=w)
+            divergence[str(w)] = {
+                r["layer"]: r["scheme"] for r in p.report_rows()}
+        flipped = sorted(
+            layer for layer in divergence[str(widths[0])]
+            if len({d[layer] for d in divergence.values()}) > 1)
+        print(f"per-shard plan divergence (n_tokens=64): "
+              f"{flipped or 'none'}")
+        sharded = {"widths": widths, "devices": ndev,
+                   "hardware": SHARD_SWEEP_HW.name, "rows": rows,
+                   "plan_divergence": divergence,
+                   "layers_flipping_scheme": flipped}
+
     summary = {
         "arch": args.arch, "n_layers": args.n_layers,
         "max_len": args.max_len, "requests": args.requests,
@@ -510,6 +613,7 @@ def main(argv=None) -> int:
         "mixes": list(mixes),
         "backend": jax.default_backend(),
         "cells": cells,
+        "sharded": sharded,
     }
     payload = json.dumps(summary, indent=2)
     if args.out:

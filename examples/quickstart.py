@@ -108,12 +108,38 @@ print("   " + "\n   ".join(reg.render_prometheus().splitlines()[:4]))
 print(f"   trace events = {len(tracer.events)}, windowed detection "
       f"rate = {monitor.window_detection_rate:.3f}/step")
 
-# ---------------------------------------------------------------- 3. a model
+# ------------------------------------------- 2e. per-shard plans (mesh)
+# tensor parallelism divides each GEMM's N (column-parallel) or K
+# (row-parallel) by the mesh width, lowering every shard's arithmetic
+# intensity — so the same layer on the same hardware can land on a
+# DIFFERENT scheme once sharded.  Plan compilation is host-side: no
+# devices needed to see the divergence (serving over a real mesh is
+# ServeEngine(mesh=k); see README "Sharded serving").
 from repro.configs import get_config, scaled_down
+from repro.core.hardware import HardwareSpec
 from repro.models import LayerCtx, ModelFault, build_model
 
 cfg = scaled_down(get_config("llama3.2-1b"))
 model = build_model(cfg)
+shard_hw = HardwareSpec(        # CMR between full-width and 4-way-shard AI
+    name="shard-flip", peak_flops=2.4e13, vpu_flops=1e11, hbm_bw=1e12,
+    ici_bw=1e11, hbm_bytes=1 << 34, vmem_bytes=1 << 24,
+    fixed_op_overhead_s=1e-7)
+print("\n2e) per-shard protection plans (tensor parallel):")
+per_width = {}
+for tp in (1, 4):
+    p = model.protection_plan(hw=shard_hw, phase="serve", n_tokens=64,
+                              model_parallel=tp)
+    per_width[tp] = {r["layer"]: r for r in p.report_rows()}
+for layer, row in per_width[1].items():
+    r4 = per_width[4][layer]
+    mark = "  <- scheme flips" if row["scheme"] != r4["scheme"] else ""
+    print(f"   {layer:9s} TP=1 ai={row['ai']:5.1f} {row['scheme']:8s} | "
+          f"TP=4 ai={r4['ai']:5.1f} {r4['scheme']:8s}{mark}")
+assert any(per_width[1][la]["scheme"] != per_width[4][la]["scheme"]
+           for la in per_width[1])
+
+# ---------------------------------------------------------------- 3. a model
 params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)
 ctx = LayerCtx(abft=ABFTConfig.from_policy(IntensityGuidedPolicy(),
                                            use_pallas=False))

@@ -547,6 +547,11 @@ class ProtectionPlan:
     policy: ProtectionPolicy
     entries: tuple = ()
     step_shape: StepShape | None = None
+    # tensor-parallel width the entries were compiled for: a plan built
+    # with model_parallel=k describes ONE shard's post-sharding GEMMs
+    # (TP shrinks per-device (m,k,n), so intensity — and the selected
+    # scheme — legitimately differ between mesh widths)
+    model_parallel: int = 1
 
     def __post_init__(self):
         object.__setattr__(self, "_step_cache", {})
@@ -571,18 +576,33 @@ class ProtectionPlan:
     def for_model(cls, cfg, hw: HardwareSpec = DEFAULT,
                   policy: ProtectionPolicy | None = None, *,
                   phase: str = "prefill", n_tokens: int = 128,
-                  dtype_bytes: int = 2) -> "ProtectionPlan":
+                  dtype_bytes: int = 2,
+                  model_parallel: int = 1) -> "ProtectionPlan":
         """Compile a plan for a ModelConfig: per-GEMM-site descriptors
-        with the true first layer flagged from the model's layer plan."""
+        with the true first layer flagged from the model's layer plan.
+
+        ``model_parallel=k`` compiles the plan from one device's
+        POST-sharding GEMM shapes on a k-wide model axis
+        (``counting.shard_gemms``) — the per-shard plan the sharded
+        serving executor installs.  The step fast path shrinks with it:
+        the representative per-token projection is column-parallel, so
+        its n dim is d_ff/k per device."""
         from repro.models.counting import layer_specs
 
-        return cls.build(
-            layer_specs(cfg, n_tokens, dtype_bytes=dtype_bytes),
+        mp = max(1, int(model_parallel))
+        d_ff = cfg.d_ff or cfg.d_model
+        if mp > 1 and d_ff % mp == 0:
+            d_ff //= mp
+        plan = cls.build(
+            layer_specs(cfg, n_tokens, dtype_bytes=dtype_bytes,
+                        model_parallel=mp),
             hw=hw, policy=policy, model=cfg.name, phase=phase,
             step_shape=StepShape(
-                d_model=cfg.d_model, d_ff=cfg.d_ff or cfg.d_model,
-                dtype_bytes=dtype_bytes),
+                d_model=cfg.d_model, d_ff=d_ff, dtype_bytes=dtype_bytes),
         )
+        if mp != 1:
+            plan = dataclasses.replace(plan, model_parallel=mp)
+        return plan
 
     # ---------------------------------------------------------- lookups
     def scheme_for(self, layer_name: str) -> str:
@@ -715,6 +735,7 @@ class ProtectionPlan:
             "version": 1,
             "model": self.model,
             "phase": self.phase,
+            "model_parallel": self.model_parallel,
             "hardware": dataclasses.asdict(self.hardware),
             "policy": self.policy.to_json(),
             "step_shape": (dataclasses.asdict(self.step_shape)
@@ -761,4 +782,5 @@ class ProtectionPlan:
             entries=entries,
             step_shape=(StepShape(**d["step_shape"])
                         if d.get("step_shape") else None),
+            model_parallel=int(d.get("model_parallel", 1)),
         )

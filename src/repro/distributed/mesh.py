@@ -1,0 +1,83 @@
+"""Canonical mesh construction — THE one place (data, model) device
+meshes are built.
+
+Every driver that needs a mesh (serve, train dry-run, elastic re-mesh,
+benchmarks) routes through ``build_mesh``; ``launch/mesh.py`` keeps its
+historical entry points as thin wrappers.  Centralizing construction
+means the axis names, the device-count validation, and the
+devices→grid reshape cannot drift between drivers — the serving
+executor and the training dry-run agree on what ``("data", "model")``
+means by construction.
+
+Functions only (never module-level constants): importing this module
+must not touch jax device state, because drivers set ``XLA_FLAGS``
+before the first jax call.
+"""
+
+from __future__ import annotations
+
+import jax
+
+AXES = ("data", "model")
+POD_AXES = ("pod", "data", "model")
+
+
+def build_mesh(*, model: int = 1, data: int | None = None,
+               pod: int | None = None, devices=None):
+    """Build a (data, model) — or (pod, data, model) — mesh.
+
+    ``model``: tensor/expert-parallel width (the axis ABFT plans are
+    keyed on — TP changes per-device GEMM shapes and therefore scheme
+    selection).  ``data``: data-parallel width; ``None`` means "as many
+    replicas as the devices allow" (``n // model``).  ``devices``: an
+    explicit device list (elastic re-mesh after failures); ``None``
+    uses ``jax.devices()``.
+
+    Raises ``RuntimeError`` when the device set cannot host the
+    requested shape — never silently clamps ``model`` (a clamped model
+    axis would invalidate every parameter shard layout downstream).
+    """
+    devices = list(jax.devices()) if devices is None else list(devices)
+    n = len(devices)
+    if model < 1:
+        raise ValueError(f"model_parallel must be >= 1, got {model}")
+    if n < model:
+        raise RuntimeError(
+            f"not enough devices ({n}) for model_parallel={model}")
+    if data is None:
+        data = n // model
+    shape = (pod, data, model) if pod is not None else (data, model)
+    axes = POD_AXES if pod is not None else AXES
+    need = 1
+    for s in shape:
+        need *= s
+    if need > n:
+        raise RuntimeError(
+            f"mesh shape {shape} needs {need} devices, have {n}")
+    import numpy as np
+    from jax.sharding import Mesh
+
+    grid = np.array(devices[:need]).reshape(shape)
+    return Mesh(grid, axes)
+
+
+def make_hints(cfg, mesh):
+    """ShardingHints for a model on this mesh — the layer-level
+    ``with_sharding_constraint`` annotations (MoE dispatch buffers)
+    that GSPMD propagation needs help with.  Shared by the serving
+    executor and the training dry-run."""
+    from repro.distributed import sharding as shd
+    from repro.models.layers import ShardingHints
+
+    ba = shd.batch_axes(mesh)
+    dp_size = 1
+    for a in ba:
+        dp_size *= mesh.shape[a]
+    ep_fits = (cfg.n_experts % mesh.shape["model"] == 0) \
+        if cfg.n_experts else True
+    return ShardingHints(
+        dp=ba,
+        dp_size=dp_size,
+        ep=("model",),
+        moe_mode="ep" if ep_fits else "tp",
+    )

@@ -169,7 +169,7 @@ def batch_specs(cfg: ModelConfig, mesh: Mesh) -> dict:
 
 
 def cache_specs(cfg: ModelConfig, cache_shape, mesh: Mesh, batch: int,
-                kv_fallback: str = "headdim"):
+                kv_fallback: str = "headdim", paged: bool = False):
     """KV/state cache specs.  If the batch cannot cover the data axes
     (long-context B=1), shard the cache *sequence* dim over 'data' instead
     (context parallelism for decode).
@@ -178,7 +178,17 @@ def cache_specs(cfg: ModelConfig, cache_shape, mesh: Mesh, batch: int,
     axis: 'headdim' shards head_dim (baseline; forces per-layer cache
     resharding in decode attention), 'replicate' leaves the cache
     model-replicated so attention runs fully local per q-head shard with
-    one small all-reduce at the output projection (perf iteration A1)."""
+    one small all-reduce at the output projection (perf iteration A1).
+
+    ``paged=True`` maps the BLOCK-POOL layout (serve/paged_cache.py):
+    attention k/v pools are ``(num_blocks, block_size, KV, hd)`` — the
+    leading dims are pool geometry, not batch, so they stay replicated
+    and only the kv-head dim shards over 'model'.  Every device holds
+    its head-shard of EVERY block; the host block table stays one
+    logical table (replicated) indexing all of them — per-device KV
+    shards behind one logical table.  Per-slot state leaves (mamba
+    conv/ssm, MLA latent, cross KV) keep the dense rules: their leading
+    dim really is the slot/batch dim."""
     ba = batch_axes(mesh)
     dsize = 1
     for a in ba:
@@ -189,23 +199,29 @@ def cache_specs(cfg: ModelConfig, cache_shape, mesh: Mesh, batch: int,
 
     def one(path, leaf):
         ps = _path_str(path)
-        name = ps.split("/")[-1]
+        parts = ps.split("/")
+        name = parts[-1]
+        # pool leaves sit under an "attn" subtree; cross-attention KV
+        # (also named k/v) is per-slot and keeps the dense rules even
+        # on a paged engine
+        pooled = paged and "attn" in parts[:-1]
         nd = len(leaf.shape)
-        if name in ("k", "v"):          # (B, S, KV, hd)
+        if name in ("k", "v"):          # (B, S, KV, hd) | (NB, BS, KV, hd)
             kv = leaf.shape[-2]
+            kb, ks = (None, None) if pooled else (b_ax, s_ax)
             if kv % mesh.shape["model"] == 0:
-                core = P(b_ax, s_ax, "model", None)
+                core = P(kb, ks, "model", None)
             elif kv_fallback == "replicate":
-                core = P(b_ax, s_ax, None, None)
+                core = P(kb, ks, None, None)
             else:
-                core = P(b_ax, s_ax, None, "model")
-        elif name in ("c_kv", "k_pe", "latent"):  # (B, S, c)
-            core = P(b_ax, s_ax, None)
-        elif name == "conv_x":          # (B, W-1, d_in)
+                core = P(kb, ks, None, "model")
+        elif name in ("c_kv", "k_pe", "latent"):  # (B|NB, S|BS, c)
+            core = P(None, None, None) if pooled else P(b_ax, s_ax, None)
+        elif name == "conv_x":          # (B, W-1, d_in) — per-slot
             core = P(b_ax, None, "model")
         elif name == "conv_bc":
             core = P(b_ax, None, None)
-        elif name == "ssm":             # (B, H, P, N)
+        elif name == "ssm":             # (B, H, P, N) — per-slot
             core = P(b_ax, "model", None, None)
         else:
             return P(*([None] * nd))

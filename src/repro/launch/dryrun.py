@@ -33,9 +33,9 @@ from repro.core.policy import FixedPolicy, IntensityGuidedPolicy
 from repro.core.protected import ABFTConfig
 from repro.core.schemes import Scheme
 from repro.distributed import sharding as shd
+from repro.distributed.mesh import make_hints
 from repro.launch.mesh import make_production_mesh
 from repro.models import LayerCtx, build_model
-from repro.models.layers import ShardingHints
 from repro.models.counting import model_flops
 from repro.roofline.analysis import analyze_compiled
 from repro.train import OptConfig, TrainConfig, init_opt_state, make_train_step
@@ -85,19 +85,8 @@ def _moment_dtype(cfg) -> str:
     return "bfloat16" if count_params(cfg) >= 100e9 else "float32"
 
 
-def make_hints(cfg, mesh) -> ShardingHints:
-    ba = shd.batch_axes(mesh)
-    dp_size = 1
-    for a in ba:
-        dp_size *= mesh.shape[a]
-    ep_fits = (cfg.n_experts % mesh.shape["model"] == 0) \
-        if cfg.n_experts else True
-    return ShardingHints(
-        dp=ba,
-        dp_size=dp_size,
-        ep=("model",),
-        moe_mode="ep" if ep_fits else "tp",
-    )
+# make_hints moved to repro.distributed.mesh (shared with the serving
+# MeshExecutor); imported above for the cell builders below.
 
 
 def build_cell(arch: str, shape: str, mesh):

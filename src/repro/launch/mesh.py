@@ -1,39 +1,35 @@
-"""Production mesh construction.
+"""Historical mesh entry points — thin wrappers over the canonical
+constructor in ``repro.distributed.mesh`` (one helper shared by the
+serve, train-dryrun, and elastic drivers; see that module).
 
-Defined as FUNCTIONS (never module-level constants) so importing this module
-never touches jax device state — required because the dry-run sets
-XLA_FLAGS before any jax initialization.
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — required because the dry-run
+sets XLA_FLAGS before any jax initialization.
 """
 
 from __future__ import annotations
 
 import jax
 
+from repro.distributed.mesh import build_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """The production mesh: one pod = 16x16 (256 chips, v5e pod),
     multi-pod = 2 pods = 512 chips with a leading 'pod' DP axis."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    if multi_pod:
+        return build_mesh(pod=2, data=16, model=16)
+    return build_mesh(data=16, model=16)
 
 
 def make_host_mesh():
     """Single-process debug mesh over whatever devices exist (tests)."""
-    n = len(jax.devices())
-    return jax.make_mesh((1, n), ("data", "model"))
+    return build_mesh(data=1, model=len(jax.devices()))
 
 
 def make_mesh_from_devices(devices, *, model_parallel: int):
-    """Elastic variant: build a (data, model) mesh from a surviving device
-    list (runtime/elastic.py re-meshes after failures)."""
-    import numpy as np
-
-    n = len(devices)
-    mp = min(model_parallel, n)
-    dp = n // mp
-    usable = devices[: dp * mp]
-    arr = np.array(usable).reshape(dp, mp)
-    from jax.sharding import Mesh
-
-    return Mesh(arr, ("data", "model"))
+    """Elastic variant: build a (data, model) mesh from a surviving
+    device list (runtime/elastic.py re-meshes after failures).  Raises
+    when the survivors cannot host ``model_parallel`` — a silently
+    narrowed model axis would invalidate every parameter shard."""
+    return build_mesh(model=model_parallel, devices=devices)

@@ -30,6 +30,7 @@ from repro.core.protected import ABFTConfig
 from repro.core.schemes import Scheme
 from repro.models import ModelFault, build_model
 from repro.obs import ENGINE_COUNTERS, EngineTelemetry
+from repro.runtime.heartbeat import HeartbeatMonitor
 from repro.serve.engine import RecoveryPolicy, Request, ServeEngine
 
 
@@ -64,6 +65,13 @@ def main(argv=None) -> int:
     ap.add_argument("--prefix-sharing", action="store_true",
                     help="refcounted prefix sharing + copy-on-write "
                          "(paged cache, attention-only models)")
+    ap.add_argument("--mesh", type=int, default=None,
+                    help="tensor-parallel width: shard params + paged KV "
+                         "over a (data=1, model=N) device mesh and "
+                         "compile the protection plan from the "
+                         "POST-sharding per-device GEMM shapes (use "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=K to simulate devices on CPU)")
     ap.add_argument("--admit-lookahead", type=int, default=8,
                     help="bounded admission lookahead past a deferred "
                          "head request (HOL-blocking fix)")
@@ -123,7 +131,7 @@ def main(argv=None) -> int:
             trace_sink=sink)
     engine = ServeEngine(model, params, slots=args.slots,
                          max_len=args.max_len, abft=abft,
-                         dtype=jnp.float32, policy=policy,
+                         dtype=jnp.float32, policy=policy, mesh=args.mesh,
                          cache_kind=args.cache, block_size=args.block_size,
                          num_blocks=args.num_blocks,
                          prefix_sharing=args.prefix_sharing,
@@ -131,6 +139,16 @@ def main(argv=None) -> int:
                          chunk_tokens=args.chunk_tokens,
                          temperature=args.temperature, top_k=args.top_k,
                          seed=args.seed, telemetry=telemetry)
+    heartbeats = None
+    if engine.mesh is not None:
+        # liveness surface for the sharded fleet: one worker per mesh
+        # device, exported as worker_alive / staleness gauges on the
+        # telemetry registry (runtime/heartbeat.py) — a stalled shard
+        # shows up in the same metrics artifact as the engine counters
+        heartbeats = HeartbeatMonitor(
+            [str(d) for d in engine.mesh.devices.flat],
+            registry=telemetry.registry if telemetry is not None
+            else None)
     if args.plan_out:
         with open(args.plan_out, "w") as fh:
             fh.write(engine.plan.to_json())
@@ -153,6 +171,12 @@ def main(argv=None) -> int:
     t0 = time.perf_counter()
     results = engine.run(reqs, fault_at=fault_at)
     dt = time.perf_counter() - t0
+    if heartbeats is not None:
+        # the in-process shards all progressed iff run() returned: beat
+        # every worker once, then publish staleness as of completion
+        for w in list(heartbeats.workers):
+            heartbeats.beat(w)
+        assert not heartbeats.check()
     if telemetry is not None:
         # TTFT/ITL histograms: the driver owns arrival time, so the
         # per-token engine stamps become latency observations here
@@ -177,6 +201,11 @@ def main(argv=None) -> int:
         "decode_only_steps": engine.stats.decode_only_steps,
         "chunk_tokens": engine.chunk_tokens,
         "chunk_budget_retunes": engine.stats.chunk_budget_retunes,
+        "model_parallel": engine.model_parallel,
+        "shard_plan": ([{"layer": r["layer"], "scheme": r["scheme"],
+                         "ai": r["ai"], "bound": r["bound"]}
+                        for r in engine.plan.report_rows()]
+                       if engine.mesh is not None else None),
         "errors": {r.uid: r.error for r in reqs if r.error},
         "cache": engine.cache_stats(),
         "telemetry": (telemetry.faults.snapshot()

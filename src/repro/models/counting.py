@@ -7,9 +7,64 @@ and (iii) the intensity-guided selection report.
 
 from __future__ import annotations
 
+import dataclasses
+
 from repro.configs.base import ModelConfig
 from repro.core.intensity import GemmDims
 from repro.models.model import layer_tags
+
+# Which GEMM dim tensor parallelism shards at each plan site, mirroring
+# the parameter PartitionSpecs in distributed/sharding.py._param_rule:
+# "n" = column-parallel (output dim over 'model': wq/wk/wv, up/gate,
+# lm_head, ...), "k" = row-parallel (contraction dim over 'model': wo,
+# down, ssm out_proj, ...).  Sites absent here are replicated (mla.q_a /
+# kv_a low-rank projections, ssm.in_bc, moe.router, vision.proj) and
+# keep their full dims on every shard.
+_TP_SHARD_DIM = {
+    "attn.q": "n", "attn.k": "n", "attn.v": "n", "attn.o": "k",
+    "mla.q_b": "n", "mla.out": "k",
+    "ssm.in_z": "n", "ssm.in_x": "n", "ssm.in_dt": "n", "ssm.out": "k",
+    "mlp.up": "n", "mlp.down": "k",
+    "moe.shared_up": "n", "moe.shared_down": "k",
+    "cross.q": "n", "cross.k": "n", "cross.v": "n", "cross.o": "k",
+    "enc.attn.q": "n", "enc.attn.k": "n", "enc.attn.v": "n",
+    "enc.attn.o": "k",
+    "enc.mlp.up": "n", "enc.mlp.down": "k",
+    "lm_head": "n",
+}
+
+
+def shard_gemms(sites: dict, cfg: ModelConfig, model_parallel: int) -> dict:
+    """Per-DEVICE GEMM dims under ``model_parallel``-way tensor/expert
+    parallelism — the post-sharding shapes a ProtectionPlan must be
+    compiled from, because TP shrinks each device's (m,k,n) and with it
+    the arithmetic intensity the scheme selection keys on (the paper's
+    selection boundary moves with mesh width).
+
+    Mirrors ``distributed/sharding.py`` exactly: a dim is divided only
+    when the axis divides it (``sanitize_spec`` drops the sharding
+    otherwise, so the per-device GEMM stays full); experts shard over
+    the model axis when the expert count divides it (EP — per-device
+    *count* shrinks, per-expert dims do not), falling back to TP on the
+    expert FFN dim when it does not (qwen2-moe's 60 experts)."""
+    tp = int(model_parallel)
+    if tp <= 1:
+        return sites
+    ep_fits = cfg.n_experts % tp == 0 if cfg.n_experts else True
+    out = {}
+    for name, (d, count) in sites.items():
+        dim = _TP_SHARD_DIM.get(name)
+        if name in ("moe.expert_up", "moe.expert_down"):
+            if ep_fits:
+                count = max(1, count // tp)
+            else:
+                dim = "n" if name.endswith("up") else "k"
+        if dim == "n" and d.n % tp == 0 and d.n >= tp:
+            d = dataclasses.replace(d, n=d.n // tp)
+        elif dim == "k" and d.k % tp == 0 and d.k >= tp:
+            d = dataclasses.replace(d, k=d.k // tp)
+        out[name] = (d, count)
+    return out
 
 
 def _attn_params(cfg: ModelConfig) -> int:
@@ -105,11 +160,12 @@ def model_flops(cfg: ModelConfig, n_tokens: int, training: bool) -> float:
 
 def layer_gemms(
     cfg: ModelConfig, n_tokens: int, phase: str = "prefill",
-    dtype_bytes: int = 2,
+    dtype_bytes: int = 2, model_parallel: int = 1,
 ) -> dict:
     """Per-GEMM-site dims for one representative layer of each kind plus the
     head, scaled by site multiplicity.  ``n_tokens`` is the GEMM M dim
-    (batch*seq for full passes; batch for decode)."""
+    (batch*seq for full passes; batch for decode).  ``model_parallel > 1``
+    returns each DEVICE's post-sharding dims (``shard_gemms``)."""
     hd = cfg.resolved_head_dim
     sites: dict = {}
     m = n_tokens
@@ -186,12 +242,12 @@ def layer_gemms(
     if cfg.vision_dim:
         sites["vision.proj"] = (g(cfg.vision_dim, cfg.d_model), 1)
     sites["lm_head"] = (g(cfg.d_model, cfg.vocab_size), 1)
-    return sites
+    return shard_gemms(sites, cfg, model_parallel)
 
 
 def layer_specs(
     cfg: ModelConfig, n_tokens: int, phase: str = "prefill",
-    dtype_bytes: int = 2,
+    dtype_bytes: int = 2, model_parallel: int = 1,
 ) -> list:
     """Plan-ready layer descriptors (``policy.LayerSpec``) for one
     representative layer of each kind plus the head.
@@ -204,7 +260,8 @@ def layer_specs(
     ``ssm.in_z``, never ``attn.q``."""
     from repro.core.policy import LayerSpec
 
-    sites = layer_gemms(cfg, n_tokens, phase, dtype_bytes)
+    sites = layer_gemms(cfg, n_tokens, phase, dtype_bytes,
+                        model_parallel=model_parallel)
     first_mixer = layer_tags(cfg)[0].split(":")[0]
     first_site = {
         "attn": "attn.q", "mla": "mla.q_a", "mamba": "ssm.in_z",

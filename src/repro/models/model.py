@@ -609,18 +609,21 @@ class Model:
 
     def protection_plan(self, hw=None, policy=None, *,
                         phase: str = "serve", n_tokens: int = 1,
-                        dtype_bytes: int = 2):
+                        dtype_bytes: int = 2, model_parallel: int = 1):
         """Compile this model's ProtectionPlan (core/policy.py): per-site
         intensity-guided selections with the explicit first-layer flag,
         plus the serving fast paths (``for_step``, ``tune_chunk_budget``)
         the engine consults.  ``n_tokens`` sets the representative GEMM M
-        dim (batch*seq for full passes; batch/slots for decode)."""
+        dim (batch*seq for full passes; batch/slots for decode);
+        ``model_parallel=k`` compiles one shard's post-sharding shapes
+        (the per-device plan on a k-wide model axis)."""
         from repro.core.hardware import DEFAULT
         from repro.core.policy import ProtectionPlan
 
         return ProtectionPlan.for_model(
             self.cfg, hw=hw or DEFAULT, policy=policy, phase=phase,
-            n_tokens=n_tokens, dtype_bytes=dtype_bytes)
+            n_tokens=n_tokens, dtype_bytes=dtype_bytes,
+            model_parallel=model_parallel)
 
     def audit_coverage(self, phase: str = "mixed", **kw):
         """Static protection-coverage audit (repro.analysis): trace this

@@ -39,10 +39,14 @@ def plan_remesh(n_devices: int, model_parallel: int,
                 min_data: int = 1) -> MeshPlan:
     """Largest (data, model) mesh from ``n_devices`` keeping the
     model-parallel width fixed (param shard layout stays valid)."""
+    if model_parallel < 1:
+        raise ValueError(
+            f"model_parallel must be >= 1, got {model_parallel} — a "
+            f"degenerate mesh would invalidate every parameter shard")
     if n_devices < model_parallel * min_data:
         raise RuntimeError(
             f"not enough devices ({n_devices}) for model_parallel="
-            f"{model_parallel}")
+            f"{model_parallel} (min_data={min_data})")
     data = n_devices // model_parallel
     used = data * model_parallel
     return MeshPlan(
@@ -84,6 +88,15 @@ class ElasticState:
                     self.active.append(self.spares.pop())
             else:
                 break
+        if len(self.active) < self.model_parallel:
+            # even one model-parallel group is unreachable: surface the
+            # fleet state instead of planning a degenerate mesh (data=0)
+            # the caller would only discover at reshard time
+            raise RuntimeError(
+                f"cannot re-mesh: {len(self.active)} surviving workers "
+                f"(+{len(self.spares)} spares) cannot fill one "
+                f"model_parallel={self.model_parallel} group after "
+                f"losing {len(dead)} worker(s)")
         return plan_remesh(len(self.active), self.model_parallel)
 
     def on_straggler(self, worker) -> MeshPlan:

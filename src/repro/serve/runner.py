@@ -1,0 +1,125 @@
+"""Model-runner layer of the serving engine (executor-hierarchy
+refactor).
+
+One ``ModelRunner`` owns the four jitted device entry points the
+engine drives — ``decode``, ``prefill``, ``prefill_prefix``,
+``prefill_chunk`` — plus the slot-masked sampler they share.  The
+runner is pure device-side glue: it holds no request state, no slot
+table, and no cache (the executor owns params/cache/keys; the
+scheduler owns the host bookkeeping).  Under a ``MeshExecutor`` the
+SAME jitted functions run SPMD: the committed shardings of the params
+and cache arguments drive GSPMD propagation, so the runner needs no
+mesh awareness at all — that is the point of the layering.
+
+Sampling contract (unchanged from the monolith): greedy argmax keeps
+the jitted graph key-free; with ``temperature > 0`` each slot owns an
+independent PRNG key stream advanced only on *accepted* steps, so a
+fault retry resamples the same token and inactive slots never consume
+entropy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import LayerCtx
+from repro.models.model import Model
+
+
+class ModelRunner:
+    """Jitted prefill/decode entry points for one model + layer context.
+
+    Attributes ``decode`` / ``prefill`` / ``prefill_prefix`` /
+    ``prefill_chunk`` are the compiled callables; their signatures are
+    exactly the old engine closures' (params first, fault last)."""
+
+    def __init__(self, model: Model, ctx: LayerCtx, *,
+                 temperature: float = 0.0, top_k: int = 0):
+        self.model = model
+        self.ctx = ctx
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+
+        def _advance(keys):
+            """Split each slot key into (sample, next) — a no-op pair in
+            greedy mode so the jitted graph stays key-free."""
+            if self.temperature <= 0.0:
+                return keys, keys
+            ks = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+            return ks[:, 0], ks[:, 1]
+
+        def _sample(logits, keys):
+            """logits: (n, V) -> (n,) int32 token ids."""
+            if self.temperature <= 0.0:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            lg = logits.astype(jnp.float32) / self.temperature
+            if self.top_k > 0:
+                # clamp to the vocab: an oversized --top-k is "no cutoff",
+                # not a crash inside the jitted step
+                k = min(self.top_k, lg.shape[-1])
+                kth = jax.lax.top_k(lg, k)[0][..., -1:]
+                lg = jnp.where(lg < kth, jnp.float32(-1e30), lg)
+            return jax.vmap(jax.random.categorical)(keys, lg).astype(
+                jnp.int32)
+
+        def _decode_step(p, tok, cache, pos, mask, keys, tables, fault):
+            logits, new_cache, flag = model.decode(
+                p, tok, cache, pos,
+                dataclasses.replace(self.ctx, fault=fault),
+                block_tables=tables)
+            sub, nkeys = _advance(keys)
+            nxt = _sample(logits[:, 0, :], sub)
+            # slot-masked sampling: inactive slots never emit a token,
+            # and their key streams stay untouched — a slot's sampling
+            # sequence depends only on its own accepted steps, never on
+            # unrelated engine activity
+            nxt = jnp.where(mask, nxt, jnp.int32(-1))
+            nkeys = jnp.where(mask[:, None], nkeys, keys)
+            return nxt, new_cache, flag, nkeys
+
+        def _prefill_step(p, toks, cache, slot_ids, lengths, keys, tables,
+                          fault):
+            logits, new_cache, flag = model.prefill(
+                p, {"tokens": toks}, cache,
+                dataclasses.replace(self.ctx, fault=fault),
+                slots=slot_ids, lengths=lengths, block_tables=tables)
+            sub, nkeys = _advance(keys)
+            first = _sample(logits[:, 0, :], sub)
+            return first, new_cache, flag, nkeys
+
+        def _prefill_prefix_step(p, toks, cache, slot_ids, lengths, keys,
+                                 tables, prefix_lens, fault):
+            logits, new_cache, flag = model.prefill(
+                p, {"tokens": toks}, cache,
+                dataclasses.replace(self.ctx, fault=fault),
+                slots=slot_ids, lengths=lengths, block_tables=tables,
+                prefix_lens=prefix_lens)
+            sub, nkeys = _advance(keys)
+            first = _sample(logits[:, 0, :], sub)
+            return first, new_cache, flag, nkeys
+
+        def _prefill_chunk_step(p, toks, cache, slot_ids, lengths, keys,
+                                tables, starts, final_mask, fault):
+            """One co-scheduled prefill chunk: rows are mid-prompt chunks
+            whose logical positions begin at ``starts``.  Only rows whose
+            chunk COMPLETES the prompt (``final_mask``) emit their first
+            sampled token and advance their key stream — so a prompt's
+            sampling sequence is identical however it was chunked."""
+            logits, new_cache, flag = model.prefill(
+                p, {"tokens": toks}, cache,
+                dataclasses.replace(self.ctx, fault=fault),
+                slots=slot_ids, lengths=lengths, block_tables=tables,
+                prefix_lens=starts)
+            sub, nkeys = _advance(keys)
+            first = _sample(logits[:, 0, :], sub)
+            first = jnp.where(final_mask, first, jnp.int32(-1))
+            nkeys = jnp.where(final_mask[:, None], nkeys, keys)
+            return first, new_cache, flag, nkeys
+
+        self.decode = jax.jit(_decode_step)
+        self.prefill = jax.jit(_prefill_step)
+        self.prefill_prefix = jax.jit(_prefill_prefix_step)
+        self.prefill_chunk = jax.jit(_prefill_chunk_step)

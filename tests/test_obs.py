@@ -418,7 +418,8 @@ class TestEngineTelemetry:
         for f in flips:
             assert f["ph"] == "i"
             assert set(f["args"]) == {"intensity", "scheme", "decode",
-                                      "prefill"}
+                                      "prefill", "model_parallel"}
+            assert f["args"]["model_parallel"] == 1
             assert f["args"]["scheme"] in (Scheme.GLOBAL.value,
                                            Scheme.BLOCK_1S.value)
         assert {f["args"]["scheme"] for f in flips} == \
