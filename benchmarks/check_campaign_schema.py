@@ -1,0 +1,178 @@
+"""Schema + invariant gate for the fault-campaign benchmark JSON.
+
+CI runs ``benchmarks/fault_campaign.py`` and then this script: a fresh
+summary must contain every key path the committed baseline
+(``BENCH_faults.json``) contains, and the campaign acceptance criteria
+must hold cell by cell:
+
+* **replay determinism** — every cell's ``replay_identical`` verdict is
+  True (same seed -> same injection schedule -> same per-fault
+  classification -> same streams);
+* **no-regression with the fault model disabled** — every cell's
+  ``disabled_matches_clean`` verdict is True;
+* **zero SDCs under protection** — cells whose scheme protects
+  (``traditional`` / ``intensity_guided`` / ``adaptive``) report
+  ``sdc_faults == 0`` and full detection ``coverage`` (1.0 over the
+  effective, non-masked injections) whenever any fault landed;
+* **the harness sees real SDCs** — the unprotected ``none`` control
+  cells report ``sdc_faults > 0`` (otherwise the shadow-stream
+  classifier went blind, and the zero-SDC verdicts above are vacuous);
+* **adaptive escalation** — every ``adaptive`` cell escalated at least
+  once under the elevated injected rate, with a non-empty
+  ``escalation_trace`` of ``protection_escalation`` instants carrying
+  rate evidence, and the ``adaptive_quiet`` block proves the quiet
+  regime matches the base intensity-guided engine (byte-identical
+  streams, identical plan rows, zero escalations).
+
+Cell coverage may differ (the CI smoke job runs ``--quick``, a subset);
+the gate compares per-cell structure and per-cell invariants, not which
+cells exist — but at least one protected cell must be present, and the
+``none`` control is required only when present in the run.
+
+  PYTHONPATH=src python benchmarks/check_campaign_schema.py new.json \
+      [baseline.json]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+PROTECTED_SCHEMES = ("traditional", "intensity_guided", "adaptive")
+
+REQUIRED_CELL_KEYS = (
+    "scheme", "kind", "rate", "seed", "faults_injected",
+    "faults_corrected", "faults_uncorrected", "sdc_faults",
+    "masked_faults", "coverage", "sdc_rate", "overhead",
+    "replay_identical", "disabled_matches_clean",
+    "protection_level_final", "protection_escalations",
+    "escalation_trace", "schedule", "injection_log",
+)
+
+
+def key_paths(node, prefix=()) -> set:
+    """All dict key paths in a JSON tree; list elements merge under one
+    wildcard step so cell counts don't matter."""
+    paths = set()
+    if isinstance(node, dict):
+        for k, v in node.items():
+            paths.add(prefix + (k,))
+            paths |= key_paths(v, prefix + (k,))
+    elif isinstance(node, list):
+        for item in node:
+            paths |= key_paths(item, prefix + ("[]",))
+    return paths
+
+
+def check_cell(cell: dict, where: str) -> list:
+    errors = []
+    for k in REQUIRED_CELL_KEYS:
+        if k not in cell:
+            errors.append(f"{where}: missing key {k}")
+    scheme = cell.get("scheme")
+    injected = cell.get("faults_injected", 0)
+    if cell.get("replay_identical") is not True:
+        errors.append(f"{where}: replay_identical is not True — the "
+                      "seeded campaign stopped replaying bit-identically")
+    if cell.get("disabled_matches_clean") is not True:
+        errors.append(f"{where}: disabled_matches_clean is not True — "
+                      "attaching a silent fault model changed the "
+                      "greedy streams")
+    if scheme in PROTECTED_SCHEMES:
+        if cell.get("sdc_faults", 1) != 0:
+            errors.append(f"{where}: {cell.get('sdc_faults')} SDCs "
+                          "under protection (must be zero)")
+        if injected and cell.get("coverage") != 1.0:
+            errors.append(f"{where}: detection coverage "
+                          f"{cell.get('coverage')} != 1.0 under "
+                          "protection")
+    elif scheme == "none":
+        if injected and cell.get("sdc_faults", 0) <= 0:
+            errors.append(f"{where}: unprotected control saw no SDCs — "
+                          "the shadow-stream classifier went blind")
+    if scheme == "adaptive":
+        if injected and cell.get("protection_escalations", 0) < 1:
+            errors.append(f"{where}: adaptive cell never escalated "
+                          "under the elevated injected rate")
+        if injected and not cell.get("escalation_trace"):
+            errors.append(f"{where}: adaptive cell has no "
+                          "protection_escalation instants")
+        for ev in cell.get("escalation_trace", []):
+            if "level" not in ev or "direction" not in ev:
+                errors.append(f"{where}: escalation instant lacks "
+                              "level/direction evidence")
+    # classification must partition the injections
+    parts = (cell.get("faults_corrected", 0)
+             + cell.get("faults_uncorrected", 0)
+             + cell.get("sdc_faults", 0) + cell.get("masked_faults", 0))
+    if parts > injected:
+        errors.append(f"{where}: classification counts ({parts}) exceed "
+                      f"faults_injected ({injected})")
+    if len(cell.get("schedule", ())) != injected:
+        errors.append(f"{where}: schedule length "
+                      f"{len(cell.get('schedule', ()))} != "
+                      f"faults_injected {injected}")
+    return errors
+
+
+def check(new: dict, baseline: dict) -> list:
+    errors = []
+    missing = sorted(key_paths(baseline) - key_paths(new),
+                     key=lambda p: (len(p), p))
+    # per-fault dict contents under these vary with which faults fired
+    # (e.g. a quick run with no adaptive de-escalation, or no sticky
+    # permanents) — their sub-keys are not a schema regression
+    _VARIABLE = ("schedule", "injection_log", "escalation_trace")
+    missing = [p for p in missing if not (set(p) & set(_VARIABLE))]
+    for p in missing:
+        errors.append(f"missing key path: {'.'.join(p)}")
+
+    cells = new.get("cells", [])
+    if not cells:
+        errors.append("no cells in summary")
+    for i, cell in enumerate(cells):
+        where = f"cells[{i}] ({cell.get('scheme')}/{cell.get('kind')})"
+        errors += check_cell(cell, where)
+    if not any(c.get("scheme") in PROTECTED_SCHEMES for c in cells):
+        errors.append("no protected-scheme cell in the run — the "
+                      "zero-SDC criterion was never exercised")
+
+    quiet = new.get("adaptive_quiet")
+    if not isinstance(quiet, dict):
+        errors.append("missing adaptive_quiet block")
+    else:
+        if quiet.get("streams_match") is not True:
+            errors.append("adaptive_quiet: streams diverged from the "
+                          "base intensity-guided engine")
+        if quiet.get("plan_rows_match") is not True:
+            errors.append("adaptive_quiet: per-layer plan rows diverged "
+                          "from the base policy")
+        if quiet.get("escalations", 1) != 0:
+            errors.append("adaptive_quiet: the adaptive policy escalated "
+                          "with no faults injected (flapping)")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    if not argv:
+        print(__doc__)
+        return 2
+    new_path = argv[0]
+    base_path = argv[1] if len(argv) > 1 else "BENCH_faults.json"
+    with open(new_path) as fh:
+        new = json.load(fh)
+    with open(base_path) as fh:
+        baseline = json.load(fh)
+    errors = check(new, baseline)
+    if errors:
+        for e in errors:
+            print(f"CAMPAIGN SCHEMA: {e}")
+        return 1
+    print(f"campaign schema OK: {new_path} covers {base_path} "
+          f"({len(new['cells'])} cells)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,313 @@
+"""Fault-campaign sweep: continuous seeded injection over the serving
+engine, per-fault classification, and the error-rate-adaptive policy
+under a sustained elevated error environment (ROADMAP items 5b/5c).
+
+Each cell runs one {scheme x fault-class x rate} combination end to end:
+
+1. a **clean** run (no fault model) — the greedy reference streams and
+   the wall-clock baseline for the overhead ratio;
+2. the **campaign** run — a seeded ``FaultModel`` injects Bernoulli
+   transient or sticky permanent faults every step, and the engine's
+   shadow-stream harness classifies every injection as corrected /
+   uncorrected / SDC / masked;
+3. a **replay** run — a fresh ``FaultModel`` with the same seed must
+   reproduce the identical injection schedule, per-fault classification,
+   and output streams (the bit-identical-replay acceptance criterion);
+4. a **disabled** run — ``FaultModel(transient_rate=0)`` attached: the
+   streams must stay byte-identical to the clean reference (the
+   fault-model-off no-regression criterion).
+
+Reported per cell: detection ``coverage`` ((corrected + uncorrected) /
+effective injections, where ``masked`` faults — physical no-ops whose
+shadow state matches bit-for-bit — are excluded), ``sdc_rate``,
+``overhead`` (campaign wall / clean wall, the detect+recompute cost
+under load), and for the ``adaptive`` cells the escalation trace
+(``protection_escalation`` instants with their rate evidence).
+
+The ``adaptive`` scheme also runs a **quiet-regime** check: with the
+fault model disabled the adaptive engine's streams and per-layer plan
+must match the base intensity-guided engine exactly (no phantom
+escalations, identical per-step scheme choices).
+
+Schema + invariants are gated in CI by
+``benchmarks/check_campaign_schema.py`` against the committed
+``BENCH_faults.json``.
+
+  PYTHONPATH=src python benchmarks/fault_campaign.py \
+      [--quick] [--out BENCH_faults.json] [--seed 0] \
+      [--rates 0.3,0.15] [--requests 6] [--new-tokens 6]
+
+Wall-clock numbers are CPU-measured (this container); the overhead
+ratio orders recovery cost, not TPU speed — see benchmarks/common.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, scaled_down
+from repro.core import (
+    ABFTConfig,
+    ErrorAdaptivePolicy,
+    FaultModel,
+    FixedPolicy,
+    IntensityGuidedPolicy,
+    Scheme,
+)
+from repro.models import build_model
+from repro.obs import EngineTelemetry
+from repro.serve.engine import Request, ServeEngine
+
+# scheme column: none (unprotected control — the harness must SEE its
+# SDCs), traditional global-everywhere, the paper's intensity-guided
+# selector, and the adaptive wrapper that escalates under observed rate
+SCHEMES = ("none", "traditional", "intensity_guided", "adaptive")
+
+# fault classes: one-step transients vs sticky permanents (the arxiv
+# 2205.12177 class a one-shot fault_at never exercises)
+FAULT_KINDS = ("transient", "permanent")
+
+
+def _abft(scheme: str, *, threshold: float = 0.05) -> ABFTConfig:
+    if scheme == "none":
+        return ABFTConfig.off()
+    if scheme == "traditional":
+        return ABFTConfig.from_policy(FixedPolicy(Scheme.GLOBAL),
+                                      use_pallas=False)
+    if scheme == "intensity_guided":
+        return ABFTConfig.from_policy(IntensityGuidedPolicy(),
+                                      use_pallas=False)
+    if scheme == "adaptive":
+        return ABFTConfig.from_policy(
+            ErrorAdaptivePolicy(IntensityGuidedPolicy(),
+                                detection_threshold=threshold,
+                                deescalate_after=4),
+            use_pallas=False)
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+def _requests(n: int, new_tokens: int, vocab: int) -> list:
+    rng = np.random.default_rng(0)
+    return [
+        Request(uid=i,
+                prompt=rng.integers(
+                    1, vocab, size=int(rng.integers(4, 12))).astype(
+                    np.int32),
+                max_new_tokens=new_tokens)
+        for i in range(n)
+    ]
+
+
+def _fault_model(kind: str, rate: float, *, seed: int,
+                 layers: int) -> FaultModel:
+    # magnitude 1e4 keeps every landing fault far above the checksum
+    # tolerance: protected cells must detect with certainty, unprotected
+    # cells must visibly corrupt tokens — the benchmark's verdicts are
+    # then deterministic functions of the seed
+    return FaultModel(
+        transient_rate=rate if kind == "transient" else 0.0,
+        permanent_rate=rate if kind == "permanent" else 0.0,
+        permanent_duration=4, seed=seed, layers=layers,
+        dtype=jnp.float32, magnitude=1e4)
+
+
+def _engine(model, params, *, slots, max_len, abft, fault_model=None,
+            telemetry=None) -> ServeEngine:
+    return ServeEngine(model, params, slots=slots, max_len=max_len,
+                       abft=abft, dtype=jnp.float32,
+                       fault_model=fault_model, telemetry=telemetry)
+
+
+def _classification(stats) -> dict:
+    return {
+        "faults_injected": stats.faults_injected,
+        "faults_corrected": stats.faults_corrected,
+        "faults_uncorrected": stats.faults_uncorrected,
+        "sdc_faults": stats.sdc_faults,
+        "masked_faults": stats.masked_faults,
+    }
+
+
+def run_cell(model, params, cfg, *, scheme: str, kind: str, rate: float,
+             seed: int, slots: int, max_len: int, requests: int,
+             new_tokens: int, threshold: float) -> dict:
+    def mk_reqs():
+        return _requests(requests, new_tokens, cfg.vocab_size)
+    abft = _abft(scheme, threshold=threshold)
+
+    # 1. clean reference (also the jit warm-up for the timed runs)
+    eng_clean = _engine(model, params, slots=slots, max_len=max_len,
+                        abft=abft)
+    t0 = time.perf_counter()
+    clean = eng_clean.run(mk_reqs())
+    clean_wall = time.perf_counter() - t0
+
+    # 2. campaign run (traced telemetry captures escalation instants)
+    fm = _fault_model(kind, rate, seed=seed, layers=cfg.n_layers)
+    tel = EngineTelemetry(trace=True, trace_max_events=5000)
+    eng = _engine(model, params, slots=slots, max_len=max_len, abft=abft,
+                  fault_model=fm, telemetry=tel)
+    t0 = time.perf_counter()
+    campaign = eng.run(mk_reqs())
+    campaign_wall = time.perf_counter() - t0
+    stats = eng.stats
+    cls = _classification(stats)
+    effective = cls["faults_injected"] - cls["masked_faults"]
+    detected = cls["faults_corrected"] + cls["faults_uncorrected"]
+    escalations = [
+        dict(e["args"]) for e in tel.tracer.events
+        if e.get("name") == "protection_escalation"]
+
+    # 3. bit-identical replay from the same seed
+    fm2 = _fault_model(kind, rate, seed=seed, layers=cfg.n_layers)
+    eng2 = _engine(model, params, slots=slots, max_len=max_len,
+                   abft=abft, fault_model=fm2)
+    replay = eng2.run(mk_reqs())
+    replay_identical = (
+        fm.schedule == fm2.schedule
+        and stats.injection_log == eng2.stats.injection_log
+        and campaign == replay)
+
+    # 4. fault model attached but silent: streams must equal clean
+    fm_off = FaultModel(transient_rate=0.0, seed=seed)
+    eng_off = _engine(model, params, slots=slots, max_len=max_len,
+                      abft=abft, fault_model=fm_off)
+    disabled_matches_clean = (eng_off.run(mk_reqs()) == clean
+                              and eng_off.stats.faults_injected == 0)
+
+    cell = {
+        "scheme": scheme, "kind": kind, "rate": rate, "seed": seed,
+        **cls,
+        "hard_faults": stats.hard_faults,
+        "evictions": stats.evictions,
+        "coverage": (detected / effective) if effective else 1.0,
+        "sdc_rate": (cls["sdc_faults"] / cls["faults_injected"]
+                     if cls["faults_injected"] else 0.0),
+        "overhead": campaign_wall / max(clean_wall, 1e-9),
+        "clean_wall_s": clean_wall,
+        "campaign_wall_s": campaign_wall,
+        "streams_match_clean": campaign == clean,
+        "replay_identical": replay_identical,
+        "disabled_matches_clean": disabled_matches_clean,
+        "protection_level_final": eng.protection_level,
+        "protection_escalations": stats.protection_escalations,
+        "protection_deescalations": stats.protection_deescalations,
+        "escalation_trace": escalations,
+        "schedule": fm.schedule,
+        "injection_log": list(stats.injection_log),
+    }
+    return cell
+
+
+def adaptive_quiet_check(model, params, cfg, *, slots, max_len,
+                         requests, new_tokens, threshold) -> dict:
+    """Quiet regime: the adaptive engine (fault model attached, rate 0)
+    must match the base intensity-guided engine byte-for-byte — same
+    streams, same per-layer plan rows, zero escalations."""
+    def mk_reqs():
+        return _requests(requests, new_tokens, cfg.vocab_size)
+    base = _engine(model, params, slots=slots, max_len=max_len,
+                   abft=_abft("intensity_guided"))
+    base_out = base.run(mk_reqs())
+    ada = _engine(model, params, slots=slots, max_len=max_len,
+                  abft=_abft("adaptive", threshold=threshold),
+                  fault_model=FaultModel(transient_rate=0.0, seed=0))
+    ada_out = ada.run(mk_reqs())
+    base_rows = [(r["layer"], r["scheme"]) for r in base.plan.report_rows()]
+    ada_rows = [(r["layer"], r["scheme"]) for r in ada.plan.report_rows()]
+    return {
+        "streams_match": ada_out == base_out,
+        "plan_rows_match": ada_rows == base_rows,
+        "escalations": ada.stats.protection_escalations,
+        "final_level": ada.protection_level,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--n-layers", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--new-tokens", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rates", default="0.3,0.15",
+                    help="comma pair: transient rate, permanent rate")
+    ap.add_argument("--escalate-threshold", type=float, default=0.02,
+                    help="adaptive cells: detections-per-step rate that "
+                         "triggers escalation (low, so the elevated "
+                         "injected rate visibly escalates)")
+    ap.add_argument("--quick", action="store_true",
+                    help="2 cells (intensity_guided + adaptive, "
+                         "transient only) — the CI smoke set")
+    ap.add_argument("--out", default=None,
+                    help="write JSON here (else stdout)")
+    args = ap.parse_args(argv)
+
+    cfg = scaled_down(get_config(args.arch), n_layers=args.n_layers)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)
+
+    t_rate, p_rate = (float(r) for r in str(args.rates).split(","))
+    rate_of = {"transient": t_rate, "permanent": p_rate}
+    cells_todo = [(s, k) for s in SCHEMES for k in FAULT_KINDS]
+    if args.quick:
+        cells_todo = [("intensity_guided", "transient"),
+                      ("adaptive", "transient")]
+
+    cells = []
+    for scheme, kind in cells_todo:
+        cell = run_cell(
+            model, params, cfg, scheme=scheme, kind=kind,
+            rate=rate_of[kind], seed=args.seed, slots=args.slots,
+            max_len=args.max_len, requests=args.requests,
+            new_tokens=args.new_tokens,
+            threshold=args.escalate_threshold)
+        cells.append(cell)
+        print(f"scheme={scheme:17s} kind={kind:9s} "
+              f"injected={cell['faults_injected']:2d} "
+              f"coverage={cell['coverage']:.2f} "
+              f"sdc={cell['sdc_faults']} "
+              f"overhead={cell['overhead']:.2f}x "
+              f"esc={cell['protection_escalations']} "
+              f"replay={cell['replay_identical']}")
+
+    quiet = adaptive_quiet_check(
+        model, params, cfg, slots=args.slots, max_len=args.max_len,
+        requests=args.requests, new_tokens=args.new_tokens,
+        threshold=args.escalate_threshold)
+    print(f"adaptive quiet regime: streams_match={quiet['streams_match']} "
+          f"plan_rows_match={quiet['plan_rows_match']} "
+          f"escalations={quiet['escalations']}")
+
+    summary = {
+        "schema_version": 1,
+        "arch": args.arch, "n_layers": args.n_layers,
+        "slots": args.slots, "max_len": args.max_len,
+        "requests": args.requests, "new_tokens": args.new_tokens,
+        "seed": args.seed,
+        "rates": rate_of,
+        "escalate_threshold": args.escalate_threshold,
+        "backend": jax.default_backend(),
+        "cells": cells,
+        "adaptive_quiet": quiet,
+    }
+    payload = json.dumps(summary, indent=2)
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write(payload)
+        print(f"wrote {args.out}")
+    else:
+        print(payload)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -12,9 +12,7 @@ from repro.core import (
     ABFTConfig,
     FaultSpec,
     GemmDims,
-    Scheme,
     protected_matmul,
-    select_scheme,
     selection_report,
 )
 
@@ -138,6 +136,49 @@ for layer, row in per_width[1].items():
           f"TP=4 ai={r4['ai']:5.1f} {r4['scheme']:8s}{mark}")
 assert any(per_width[1][la]["scheme"] != per_width[4][la]["scheme"]
            for la in per_width[1])
+
+# ------------------------------- 2f. fault campaigns + adaptive protection
+# the one-shot fault above becomes a *process*: a seeded FaultModel
+# Bernoulli-injects transient (or sticky permanent) faults every engine
+# step, the engine's shadow-stream harness classifies each one as
+# corrected / uncorrected / SDC / masked, and an ErrorAdaptivePolicy
+# consumes the observed fault RATE to escalate protection at runtime
+# (ROADMAP 5b/5c; benchmarks/fault_campaign.py runs the full sweep).
+from repro.core import ErrorAdaptivePolicy, FaultModel
+from repro.serve.engine import Request, ServeEngine
+
+print("\n2f) fault campaign + error-rate-adaptive escalation:")
+qparams = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)
+qreqs = lambda: [Request(uid=i,                                 # noqa: E731
+                         prompt=np.arange(1, 6 + i, dtype=np.int32),
+                         max_new_tokens=5) for i in range(2)]
+adaptive = ErrorAdaptivePolicy(IntensityGuidedPolicy(),
+                               detection_threshold=0.05)
+campaign = FaultModel(transient_rate=0.5, seed=1, layers=cfg.n_layers,
+                      dtype=jnp.float32, magnitude=1e4)
+clean_eng = ServeEngine(model, qparams, slots=2, max_len=64,
+                        abft=ABFTConfig.from_policy(
+                            IntensityGuidedPolicy(), use_pallas=False),
+                        dtype=jnp.float32)
+clean_streams = clean_eng.run(qreqs())
+eng = ServeEngine(model, qparams, slots=2, max_len=64,
+                  abft=ABFTConfig.from_policy(adaptive,
+                                              use_pallas=False),
+                  dtype=jnp.float32, fault_model=campaign)
+streams = eng.run(qreqs())
+s = eng.stats
+print(f"   injected={s.faults_injected} corrected={s.faults_corrected} "
+      f"uncorrected={s.faults_uncorrected} sdc={s.sdc_faults} "
+      f"masked={s.masked_faults}")
+print(f"   escalations={s.protection_escalations} "
+      f"(level {eng.protection_level}: the observed detection rate "
+      f"crossed {adaptive.detection_threshold})")
+for entry in s.injection_log[:3]:
+    print(f"   step {entry['engine_step']:2d} {entry['phase']:8s} "
+          f"L{entry['layer']} {entry['site']:8s} -> {entry['outcome']}")
+assert s.faults_injected > 0 and s.sdc_faults == 0
+assert s.protection_escalations >= 1
+assert streams == clean_streams          # recovery stayed transparent
 
 # ---------------------------------------------------------------- 3. a model
 params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)

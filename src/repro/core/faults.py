@@ -12,9 +12,19 @@ back.  Injection sites:
 
 Bit-flips are expressed by XOR on the raw bit pattern, matching neutron-beam
 observed upsets; value faults add a chosen delta.
+
+Campaign injection (``FaultModel``) generalizes the one-shot surface to a
+fault *process*: Bernoulli-per-step transient faults at a configurable
+rate, plus sticky *permanent* faults (a faulty output unit corrupting
+every matching GEMM output from onset until cleared — the arxiv
+2205.12177 fault class that one-shot injection never exercises).  The
+whole schedule is driven by one seeded ``numpy.random.Generator``, so a
+campaign replays bit-identically from its seed.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 from typing import NamedTuple
 
@@ -98,15 +108,174 @@ def inject_output_fault(y: jnp.ndarray, fault: FaultSpec) -> jnp.ndarray:
     return jnp.where(on & mask, corrupted, y)
 
 
+# exponent-bit index range [lo, hi) per floating dtype: flips there scale
+# the value by powers of two, the classic catastrophic soft-error signature
+_EXPONENT_BITS = {
+    np.dtype(jnp.bfloat16): (8, 15),     # s1 e8 m7
+    np.dtype(np.float32): (23, 31),      # s1 e8 m23
+    np.dtype(np.float16): (10, 15),      # s1 e5 m10
+}
+
+
+def exponent_bit_range(dtype) -> tuple:
+    """``[lo, hi)`` exponent-bit indices of a floating dtype (bf16 bits
+    8-14, f32 bits 23-30, f16 bits 10-14)."""
+    dt = np.dtype(dtype)
+    try:
+        return _EXPONENT_BITS[dt]
+    except KeyError:
+        raise ValueError(
+            f"no exponent-bit range for dtype {dt}; known: "
+            f"{sorted(str(d) for d in _EXPONENT_BITS)}") from None
+
+
 def random_fault(rng: np.random.Generator, m: int, n: int,
-                 magnitude: float | None = None) -> FaultSpec:
+                 magnitude: float | None = None,
+                 dtype=jnp.bfloat16) -> FaultSpec:
     """Sample a random single-output fault for campaigns: exponent-region
-    bit-flip (the catastrophic case) or a value fault of given magnitude."""
+    bit-flip (the catastrophic case) or a value fault of given magnitude.
+    ``dtype`` is the corrupted buffer's dtype — it picks the exponent-bit
+    range (bf16 bits 8-14, f32 bits 23-30), so campaigns against f32
+    accumulators flip real exponent bits."""
     row = int(rng.integers(m))
     col = int(rng.integers(n))
     if magnitude is None:
-        # bf16: bits 8..14 are exponent — flips there scale the value by
-        # powers of two, the classic soft-error signature.
-        bit = int(rng.integers(8, 15))
+        lo, hi = exponent_bit_range(dtype)
+        bit = int(rng.integers(lo, hi))
         return FaultSpec.bitflip(row, col, bit)
     return FaultSpec.value(row, col, magnitude)
+
+
+# ------------------------------------------------------------- campaigns
+
+@dataclasses.dataclass
+class CampaignFault:
+    """One fault the campaign process emitted for one engine step.
+
+    ``kind`` is "transient" (fires once) or "permanent" (a sticky faulty
+    output unit: the SAME (layer, site, row, col, bit) target re-emitted
+    every step from ``onset_step`` until cleared).  ``model_fault`` is the
+    prebuilt device-scalar target the engine threads into the jitted
+    call."""
+
+    kind: str
+    onset_step: int
+    layer: int
+    site: str
+    row: int
+    col: int
+    bit: int                       # -1 => value fault of ``delta``
+    delta: float
+    model_fault: object            # ModelFault (device scalars)
+
+    def describe(self) -> dict:
+        """JSON-ready ground truth (the replay-equality surface)."""
+        return {
+            "kind": self.kind, "onset_step": self.onset_step,
+            "layer": self.layer, "site": self.site,
+            "row": self.row, "col": self.col,
+            "bit": self.bit, "delta": self.delta,
+        }
+
+
+class FaultModel:
+    """Seeded, deterministic fault process for serving campaigns.
+
+    ``poll()`` is called once per engine step and returns at most ONE
+    ``CampaignFault`` (the jitted entry points take a single target per
+    call): an active sticky permanent fault takes precedence, else a
+    Bernoulli(``transient_rate``) draw decides whether this step suffers
+    a transient fault.  A Bernoulli(``permanent_rate``) draw governs the
+    ONSET of a sticky fault, which then corrupts every subsequent step
+    until ``permanent_duration`` steps elapse (or ``clear_sticky()``) —
+    the repair/remap event.
+
+    Every random decision flows through one ``numpy.random.Generator``
+    seeded at construction, and the per-poll draw ORDER is fixed, so the
+    same seed replays the exact same schedule (``self.schedule`` records
+    it; campaigns assert bit-identical replays on that record).
+
+    ``rows``/``cols`` bound the (row, col) target within the faulted GEMM
+    *call*: the row is a token row of that call's output, so decode-step
+    GEMMs (one token row per call) only ever see row 0 — the default.
+    Raise ``rows`` to target prefill/chunk calls, whose output carries
+    one row per prompt token; an out-of-range target is a physical no-op
+    and classifies as ``masked``.
+    """
+
+    def __init__(self, *, transient_rate: float = 0.0,
+                 permanent_rate: float = 0.0,
+                 permanent_duration: int | None = 8,
+                 seed: int = 0, layers: int = 1,
+                 sites: tuple = ("qkv", "attn_out", "mlp_up", "mlp_down"),
+                 rows: int = 1, cols: int = 32,
+                 dtype=jnp.bfloat16, magnitude: float | None = None):
+        if not 0.0 <= transient_rate <= 1.0:
+            raise ValueError("transient_rate must be in [0, 1]")
+        if not 0.0 <= permanent_rate <= 1.0:
+            raise ValueError("permanent_rate must be in [0, 1]")
+        if permanent_duration is not None and permanent_duration < 1:
+            raise ValueError("permanent_duration must be >= 1 or None")
+        self.transient_rate = float(transient_rate)
+        self.permanent_rate = float(permanent_rate)
+        self.permanent_duration = permanent_duration
+        self.seed = int(seed)
+        self.layers = int(layers)
+        self.sites = tuple(sites)
+        self.rows = int(rows)
+        self.cols = int(cols)
+        self.dtype = dtype
+        self.magnitude = magnitude
+        self.reset()
+
+    def reset(self) -> None:
+        """Rewind to the seed: same schedule on the next run (replay)."""
+        self._rng = np.random.default_rng(self.seed)
+        self.step = 0
+        self.sticky: CampaignFault | None = None
+        self.schedule: list = []
+
+    def clear_sticky(self) -> None:
+        """Repair the faulty unit (ends the permanent fault early)."""
+        self.sticky = None
+
+    # ------------------------------------------------------------ drawing
+    def _draw_target(self, kind: str) -> CampaignFault:
+        # deferred import: models.layers imports this module
+        from repro.models.layers import ModelFault
+
+        layer = int(self._rng.integers(self.layers))
+        site = self.sites[int(self._rng.integers(len(self.sites)))]
+        spec = random_fault(self._rng, self.rows, self.cols,
+                            magnitude=self.magnitude, dtype=self.dtype)
+        return CampaignFault(
+            kind=kind, onset_step=self.step, layer=layer, site=site,
+            row=int(spec.row), col=int(spec.col), bit=int(spec.bit),
+            delta=float(spec.delta),
+            model_fault=ModelFault.at(layer, site, spec))
+
+    def poll(self) -> CampaignFault | None:
+        """Advance the process by one engine step; return this step's
+        fault (or None).  Fixed draw order per poll — two Bernoulli
+        draws, then target draws only when one fires — keeps the
+        schedule a pure function of the seed and the poll count."""
+        u_perm = float(self._rng.random())
+        u_trans = float(self._rng.random())
+        if self.sticky is not None and self.permanent_duration is not None \
+                and self.step - self.sticky.onset_step >= \
+                self.permanent_duration:
+            self.sticky = None                       # repaired/remapped
+        if self.sticky is None and u_perm < self.permanent_rate:
+            self.sticky = self._draw_target("permanent")
+        if self.sticky is not None:
+            fired: CampaignFault | None = self.sticky
+        elif u_trans < self.transient_rate:
+            fired = self._draw_target("transient")
+        else:
+            fired = None
+        if fired is not None:
+            rec = fired.describe()
+            rec["step"] = self.step
+            self.schedule.append(rec)
+        self.step += 1
+        return fired

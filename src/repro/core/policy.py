@@ -387,6 +387,115 @@ class ProfileGuidedPolicy(ProtectionPolicy):
         }
 
 
+class ErrorAdaptivePolicy(ProtectionPolicy):
+    """Error-rate-adaptive protection ("Adaptive Soft Error Protection",
+    arxiv 2407.19664; ROADMAP 5b): wrap a ``base`` policy and escalate to
+    an ``escalated`` policy (strongest coverage — ``global`` by default)
+    when the engine's OBSERVED error environment crosses thresholds,
+    de-escalating with hysteresis when quiet.
+
+    Unlike every other policy this one is deliberately MUTABLE (it holds
+    the current protection level), so it must not ride inside a
+    trace-time ``LayerCtx`` — the engine splits it into two immutable
+    per-level configs and swaps runners/plans on ``update()`` level
+    changes (see ``ServeEngine``).
+
+    ``update(snapshot)`` consumes ``FaultRateMonitor.snapshot()`` at plan
+    re-selection time:
+
+    * escalate when the windowed OR EWMA detection rate reaches
+      ``detection_threshold``, or the windowed hard-fault rate reaches
+      ``hard_fault_threshold``;
+    * de-escalate only after ``deescalate_after`` consecutive quiet
+      updates with every rate at or below ``clear_factor`` x its
+      threshold — rates in the dead band between the two keep the
+      current level (no flapping).
+
+    ``shrink_chunk`` (0 < f <= 1) optionally scales the engine's chunked
+    prefill token budget while escalated: smaller chunks shrink the
+    retry blast radius when errors are frequent.
+    """
+
+    kind = "adaptive"
+
+    def __init__(self, base: ProtectionPolicy | None = None, *,
+                 escalated: ProtectionPolicy | None = None,
+                 detection_threshold: float = 0.05,
+                 hard_fault_threshold: float = 0.01,
+                 clear_factor: float = 0.5,
+                 deescalate_after: int = 16,
+                 shrink_chunk: float = 1.0):
+        if not 0.0 < clear_factor <= 1.0:
+            raise ValueError("clear_factor must be in (0, 1]")
+        if deescalate_after < 1:
+            raise ValueError("deescalate_after must be >= 1")
+        if not 0.0 < shrink_chunk <= 1.0:
+            raise ValueError("shrink_chunk must be in (0, 1]")
+        self.base = base if base is not None else IntensityGuidedPolicy()
+        self.escalated = escalated if escalated is not None \
+            else FixedPolicy(Scheme.GLOBAL)
+        self.detection_threshold = float(detection_threshold)
+        self.hard_fault_threshold = float(hard_fault_threshold)
+        self.clear_factor = float(clear_factor)
+        self.deescalate_after = int(deescalate_after)
+        self.shrink_chunk = float(shrink_chunk)
+        self.level = 0                 # 0 = base, 1 = escalated
+        self.escalations = 0
+        self.deescalations = 0
+        self._quiet = 0
+
+    @property
+    def active(self) -> ProtectionPolicy:
+        return self.escalated if self.level else self.base
+
+    def update(self, snapshot: Mapping) -> bool:
+        """One adaptation decision from a FaultRateMonitor snapshot.
+        Returns True iff the protection level CHANGED."""
+        det = max(float(snapshot.get("window_detection_rate", 0.0)),
+                  float(snapshot.get("ewma_detections_per_step", 0.0)))
+        hard = max(float(snapshot.get("window_hard_fault_rate", 0.0)),
+                   float(snapshot.get("ewma_hard_faults_per_step", 0.0)))
+        hot = det >= self.detection_threshold \
+            or hard >= self.hard_fault_threshold
+        cool = det <= self.clear_factor * self.detection_threshold \
+            and hard <= self.clear_factor * self.hard_fault_threshold
+        if self.level == 0:
+            if hot:
+                self.level = 1
+                self.escalations += 1
+                self._quiet = 0
+                return True
+            return False
+        if not cool:                   # hot OR dead band: stay escalated
+            self._quiet = 0
+            return False
+        self._quiet += 1
+        if self._quiet >= self.deescalate_after:
+            self.level = 0
+            self.deescalations += 1
+            self._quiet = 0
+            return True
+        return False
+
+    def select(self, dims, hw=DEFAULT, *, first_layer=False,
+               cfg=None) -> Selection:
+        return self.active.select(dims, hw, first_layer=first_layer,
+                                  cfg=cfg)
+
+    def to_json(self) -> dict:
+        return {
+            "kind": self.kind,
+            "base": self.base.to_json(),
+            "escalated": self.escalated.to_json(),
+            "detection_threshold": self.detection_threshold,
+            "hard_fault_threshold": self.hard_fault_threshold,
+            "clear_factor": self.clear_factor,
+            "deescalate_after": self.deescalate_after,
+            "shrink_chunk": self.shrink_chunk,
+            "level": self.level,
+        }
+
+
 def policy_from_selector(config, profile_table=None) -> ProtectionPolicy:
     """Legacy ``SelectorConfig`` mode string -> ProtectionPolicy (the
     compatibility shim behind ``select_scheme`` and ``ABFTConfig``)."""
@@ -418,6 +527,12 @@ def _policy_scheme_names(d: dict) -> list:
                for i, e in enumerate(d.get("table") or ())]
         out += [("policy.fallback." + p.removeprefix("policy."), n)
                 for p, n in _policy_scheme_names(d.get("fallback") or {})]
+        return out
+    if kind == "adaptive":
+        out = []
+        for sub in ("base", "escalated"):
+            out += [(f"policy.{sub}." + p.removeprefix("policy."), n)
+                    for p, n in _policy_scheme_names(d.get(sub) or {})]
         return out
     return []
 
@@ -483,6 +598,18 @@ def policy_from_json(d: dict) -> ProtectionPolicy:
             table=tuple(
                 (GemmDims(**e["dims"]), e["scheme"]) for e in d["table"]),
             fallback=policy_from_json(d["fallback"]),
+        )
+    if kind == "adaptive":
+        # reconstructed at level 0: runtime escalation state is engine
+        # state, not deployment-artifact state
+        return ErrorAdaptivePolicy(
+            base=policy_from_json(d["base"]),
+            escalated=policy_from_json(d["escalated"]),
+            detection_threshold=d["detection_threshold"],
+            hard_fault_threshold=d["hard_fault_threshold"],
+            clear_factor=d["clear_factor"],
+            deescalate_after=d["deescalate_after"],
+            shrink_chunk=d.get("shrink_chunk", 1.0),
         )
     raise ValueError(f"unknown policy kind {kind!r}")
 

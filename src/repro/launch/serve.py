@@ -2,7 +2,17 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
       --scale smoke --requests 8 --new-tokens 16 [--inject-faults] \
+      [--fault-rate 0.2 --fault-kind transient --adaptive] \
       [--metrics-out m.json] [--trace-out t.json] [--log-events]
+
+Fault-campaign flags: ``--fault-rate`` attaches a seeded ``FaultModel``
+(continuous Bernoulli-per-step injection; ``--fault-kind permanent``
+makes faults sticky across steps until ``--fault-duration`` expires),
+and every injected fault is classified by the engine's shadow-stream
+harness as corrected / uncorrected / SDC / masked.  ``--adaptive``
+wraps the base policy in an ``ErrorAdaptivePolicy`` that escalates to
+``global`` protection when the observed detection rate crosses
+``--escalate-threshold`` and de-escalates with hysteresis when quiet.
 
 Telemetry flags (repro/obs): ``--metrics-out`` writes the metrics
 snapshot + fault-rate surface + final engine stats as one JSON artifact
@@ -24,8 +34,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ALL_ARCHS, get_config, scaled_down
-from repro.core.faults import FaultSpec
-from repro.core.policy import FixedPolicy, IntensityGuidedPolicy
+from repro.core.faults import FaultModel, FaultSpec
+from repro.core.policy import (
+    ErrorAdaptivePolicy,
+    FixedPolicy,
+    IntensityGuidedPolicy,
+)
 from repro.core.protected import ABFTConfig
 from repro.core.schemes import Scheme
 from repro.models import ModelFault, build_model
@@ -52,6 +66,31 @@ def main(argv=None) -> int:
     ap.add_argument("--abft", default="auto",
                     choices=["auto", "global", "block_1s", "off"])
     ap.add_argument("--inject-faults", action="store_true")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="per-step Bernoulli fault probability: attaches "
+                         "a seeded FaultModel for continuous campaign "
+                         "injection (0 = no campaign)")
+    ap.add_argument("--fault-kind", default="transient",
+                    choices=["transient", "permanent"],
+                    help="campaign fault class: one-step transients or "
+                         "sticky permanent faults that corrupt every "
+                         "matching GEMM output until cleared")
+    ap.add_argument("--fault-duration", type=int, default=8,
+                    help="steps a sticky permanent fault persists")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="FaultModel RNG seed (same seed -> identical "
+                         "injection schedule and classification)")
+    ap.add_argument("--fault-magnitude", type=float, default=1e4,
+                    help="injected value delta (0 = random exponent-bit "
+                         "flips in the target dtype instead)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="wrap the base policy in ErrorAdaptivePolicy: "
+                         "escalate to global protection when observed "
+                         "detection/hard-fault rates cross thresholds, "
+                         "de-escalate with hysteresis when quiet")
+    ap.add_argument("--escalate-threshold", type=float, default=0.05,
+                    help="windowed/EWMA detections-per-step rate that "
+                         "triggers escalation (--adaptive)")
     ap.add_argument("--max-retries", type=int, default=1,
                     help="clean recomputes after an ABFT detection")
     ap.add_argument("--raise-on-hard-fault", action="store_true",
@@ -110,13 +149,26 @@ def main(argv=None) -> int:
         cfg = scaled_down(cfg)
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)
-    abft = (
-        ABFTConfig.off() if args.abft == "off"
-        else ABFTConfig.from_policy(
-            IntensityGuidedPolicy() if args.abft == "auto"
-            else FixedPolicy(Scheme(args.abft)),
-            use_pallas=False)
-    )
+    if args.abft == "off":
+        abft = ABFTConfig.off()
+    else:
+        base = (IntensityGuidedPolicy() if args.abft == "auto"
+                else FixedPolicy(Scheme(args.abft)))
+        if args.adaptive:
+            base = ErrorAdaptivePolicy(
+                base, detection_threshold=args.escalate_threshold)
+        abft = ABFTConfig.from_policy(base, use_pallas=False)
+    fault_model = None
+    if args.fault_rate > 0:
+        fault_model = FaultModel(
+            transient_rate=(args.fault_rate
+                            if args.fault_kind == "transient" else 0.0),
+            permanent_rate=(args.fault_rate
+                            if args.fault_kind == "permanent" else 0.0),
+            permanent_duration=args.fault_duration,
+            seed=args.fault_seed, layers=cfg.n_layers,
+            dtype=jnp.float32,
+            magnitude=args.fault_magnitude or None)
     policy = RecoveryPolicy(
         max_retries=args.max_retries,
         evict_on_hard_fault=not args.raise_on_hard_fault)
@@ -138,7 +190,8 @@ def main(argv=None) -> int:
                          admit_lookahead=args.admit_lookahead,
                          chunk_tokens=args.chunk_tokens,
                          temperature=args.temperature, top_k=args.top_k,
-                         seed=args.seed, telemetry=telemetry)
+                         seed=args.seed, telemetry=telemetry,
+                         fault_model=fault_model)
     heartbeats = None
     if engine.mesh is not None:
         # liveness surface for the sharded fleet: one worker per mesh
@@ -199,6 +252,18 @@ def main(argv=None) -> int:
         "prefill_chunks": engine.stats.prefill_chunks,
         "mixed_steps": engine.stats.mixed_steps,
         "decode_only_steps": engine.stats.decode_only_steps,
+        "campaign": ({
+            "faults_injected": engine.stats.faults_injected,
+            "faults_corrected": engine.stats.faults_corrected,
+            "faults_uncorrected": engine.stats.faults_uncorrected,
+            "sdc_faults": engine.stats.sdc_faults,
+            "masked_faults": engine.stats.masked_faults,
+            "schedule": fault_model.schedule,
+        } if fault_model is not None else None),
+        "protection_level": engine.protection_level,
+        "protection_escalations": engine.stats.protection_escalations,
+        "protection_deescalations":
+            engine.stats.protection_deescalations,
         "chunk_tokens": engine.chunk_tokens,
         "chunk_budget_retunes": engine.stats.chunk_budget_retunes,
         "model_parallel": engine.model_parallel,

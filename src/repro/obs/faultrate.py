@@ -66,6 +66,18 @@ class FaultRateMonitor:
         self.ewma_hard_faults += a * (hard_faults - self.ewma_hard_faults)
         self.observations += 1
 
+    def reset(self) -> None:
+        """Re-baseline the responsive signals: clear the rolling window
+        and the EWMA state, KEEPING the lifetime totals (the audit
+        trail).  The adaptive policy calls this after an escalation so
+        the post-escalation regime is judged on fresh observations
+        instead of the pre-escalation window."""
+        self._obs.clear()
+        self.ewma_detections = 0.0
+        self.ewma_retries = 0.0
+        self.ewma_hard_faults = 0.0
+        self.observations = 0
+
     # ------------------------------------------------------ windowed rates
     def _window_sums(self):
         s = t = d = r = h = 0

@@ -47,6 +47,15 @@ ENGINE_COUNTERS = {
     "serve_chunk_retries_total": "chunk_retries",
     "serve_chunk_budget_retunes_total": "chunk_budget_retunes",
     "serve_scheme_flips_total": "scheme_flips",
+    # fault-campaign classification (shadow-stream harness) + adaptive
+    # protection level changes — SDCs are first-class exported counters
+    "abft_faults_injected_total": "faults_injected",
+    "abft_faults_corrected_total": "faults_corrected",
+    "abft_faults_uncorrected_total": "faults_uncorrected",
+    "abft_sdc_total": "sdc_faults",
+    "abft_masked_faults_total": "masked_faults",
+    "serve_protection_escalations_total": "protection_escalations",
+    "serve_protection_deescalations_total": "protection_deescalations",
 }
 
 # deltas of these stats feed the fault-rate monitor each sync

@@ -226,11 +226,14 @@ attached the instrumented paths reduce to no-op spans.
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.policy import ErrorAdaptivePolicy
 from repro.core.protected import ABFTConfig
 from repro.models.layers import LayerCtx, ModelFault
 from repro.models.model import Model
@@ -263,6 +266,15 @@ __all__ = [
 _NULL_TRACER = Tracer(enabled=False)
 
 
+def _pytrees_equal(a, b) -> bool:
+    """Exact leaf-wise equality of two pytrees (the shadow-stream state
+    comparison — bit-identical or not, no tolerance)."""
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        bool(jnp.array_equal(x, y)) for x, y in zip(la, lb))
+
+
 class ServeEngine:
     def __init__(self, model: Model, params, *, slots: int, max_len: int,
                  abft: ABFTConfig = ABFTConfig(), dtype=jnp.bfloat16,
@@ -273,13 +285,24 @@ class ServeEngine:
                  prefix_sharing: bool = False, admit_lookahead: int = 8,
                  chunk_tokens: int | str | None = None,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
-                 telemetry=None):
+                 telemetry=None, fault_model=None,
+                 classify_injections: bool | None = None):
         assert slots >= 1
         self.model = model
         self.slots = slots
         self.max_len = max_len
         self.abft = abft
         self.policy = policy
+        # campaign injection (core/faults.FaultModel): polled once per
+        # step() for this step's fault; every injected fault — campaign
+        # or hand-armed — is placement-recorded, and when classification
+        # is on (default: whenever a fault model is attached) undetected
+        # faults are shadow-checked for silent corruption
+        self.fault_model = fault_model
+        self.classify_injections = bool(
+            classify_injections if classify_injections is not None
+            else fault_model is not None)
+        self._injection_meta: dict | None = None
         self.cache_kind = cache_kind
         self.temperature = float(temperature)
         self.top_k = int(top_k)
@@ -294,12 +317,38 @@ class ServeEngine:
         else:
             self.executor = MeshExecutor(model, params, mesh=mesh,
                                          dtype=dtype, hints=hints)
-        self.ctx = LayerCtx(abft=abft, hints=self.executor.hints)
+        # --- error-rate-adaptive protection (ErrorAdaptivePolicy):
+        # schemes resolve at TRACE time from the LayerCtx's config, so a
+        # runtime level change cannot ride one mutable policy inside one
+        # runner — the engine compiles BOTH levels up front (immutable
+        # per-level config/ctx/plan/runner) and swaps the active set when
+        # update() crosses a threshold (_set_protection_level)
+        eff = abft.effective_policy()
+        self.adaptive = eff if isinstance(eff, ErrorAdaptivePolicy) \
+            else None
+        if self.adaptive is not None:
+            level_cfgs = (
+                dataclasses.replace(abft, policy=self.adaptive.base),
+                dataclasses.replace(abft, policy=self.adaptive.escalated))
+        else:
+            level_cfgs = (abft,)
+        self._level_abft = level_cfgs
+        self._level_ctx = tuple(
+            LayerCtx(abft=c, hints=self.executor.hints)
+            for c in level_cfgs)
+        self.protection_level = 0
+        self.ctx = self._level_ctx[0]
         self._dtype_bytes = self.executor.dtype_bytes
         # observability (repro/obs): optional EngineTelemetry — metrics
         # mirroring + fault-rate monitor + span tracer.  _tr is always a
         # Tracer so instrumented paths need no None checks; _last_scheme
-        # tracks the per-step selection for scheme_flip instant events
+        # tracks the per-step selection for scheme_flip instant events.
+        # The adaptive policy consumes the fault-rate monitor, so an
+        # adaptive engine gets a (trace-off) telemetry object implicitly.
+        if telemetry is None and self.adaptive is not None:
+            from repro.obs.telemetry import EngineTelemetry
+
+            telemetry = EngineTelemetry()
         self.telemetry = telemetry
         self._tr = telemetry.tracer if telemetry is not None \
             else _NULL_TRACER
@@ -308,8 +357,12 @@ class ServeEngine:
         # shard) tuple: per-device GEMM shapes under the executor's
         # model_parallel width drive the intensity-guided selection —
         # the per-step fast path step() consults plus the roofline
-        # chunk-budget autotuner (core/policy.py)
-        self.plan = self.executor.protection_plan(abft, slots=slots)
+        # chunk-budget autotuner (core/policy.py).  One plan per
+        # protection level (they differ exactly when escalation does).
+        self._level_plans = tuple(
+            self.executor.protection_plan(c, slots=slots)
+            for c in level_cfgs)
+        self.plan = self._level_plans[0]
         # chunked-prefill scheduler: per-step token budget + chunk cursors.
         # chunk_tokens="auto" asks the plan for the smallest budget whose
         # mixed-step arithmetic intensity clears the device CMR (ROADMAP
@@ -331,6 +384,10 @@ class ServeEngine:
                     "(SSM / cross-attention state cannot resume a prompt "
                     "mid-sequence)")
         self.chunk_tokens = chunk_tokens
+        # pre-escalation budget, restored on de-escalation (the adaptive
+        # policy's shrink_chunk scales it while escalated)
+        self._chunk_tokens_base = chunk_tokens \
+            if isinstance(chunk_tokens, int) else None
         # admission-campaign fault awaiting the target's first chunk
         self._pending_prefill_fault: tuple | None = None
 
@@ -363,9 +420,13 @@ class ServeEngine:
         self.scheduler = Scheduler(
             slots=slots, max_len=max_len, admit_lookahead=admit_lookahead,
             stats=EngineStats(), tracer=self._tr, pool=pool, index=index)
-        # --- runner layer: the jitted device entry points
-        self.runner = ModelRunner(model, self.ctx,
-                                  temperature=temperature, top_k=top_k)
+        # --- runner layer: the jitted device entry points, one runner
+        # per protection level (jit compilation is lazy, so the inactive
+        # level costs nothing until first escalation)
+        self._level_runners = tuple(
+            ModelRunner(model, ctx, temperature=temperature, top_k=top_k)
+            for ctx in self._level_ctx)
+        self.runner = self._level_runners[0]
         # the audit (analysis/audit.py) and the equivalence tests trace
         # these attributes by name; they alias the runner's compiled fns
         self._decode = self.runner.decode
@@ -459,9 +520,102 @@ class ServeEngine:
         if not self._tr.enabled:
             return
         for row in self.plan.report_rows():
-            args = {"model_parallel": self.model_parallel}
+            args = {"model_parallel": self.model_parallel,
+                    "protection_level": self.protection_level}
             args.update(row)
             self._tr.instant("plan_row", args)
+
+    # ------------------------------------------- adaptive protection
+    def _set_protection_level(self, level: int, evidence: dict) -> None:
+        """Swap the active (ctx, plan, runner) set to ``level`` — the
+        runtime half of ErrorAdaptivePolicy.  Emits a
+        ``protection_escalation`` instant carrying the rate evidence,
+        re-emits plan rows at the new level, optionally shrinks the
+        chunk budget while escalated, and re-baselines the fault-rate
+        monitor so the new regime is judged on fresh observations."""
+        self.protection_level = level
+        self.ctx = self._level_ctx[level]
+        self.plan = self._level_plans[level]
+        self.runner = self._level_runners[level]
+        self._decode = self.runner.decode
+        self._prefill = self.runner.prefill
+        self._prefill_prefix = self.runner.prefill_prefix
+        self._prefill_chunk = self.runner.prefill_chunk
+        if level:
+            self.stats.protection_escalations += 1
+        else:
+            self.stats.protection_deescalations += 1
+        if self._chunk_tokens_base is not None and not self.chunk_auto \
+                and self.adaptive is not None:
+            if level and self.adaptive.shrink_chunk < 1.0:
+                self.chunk_tokens = max(8, (int(
+                    self._chunk_tokens_base * self.adaptive.shrink_chunk)
+                    // 8) * 8)
+            else:
+                self.chunk_tokens = self._chunk_tokens_base
+        args = {"level": level,
+                "direction": "escalate" if level else "deescalate"}
+        for k in ("window_detection_rate", "window_hard_fault_rate",
+                  "ewma_detections_per_step",
+                  "ewma_hard_faults_per_step"):
+            if k in evidence:
+                args[k] = evidence[k]
+        self._tr.instant("protection_escalation", args)
+        self._emit_plan_rows()
+        if self.telemetry is not None:
+            # keep lifetime totals; clear window + EWMA (the audit trail
+            # survives — FaultRateMonitor.reset's contract)
+            self.telemetry.faults.reset()
+
+    def _maybe_adapt(self) -> None:
+        """Per-step adaptation decision: feed the observed fault-rate
+        snapshot to the ErrorAdaptivePolicy and swap protection levels
+        when it says so.  No-op for non-adaptive engines."""
+        if self.adaptive is None or self.telemetry is None:
+            return
+        snap = self.telemetry.faults.snapshot()
+        if self.adaptive.update(snap):
+            self._set_protection_level(self.adaptive.level, snap)
+
+    # ------------------------------------------- injection bookkeeping
+    def _take_injection_meta(self, default_source: str) -> dict:
+        """Claim the pending injection metadata (set by step()/run() for
+        campaign and fault_at injections) or synthesize one for a
+        directly-passed fault."""
+        meta = self._injection_meta
+        self._injection_meta = None
+        if meta is None:
+            meta = {"source": default_source, "kind": "manual"}
+        return meta
+
+    def _record_injection(self, meta: dict, phase: str, outcome: str,
+                          **extra) -> None:
+        """Ground truth for one executed injection: where it landed
+        (engine step + phase) and how it resolved (corrected /
+        uncorrected / sdc / masked / undetected)."""
+        entry = dict(meta)
+        entry["engine_step"] = self.stats.steps
+        entry["phase"] = phase
+        entry["outcome"] = outcome
+        entry.update(extra)
+        self.stats.record_injection(entry)
+        self._tr.instant("fault_injected", {
+            "phase": phase, "outcome": outcome,
+            "kind": entry.get("kind"), "source": entry.get("source")})
+
+    def _shadow_outcome(self, emitted, state, shadow) -> tuple:
+        """Classify an UNDETECTED injection by shadow comparison: re-run
+        the same jitted call clean from the pre-step state and compare.
+        SDC means the emitted tokens differ (user-visible silent
+        corruption); tokens-equal is 'masked' (the fault landed out of
+        range or perturbed state below the detection threshold — the
+        entry still records whether internal state matched)."""
+        s_emitted, s_state = shadow
+        tokens_match = bool(jnp.array_equal(emitted, s_emitted))
+        state_match = _pytrees_equal(state, s_state)
+        outcome = "masked" if tokens_match else "sdc"
+        return outcome, {"tokens_match": tokens_match,
+                         "state_match": state_match}
 
     def _sync_telemetry(self) -> None:
         """Mirror EngineStats into the registry + feed the fault-rate
@@ -583,6 +737,8 @@ class ServeEngine:
                 tables, fa)
 
         f = fault if fault is not None else ModelFault.none()
+        meta = self._take_injection_meta("admit_fault") \
+            if fault is not None else None
         with self._tr.span("prefill", {"rows": len(admitted),
                                        "tokens": int(lengths.sum())}) as sp:
             first, new_cache, flag, nkeys = attempt(f)
@@ -604,6 +760,10 @@ class ServeEngine:
                     sp.fence(first, flag)
                 if not bool(flag):
                     break
+            if meta is not None:
+                self._record_injection(
+                    meta, "prefill",
+                    "uncorrected" if bool(flag) else "corrected")
             if bool(flag):
                 # persistent fault: evict the admission batch with recorded
                 # errors instead of retrying it forever (livelock fix).
@@ -615,6 +775,13 @@ class ServeEngine:
                     self._finish(r, "hard_fault:prefill", evict=True)
                     self._release(int(slot))
                 return batch.consumed
+        elif meta is not None:
+            outcome, extra = ("undetected", {})
+            if self.classify_injections:
+                s_first, s_cache, _, _ = attempt(ModelFault.none())
+                outcome, extra = self._shadow_outcome(
+                    first, new_cache, (s_first, s_cache))
+            self._record_injection(meta, "prefill", outcome, **extra)
 
         self.cache = new_cache
         self.keys = self.keys.at[jnp.asarray(slot_ids)].set(nkeys)
@@ -650,15 +817,31 @@ class ServeEngine:
         already prefilled them whole).  Chunked (``chunk_tokens`` set):
         one *budgeted* step — all resident decode tokens first, then the
         leftover budget is filled with prefill chunks from the cursor
-        queue (see module docstring)."""
+        queue (see module docstring).
+
+        With a ``fault_model`` attached and no explicit ``fault``, the
+        campaign process is polled for this step's injection (an
+        explicit fault takes precedence and leaves the campaign clock
+        untouched).  An adaptive policy re-evaluates the protection
+        level from the observed fault rates BEFORE the step executes."""
         before = self.stats.steps
         t0 = time.perf_counter()
+        self._maybe_adapt()
+        if fault is None and self.fault_model is not None:
+            ev = self.fault_model.poll()
+            if ev is not None:
+                fault = ev.model_fault
+                self._injection_meta = {"source": "campaign",
+                                        **ev.describe()}
         if self.chunk_tokens is not None:
             out = self._step_chunked(fault)
         else:
             out = self._decode_core(fault)
             if self.stats.steps > before:
                 self._observe_step_mix(len(out), 0)
+        # a fault that found no executing call this step (idle engine)
+        # corrupted nothing — drop its unclaimed metadata
+        self._injection_meta = None
         if self.telemetry is not None:
             if self.stats.steps > before:
                 self.telemetry.observe_step_latency(
@@ -759,12 +942,18 @@ class ServeEngine:
         # batch containing the target (one fault per jitted call — if a
         # step fault is already routed here, the campaign entry is
         # retired rather than left to linger past the target's prefill)
+        pending_src = False
         if self._pending_prefill_fault is not None:
             uid, pf = self._pending_prefill_fault
             if any(cur.req.uid == uid for _, cur, _, _ in rows):
                 if fault is None:
                     fault = pf
+                    pending_src = True
                 self._pending_prefill_fault = None
+        meta = None
+        if fault is not None:
+            meta = self._take_injection_meta(
+                "admit_fault" if pending_src else "manual")
 
         Apad = _pad_rows(A, self.slots)
         Lpad = min(_pad_len(max(take for _, _, take, _ in rows)),
@@ -799,6 +988,9 @@ class ServeEngine:
                 tables, args[4], args[5], fa)
 
         f = fault if fault is not None else ModelFault.none()
+        retry_f = f if (meta is not None
+                        and meta.get("kind") == "permanent") \
+            else ModelFault.none()
         with self._tr.span(
                 "prefill_chunk",
                 {"rows": A,
@@ -815,11 +1007,14 @@ class ServeEngine:
                 self.stats.chunk_retries += 1
                 with self._tr.span("abft_retry",
                                    {"phase": "prefill_chunk"}) as sp:
-                    first, new_cache, flag, nkeys = attempt(
-                        ModelFault.none())
+                    first, new_cache, flag, nkeys = attempt(retry_f)
                     sp.fence(first, flag)
                 if not bool(flag):
                     break
+            if meta is not None:
+                self._record_injection(
+                    meta, "prefill_chunk",
+                    "uncorrected" if bool(flag) else "corrected")
             if bool(flag):
                 # persistent chunk fault: evict ONLY this chunk batch's
                 # requests (their earlier chunks die with their blocks —
@@ -836,6 +1031,14 @@ class ServeEngine:
                             self._pending_prefill_fault[0] == cur.req.uid:
                         self._pending_prefill_fault = None  # target gone
                 return False
+        elif meta is not None:
+            outcome, extra = ("undetected", {})
+            if self.classify_injections:
+                s_first, s_cache, _, _ = attempt(ModelFault.none())
+                outcome, extra = self._shadow_outcome(
+                    first, new_cache, (s_first, s_cache))
+            self._record_injection(meta, "prefill_chunk", outcome,
+                                   **extra)
 
         self.cache = new_cache
         self.keys = self.keys.at[jnp.asarray(slot_list)].set(
@@ -881,6 +1084,16 @@ class ServeEngine:
         tables = (self.pool.device_tables()
                   if self.pool is not None else None)
         f = fault if fault is not None else ModelFault.none()
+        meta = self._take_injection_meta("manual") \
+            if fault is not None else None
+        # a sticky permanent fault models a faulty UNIT: it corrupts the
+        # retry exactly like the attempt (retry cannot clear it — the
+        # detect->recompute loop's transient-fault assumption breaks,
+        # which is the 2205.12177 detection gap this campaign mode
+        # exercises); transient/manual faults retry clean as before
+        retry_f = f if (meta is not None
+                        and meta.get("kind") == "permanent") \
+            else ModelFault.none()
 
         prev_cache = self.cache
         prev_keys = self.keys
@@ -911,11 +1124,14 @@ class ServeEngine:
                                    {"phase": "decode"}) as sp:
                     nxt, new_cache, flag, nkeys = self._decode(
                         self.params, jnp.asarray(toks), prev_cache, pos,
-                        jnp.asarray(mask), prev_keys, tables,
-                        ModelFault.none())
+                        jnp.asarray(mask), prev_keys, tables, retry_f)
                     sp.fence(nxt, flag)
                 if not bool(flag):
                     break
+            if meta is not None:
+                self._record_injection(
+                    meta, "decode",
+                    "uncorrected" if bool(flag) else "corrected")
             if bool(flag):
                 self.stats.hard_faults += 1
                 self._tr.instant("hard_fault", {"phase": "decode"})
@@ -931,6 +1147,20 @@ class ServeEngine:
                     del self.active[s]
                     self._release(s)
                 return {}
+        elif meta is not None:
+            # UNDETECTED injection: shadow-stream comparison — re-run
+            # the same call clean from the pre-step state and compare.
+            # The faulted result stays committed (realistic propagation);
+            # only the classification consumes the shadow.
+            outcome, extra = ("undetected", {})
+            if self.classify_injections:
+                s_nxt, s_cache, _, _ = self._decode(
+                    self.params, jnp.asarray(toks), prev_cache, pos,
+                    jnp.asarray(mask), prev_keys, tables,
+                    ModelFault.none())
+                outcome, extra = self._shadow_outcome(
+                    nxt, new_cache, (s_nxt, s_cache))
+            self._record_injection(meta, "decode", outcome, **extra)
         self.cache = new_cache
         self.keys = nkeys
 
@@ -963,6 +1193,11 @@ class ServeEngine:
         injection for the next real step instead of silently dropping
         it); ``admit_fault_at``: (uid, ModelFault) injected into the
         admission batch that contains that request uid (campaign hooks).
+        Where an armed fault actually LANDED — the executed engine step
+        and phase (decode / prefill_chunk / prefill), plus its detection
+        outcome — is recorded in ``stats.injection_log`` (one entry per
+        executed injection, ``source="fault_at"`` with the armed step
+        index) instead of being consumed silently.
 
         Results are collected from the engine's finished-event queue —
         O(1) amortized per request — instead of rescanning every request
@@ -991,6 +1226,11 @@ class ServeEngine:
             fault = None
             if step_fault_armed and step_i >= fault_at[0]:
                 fault = fault_at[1]
+                # placement ground truth: the landing site records the
+                # executed step + phase in stats.injection_log
+                self._injection_meta = {
+                    "source": "fault_at", "kind": "manual",
+                    "armed_step": fault_at[0], "run_step": step_i}
             steps_before = self.stats.steps
             self.step(fault)
             if fault is not None and self.stats.steps > steps_before:

@@ -107,6 +107,26 @@ class EngineStats:
     # steps whose intensity-guided selection differs from the previous
     # step's (the regime crossings telemetry emits as instant events)
     scheme_flips: int = 0
+    # fault-campaign classification (shadow-stream harness): every
+    # injected fault — campaign OR hand-armed — is classified by outcome.
+    # faults_injected = corrected + uncorrected + sdc + masked once the
+    # step resolves; sdc (silent data corruption: undetected AND the
+    # shadow clean re-execution disagrees) is the number the protection
+    # stack exists to hold at zero.
+    faults_injected: int = 0
+    faults_corrected: int = 0      # detected, retry re-executed clean
+    faults_uncorrected: int = 0    # detected, persisted through retries
+    sdc_faults: int = 0            # undetected, outputs provably corrupt
+    masked_faults: int = 0         # undetected, outputs provably clean
+    # adaptive protection (ErrorAdaptivePolicy) level changes
+    protection_escalations: int = 0
+    protection_deescalations: int = 0
+    # ground truth on injection placement: one entry per injected fault,
+    # {"engine_step", "phase", "source", "kind", "layer", "site", "row",
+    #  "col", "bit", "outcome"} — what run()'s fault_at disarm used to
+    # consume silently.  Bounded like the occupancy samples.
+    injection_log: list = dataclasses.field(default_factory=list)
+    injections_dropped: int = 0    # log entries lost to the bound
     # per-step pool occupancy aggregates (one observation per executed
     # decode step on a paged engine).  The mean is exact (sum/count); the
     # median comes from a BOUNDED sample list kept small by deterministic
@@ -161,6 +181,26 @@ class EngineStats:
                 # observation indices from (k, stride) alone
                 self.selection_trace = self.selection_trace[1::2]
                 self.selection_stride *= 2
+
+    _OUTCOME_COUNTER = {
+        "corrected": "faults_corrected",
+        "uncorrected": "faults_uncorrected",
+        "sdc": "sdc_faults",
+        "masked": "masked_faults",
+    }
+
+    def record_injection(self, entry: dict) -> None:
+        """Classify one injected fault (see ``injection_log``).  The
+        outcome counters are the telemetry-facing aggregate; the log is
+        the per-fault ground truth campaigns replay-check against."""
+        self.faults_injected += 1
+        attr = self._OUTCOME_COUNTER.get(entry.get("outcome"))
+        if attr is not None:
+            setattr(self, attr, getattr(self, attr) + 1)
+        if len(self.injection_log) < self.MAX_OCCUPANCY_SAMPLES:
+            self.injection_log.append(entry)
+        else:
+            self.injections_dropped += 1
 
     @property
     def blocks_used_mean(self) -> float:

@@ -1,0 +1,385 @@
+"""Fault-campaign subsystem: dtype-aware fault targets, the seeded
+``FaultModel`` process (deterministic replay, sticky permanents), the
+``ErrorAdaptivePolicy`` hysteresis, and the serving engine's continuous
+injection + shadow-stream classification end to end (ROADMAP 5b/5c).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, scaled_down
+from repro.core import (
+    ABFTConfig,
+    ErrorAdaptivePolicy,
+    FaultModel,
+    FaultSpec,
+    FixedPolicy,
+    IntensityGuidedPolicy,
+    Scheme,
+    exponent_bit_range,
+    random_fault,
+)
+from repro.core.policy import policy_from_json
+from repro.models import ModelFault, build_model
+from repro.obs import EngineTelemetry
+from repro.serve.engine import Request, ServeEngine
+
+ABFT = ABFTConfig(scheme=Scheme.AUTO, use_pallas=False)
+GLOBAL = ABFTConfig.from_policy(FixedPolicy(Scheme.GLOBAL),
+                                use_pallas=False)
+# every campaign fault in this file uses a value delta far above the
+# checksum tolerance, so detection verdicts are deterministic
+MAG = 1e4
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = scaled_down(get_config("llama3.2-1b"), n_layers=2)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)
+    return cfg, model, params
+
+
+def _reqs(n=3, new_tokens=5):
+    return [Request(uid=i, prompt=np.arange(1, 6 + i, dtype=np.int32),
+                    max_new_tokens=new_tokens) for i in range(n)]
+
+
+def _engine(model, params, *, abft=ABFT, **kw) -> ServeEngine:
+    return ServeEngine(model, params, slots=2, max_len=64, abft=abft,
+                       dtype=jnp.float32, **kw)
+
+
+# ================================================ dtype-aware random_fault
+
+class TestDtypeAwareRandomFault:
+    def test_exponent_bit_ranges(self):
+        assert exponent_bit_range(jnp.bfloat16) == (8, 15)
+        assert exponent_bit_range(np.float32) == (23, 31)
+        assert exponent_bit_range(np.float16) == (10, 15)
+
+    def test_unknown_dtype_raises(self):
+        with pytest.raises(ValueError):
+            exponent_bit_range(np.int32)
+
+    @pytest.mark.parametrize("dtype,lo,hi", [
+        (jnp.bfloat16, 8, 15), (np.float32, 23, 31),
+    ])
+    def test_random_bit_flips_land_in_exponent(self, dtype, lo, hi):
+        rng = np.random.default_rng(0)
+        for _ in range(50):
+            f = random_fault(rng, 4, 32, dtype=dtype)
+            assert lo <= int(f.bit) < hi
+            assert 0 <= int(f.row) < 4 and 0 <= int(f.col) < 32
+
+    def test_magnitude_mode_is_a_value_fault(self):
+        f = random_fault(np.random.default_rng(0), 2, 8, magnitude=MAG,
+                         dtype=np.float32)
+        assert int(f.bit) == -1 and float(f.delta) == MAG
+
+
+# ======================================================== FaultModel
+
+class TestFaultModel:
+    def test_same_seed_replays_identical_schedule(self):
+        kw = dict(transient_rate=0.4, permanent_rate=0.1,
+                  permanent_duration=3, seed=7, layers=2, magnitude=MAG)
+        a, b = FaultModel(**kw), FaultModel(**kw)
+        for _ in range(40):
+            a.poll()
+            b.poll()
+        assert a.schedule and a.schedule == b.schedule
+
+    def test_reset_rewinds_to_seed(self):
+        fm = FaultModel(transient_rate=0.5, seed=3, magnitude=MAG)
+        first = [fm.poll() for _ in range(20)]
+        sched = list(fm.schedule)
+        fm.reset()
+        second = [fm.poll() for _ in range(20)]
+        assert fm.schedule == sched
+        assert [f.describe() if f else None for f in first] == \
+               [f.describe() if f else None for f in second]
+
+    def test_sticky_permanent_lifecycle(self):
+        fm = FaultModel(permanent_rate=1.0, permanent_duration=3, seed=0,
+                        magnitude=MAG)
+        first = fm.poll()
+        assert first is not None and first.kind == "permanent"
+        # the SAME fault persists for duration steps …
+        second = fm.poll()
+        assert second is first
+        fm.poll()
+        # … then expires; rate 1.0 immediately onsets a fresh one
+        fresh = fm.poll()
+        assert fresh is not None and fresh.onset_step == fm.step - 1
+        assert fresh is not first
+
+    def test_clear_sticky_is_the_repair_event(self):
+        fm = FaultModel(permanent_rate=1.0, permanent_duration=1000,
+                        seed=0, magnitude=MAG)
+        assert fm.poll() is not None
+        fm.clear_sticky()
+        assert fm.sticky is None
+
+    def test_rate_zero_never_fires(self):
+        fm = FaultModel(transient_rate=0.0, permanent_rate=0.0, seed=0)
+        assert all(fm.poll() is None for _ in range(50))
+        assert fm.schedule == []
+
+    def test_rate_validation(self):
+        with pytest.raises(ValueError):
+            FaultModel(transient_rate=1.5)
+        with pytest.raises(ValueError):
+            FaultModel(permanent_rate=-0.1)
+        with pytest.raises(ValueError):
+            FaultModel(permanent_duration=0)
+
+
+# ================================================ ErrorAdaptivePolicy
+
+def _snap(det=0.0, hard=0.0):
+    return {"window_detection_rate": det, "window_hard_fault_rate": hard}
+
+
+class TestErrorAdaptivePolicy:
+    def test_escalates_on_detection_threshold(self):
+        p = ErrorAdaptivePolicy(detection_threshold=0.1)
+        assert not p.update(_snap(det=0.05))
+        assert p.level == 0
+        assert p.update(_snap(det=0.1))
+        assert p.level == 1 and p.escalations == 1
+        assert p.active is p.escalated
+
+    def test_escalates_on_hard_fault_threshold(self):
+        p = ErrorAdaptivePolicy(hard_fault_threshold=0.01)
+        assert p.update(_snap(hard=0.02))
+        assert p.level == 1
+
+    def test_dead_band_does_not_flap(self):
+        """Rates between clear_factor x threshold and threshold must
+        hold the current level — in BOTH directions."""
+        p = ErrorAdaptivePolicy(detection_threshold=0.1,
+                                clear_factor=0.5, deescalate_after=2)
+        dead_band = _snap(det=0.07)      # 0.05 < 0.07 < 0.1
+        assert not p.update(dead_band)   # level 0 stays 0
+        assert p.level == 0
+        p.update(_snap(det=0.5))         # escalate
+        assert p.level == 1
+        for _ in range(10):
+            assert not p.update(dead_band)   # level 1 stays 1
+        assert p.level == 1
+        assert p.escalations == 1 and p.deescalations == 0
+
+    def test_deescalation_needs_consecutive_quiet_updates(self):
+        p = ErrorAdaptivePolicy(detection_threshold=0.1,
+                                clear_factor=0.5, deescalate_after=3)
+        p.update(_snap(det=0.5))
+        assert p.level == 1
+        quiet = _snap(det=0.0)
+        assert not p.update(quiet)
+        assert not p.update(quiet)
+        # a hot blip resets the quiet streak
+        assert not p.update(_snap(det=0.5))
+        assert not p.update(quiet)
+        assert not p.update(quiet)
+        assert p.update(quiet)           # third CONSECUTIVE quiet
+        assert p.level == 0 and p.deescalations == 1
+
+    def test_select_delegates_to_active_level(self):
+        from repro.core.intensity import GemmDims
+
+        p = ErrorAdaptivePolicy(IntensityGuidedPolicy(),
+                                escalated=FixedPolicy(Scheme.GLOBAL))
+        dims = GemmDims(m=4, k=64, n=64)
+        assert p.select(dims).scheme == \
+            IntensityGuidedPolicy().select(dims).scheme
+        p.update(_snap(det=1.0))
+        assert p.select(dims).scheme == Scheme.GLOBAL
+
+    def test_json_round_trip(self):
+        p = ErrorAdaptivePolicy(IntensityGuidedPolicy(),
+                                detection_threshold=0.2,
+                                shrink_chunk=0.5)
+        q = policy_from_json(p.to_json())
+        assert isinstance(q, ErrorAdaptivePolicy)
+        assert q.detection_threshold == 0.2
+        assert q.shrink_chunk == 0.5
+        assert q.level == 0              # reconstructed at base level
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            ErrorAdaptivePolicy(clear_factor=0.0)
+        with pytest.raises(ValueError):
+            ErrorAdaptivePolicy(deescalate_after=0)
+        with pytest.raises(ValueError):
+            ErrorAdaptivePolicy(shrink_chunk=1.5)
+
+
+# ==================================== engine campaign + classification
+
+class TestEngineCampaign:
+    def test_protected_campaign_zero_sdc_and_streams_clean(
+            self, small_model):
+        cfg, model, params = small_model
+        clean = _engine(model, params).run(_reqs())
+        fm = FaultModel(transient_rate=0.5, seed=0, layers=cfg.n_layers,
+                        dtype=jnp.float32, magnitude=MAG)
+        tel = EngineTelemetry()
+        eng = _engine(model, params, fault_model=fm, telemetry=tel)
+        out = eng.run(_reqs())
+        s = eng.stats
+        assert s.faults_injected > 0
+        assert s.sdc_faults == 0
+        assert s.faults_corrected + s.faults_uncorrected \
+            + s.masked_faults == s.faults_injected
+        assert out == clean              # recovery is transparent
+        assert tel.counters_match(s)     # SDC counters are mirrored
+        entry = s.injection_log[0]
+        for k in ("source", "kind", "engine_step", "phase", "outcome"):
+            assert k in entry
+        assert entry["source"] == "campaign"
+
+    def test_campaign_replays_bit_identically(self, small_model):
+        cfg, model, params = small_model
+        kw = dict(transient_rate=0.5, seed=0, layers=cfg.n_layers,
+                  dtype=jnp.float32, magnitude=MAG)
+        fm1, fm2 = FaultModel(**kw), FaultModel(**kw)
+        e1 = _engine(model, params, fault_model=fm1)
+        e2 = _engine(model, params, fault_model=fm2)
+        o1, o2 = e1.run(_reqs()), e2.run(_reqs())
+        assert fm1.schedule == fm2.schedule
+        assert e1.stats.injection_log == e2.stats.injection_log
+        assert o1 == o2
+
+    def test_unprotected_campaign_shows_sdc(self, small_model):
+        cfg, model, params = small_model
+        fm = FaultModel(transient_rate=0.5, seed=0, layers=cfg.n_layers,
+                        dtype=jnp.float32, magnitude=MAG)
+        eng = _engine(model, params, abft=ABFTConfig.off(),
+                      fault_model=fm)
+        eng.run(_reqs())
+        assert eng.stats.faults_injected > 0
+        assert eng.stats.sdc_faults > 0
+        assert eng.stats.faults_detected == 0
+
+    def test_disabled_fault_model_streams_byte_identical(
+            self, small_model):
+        cfg, model, params = small_model
+        clean = _engine(model, params).run(_reqs())
+        eng = _engine(model, params,
+                      fault_model=FaultModel(transient_rate=0.0, seed=0))
+        assert eng.run(_reqs()) == clean
+        assert eng.stats.faults_injected == 0
+        assert eng.stats.injection_log == []
+
+    def test_sticky_permanent_global_detects_unprotected_passes(
+            self, small_model):
+        """The arxiv 2205.12177 detection gap: a sticky faulty unit
+        corrupts every step AND every retry.  Under global ABFT the
+        retries keep failing -> detected hard fault (+ eviction);
+        unprotected, the same campaign silently corrupts the streams."""
+        cfg, model, params = small_model
+        kw = dict(permanent_rate=1.0, permanent_duration=1000, seed=1,
+                  layers=cfg.n_layers, dtype=jnp.float32, magnitude=MAG)
+        protected = _engine(model, params, abft=GLOBAL,
+                            fault_model=FaultModel(**kw))
+        protected.run(_reqs())
+        sp = protected.stats
+        assert sp.faults_detected >= 1
+        assert sp.faults_uncorrected >= 1   # sticky through retries
+        assert sp.hard_faults >= 1
+        assert sp.sdc_faults == 0           # detected, never silent
+
+        clean = _engine(model, params, abft=ABFTConfig.off()).run(_reqs())
+        bare = _engine(model, params, abft=ABFTConfig.off(),
+                       fault_model=FaultModel(**kw))
+        out = bare.run(_reqs())
+        sb = bare.stats
+        assert sb.faults_detected == 0      # nothing even noticed
+        assert sb.hard_faults == 0
+        assert sb.sdc_faults >= 1           # silently corrupted tokens
+        assert out != clean
+
+
+# ==================================== adaptive protection in the engine
+
+class TestAdaptiveEngine:
+    def test_escalates_under_elevated_rate_and_stays_correct(
+            self, small_model):
+        cfg, model, params = small_model
+        clean = _engine(model, params).run(_reqs())
+        pol = ErrorAdaptivePolicy(IntensityGuidedPolicy(),
+                                  detection_threshold=0.05,
+                                  deescalate_after=4)
+        tel = EngineTelemetry(trace=True)
+        fm = FaultModel(transient_rate=0.6, seed=1, layers=cfg.n_layers,
+                        dtype=jnp.float32, magnitude=MAG)
+        eng = _engine(model, params,
+                      abft=ABFTConfig.from_policy(pol, use_pallas=False),
+                      fault_model=fm, telemetry=tel)
+        out = eng.run(_reqs())
+        assert eng.stats.protection_escalations >= 1
+        assert eng.protection_level == pol.level
+        assert eng.stats.sdc_faults == 0
+        assert out == clean
+        instants = [e for e in tel.tracer.events
+                    if e.get("name") == "protection_escalation"]
+        assert instants and \
+            instants[0]["args"]["direction"] == "escalate"
+        assert "window_detection_rate" in instants[0]["args"]
+
+    def test_quiet_regime_matches_base_policy_byte_for_byte(
+            self, small_model):
+        cfg, model, params = small_model
+        base_eng = _engine(model, params, abft=ABFTConfig.from_policy(
+            IntensityGuidedPolicy(), use_pallas=False))
+        base_out = base_eng.run(_reqs())
+        pol = ErrorAdaptivePolicy(IntensityGuidedPolicy())
+        ada = _engine(model, params,
+                      abft=ABFTConfig.from_policy(pol, use_pallas=False))
+        ada_out = ada.run(_reqs())
+        assert ada_out == base_out
+        assert ada.stats.protection_escalations == 0
+        assert ada.protection_level == 0
+        # identical per-layer scheme choices in the compiled plan
+        assert [(r["layer"], r["scheme"])
+                for r in ada.plan.report_rows()] == \
+               [(r["layer"], r["scheme"])
+                for r in base_eng.plan.report_rows()]
+
+    def test_plan_rows_carry_protection_level(self, small_model):
+        cfg, model, params = small_model
+        pol = ErrorAdaptivePolicy(IntensityGuidedPolicy(),
+                                  detection_threshold=0.05)
+        tel = EngineTelemetry(trace=True)
+        fm = FaultModel(transient_rate=0.6, seed=1, layers=cfg.n_layers,
+                        dtype=jnp.float32, magnitude=MAG)
+        eng = _engine(model, params,
+                      abft=ABFTConfig.from_policy(pol, use_pallas=False),
+                      fault_model=fm, telemetry=tel)
+        eng.run(_reqs())
+        rows = [e for e in tel.tracer.events
+                if e.get("name") == "plan_row"]
+        levels = {e["args"].get("protection_level") for e in rows}
+        assert {0, 1} <= levels          # pre- and post-escalation rows
+
+
+# ==================================== fault_at landing ground truth
+
+class TestFaultAtLanding:
+    def test_run_records_where_the_armed_fault_landed(self, small_model):
+        cfg, model, params = small_model
+        eng = _engine(model, params)
+        fault = ModelFault.at(1, "mlp_down", FaultSpec.value(0, 2, MAG))
+        eng.run(_reqs(n=1, new_tokens=6), fault_at=(2, fault))
+        log = eng.stats.injection_log
+        assert len(log) == 1
+        entry = log[0]
+        assert entry["source"] == "fault_at"
+        assert entry["armed_step"] == 2
+        assert entry["run_step"] == 2
+        assert entry["phase"] in ("decode", "prefill", "prefill_chunk")
+        assert entry["outcome"] == "corrected"
+        assert eng.stats.faults_injected == 1

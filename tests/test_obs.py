@@ -284,6 +284,58 @@ class TestFaultRate:
         with pytest.raises(ValueError):
             FaultRateMonitor(alpha=0.0)
 
+    def test_empty_window_snapshot(self):
+        """No observations yet: every rate is 0.0 (not NaN / division
+        error) and the snapshot is still JSON-complete."""
+        m = FaultRateMonitor(window=4)
+        assert m.window_detection_rate == 0.0
+        assert m.window_detection_rate_per_token == 0.0
+        assert m.window_retry_rate == 0.0
+        assert m.window_hard_fault_rate == 0.0
+        snap = m.snapshot()
+        assert snap["window_filled"] == 0
+        assert snap["window_steps"] == 0
+        assert snap["total_steps"] == 0
+        json.dumps(snap)
+
+    def test_window_of_one_tracks_last_observation_only(self):
+        m = FaultRateMonitor(window=1)
+        m.observe(steps=1, tokens=2, detections=1)
+        assert m.window_detection_rate == 1.0
+        m.observe(steps=1, tokens=2)
+        # the faulty observation fell out of the 1-deep window …
+        assert m.window_detection_rate == 0.0
+        assert m.snapshot()["window_filled"] == 1
+        # … but the lifetime total keeps it
+        assert m.detections == 1
+
+    def test_reset_rebaselines_keeping_lifetime_totals(self):
+        m = FaultRateMonitor(window=4, alpha=0.5)
+        for _ in range(3):
+            m.observe(steps=1, tokens=2, detections=1, retries=1,
+                      hard_faults=1)
+        assert m.window_detection_rate == 1.0
+        assert m.ewma_detections > 0
+        m.reset()
+        # responsive signals cleared …
+        assert m.window_detection_rate == 0.0
+        assert m.window_retry_rate == 0.0
+        assert m.window_hard_fault_rate == 0.0
+        assert m.ewma_detections == 0.0
+        assert m.ewma_retries == 0.0
+        assert m.ewma_hard_faults == 0.0
+        assert m.observations == 0
+        assert m.snapshot()["window_filled"] == 0
+        # … lifetime audit trail survives
+        assert m.steps == 3
+        assert m.detections == 3
+        assert m.retries == 3
+        assert m.hard_faults == 3
+        # and the monitor keeps working after the re-baseline
+        m.observe(steps=1, detections=1)
+        assert m.window_detection_rate == 1.0
+        assert m.detections == 4
+
 
 # ============================================ stride-decimation alignment
 
