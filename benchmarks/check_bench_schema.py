@@ -37,6 +37,10 @@ _CONDITIONAL = {
     # the --mesh sharded sweep (null when the flag is not passed; its
     # sub-tree keys all sit under "sharded" so one entry covers them)
     "sharded",
+    # the speculative-decoding sweep (null on models without the
+    # rollback guarantees — same gate as chunked prefill; the --quick
+    # smoke also runs fewer proposers/K values than the baseline)
+    "spec_decode",
 }
 
 
@@ -99,6 +103,31 @@ def check(new: dict, baseline: dict) -> list:
                 f"{where}: auto budget's modeled throughput is "
                 f"{cell['auto_modeled_tput_frac']:.2f}x the best fixed "
                 "budget (acceptance: within 10%)")
+    spec = new.get("spec_decode")
+    if spec:
+        srows = list(spec.get("rows", []))
+        if spec.get("tuned"):
+            srows.append(spec["tuned"])
+        for row in srows:
+            where = (f"spec_decode ({row.get('scheme')}/"
+                     f"{row.get('proposer')}/K={row.get('draft_len')})")
+            if row.get("spec_matches_dense") is False:
+                errors.append(
+                    f"{where}: spec_matches_dense is False — speculative "
+                    "streams diverged from the unsped baseline")
+            s = row.get("spec", {})
+            if s.get("draft_accepted", 0) > s.get("draft_proposed", 0):
+                errors.append(f"{where}: draft_accepted exceeds "
+                              "draft_proposed")
+        if spec.get("tuned_beats_fixed_median") is False:
+            errors.append(
+                "spec_decode: tuned draft length loses to the fixed-K "
+                "median (tune_draft_len regression)")
+        if spec.get("scheme_flipped") is False:
+            errors.append(
+                "spec_decode: the K-scaled verify window no longer "
+                "crosses the CMR — per-step scheme selection stopped "
+                "flipping between decode and verify compositions")
     for i, row in enumerate((new.get("sharded") or {}).get("rows", [])):
         where = f"sharded.rows[{i}] (mesh={row.get('mesh')})"
         if "skipped" in row:

@@ -98,6 +98,14 @@ def check_cell(cell: dict, where: str) -> list:
     if not isinstance(metrics, dict):
         return [f"{where}: no metrics snapshot"]
     errors += check_metrics(metrics, where, cell.get("engine_stats"))
+    # speculative decoding: acceptance can never exceed proposal (the
+    # verify step accepts a prefix of what the proposer offered)
+    dp = _counter_value(metrics, "serve_spec_draft_proposed_total")
+    da = _counter_value(metrics, "serve_spec_draft_accepted_total")
+    if dp is not None and da is not None and da > dp:
+        errors.append(
+            f"{where}: serve_spec_draft_accepted_total {da} > "
+            f"serve_spec_draft_proposed_total {dp}")
     if cell.get("counters_match_stats") is False:
         errors.append(
             f"{where}: counters_match_stats is False — mirrored "

@@ -42,6 +42,23 @@ Every cell reports the fixed occupancy accounting — ``utilization``
 against allocated tokens, ``fragmentation``, ``blocks_shared``,
 ``prefix_hit_rate`` — plus the ``rejections`` / ``evictions`` split.
 
+The ``spec_decode`` sweep serves periodic prompts (the prompt-lookup
+best case) through speculative engines: draft length K x proposer x
+ABFT scheme, each against an unsped baseline of the SAME engine
+geometry.  Acceptance keys per row: ``spec_matches_dense`` (greedy
+streams byte-identical to the unsped run — speculation is an execution
+strategy, not an approximation), ``accept_rate``, and
+``spec_tput_frac``.  The intensity-guided rows run under
+``AUTO_TUNE_HW``, crafted so plain decode (slots tokens) sits below the
+CMR while a full K=4 verify window (slots x 5 tokens) clears it: the
+sweep's ``verify_schemes`` show the per-step selector flipping
+``block_1s`` -> ``global`` as K grows, with the matching
+``scheme_flips`` counts.  The ``tuned`` row runs ``draft_len="auto"``
+(``ProtectionPlan.tune_draft_len`` picks K from the roofline + the
+acceptance-rate prior); its gate is ``tuned_beats_fixed_median`` —
+tuned-K throughput at least the median of the fixed-K rows under the
+same scheme.
+
 ``--mesh 1,2,4`` adds a sharded sweep: bf16 params + paged KV sharded
 over a (data=1, model=N) device mesh per width, each engine compiling
 its protection plan from the POST-sharding per-device GEMM shapes
@@ -98,12 +115,16 @@ SHARD_SWEEP_HW = HardwareSpec(
     ici_bw=1e11, hbm_bytes=1 << 34, vmem_bytes=1 << 24,
     fixed_op_overhead_s=1e-7)
 
-# Hardware for the chunked_auto cell's budget autotuning: a CMR the
-# benchmark's scaled step geometry (k=64, n=128, f32) can actually clear,
-# so tune_chunk_budget has a real roofline crossing to find instead of
-# saturating at the max_len cap (the real v5e CMR of ~241 is unreachable
-# for a 64-wide d_model — crafted specs are how the selection tests
-# exercise the crossover too).  Same ratios as the FLIP_HW test spec.
+# Hardware for the chunked_auto cell's budget autotuning AND the
+# spec_decode sweep: a CMR the benchmark's scaled step geometry (k=64,
+# n=128, f32) can actually clear, so tune_chunk_budget has a real
+# roofline crossing to find instead of saturating at the max_len cap
+# (the real v5e CMR of ~241 is unreachable for a 64-wide d_model —
+# crafted specs are how the selection tests exercise the crossover
+# too).  Same ratios as the FLIP_HW test spec.  The step-composition
+# crossover sits at 18 tokens: plain decode at 4 slots (4 tokens) is
+# memory-bound -> block_1s, a K=4 verify window (4 x 5 = 20 tokens)
+# clears the CMR -> global — the spec sweep's scheme-flip evidence.
 AUTO_TUNE_HW = HardwareSpec(
     name="bench-flip", peak_flops=1e10, vpu_flops=2.6e8, hbm_bw=1e9,
     ici_bw=1e9, hbm_bytes=1 << 30, vmem_bytes=1 << 20,
@@ -176,6 +197,22 @@ def _requests(mix, n: int, max_len: int, new_tokens: int) -> tuple:
     ], lens
 
 
+def _spec_requests(n: int, max_len: int, new_tokens: int) -> list:
+    """Periodic prompts for the spec_decode sweep: the trailing n-gram
+    recurs throughout the prompt, so the prompt-lookup proposer finds
+    continuations and acceptance stays high — the traffic regime
+    speculative decoding is built for (greedy equality must hold for
+    ANY acceptance rate; the tests cover the adversarial end)."""
+    reqs = []
+    for i in range(n):
+        pat = 3 + np.arange(4 + i % 2, dtype=np.int32)
+        L = max(8, int(0.4 * max_len)) + i % 3
+        reqs.append(Request(
+            uid=i, prompt=np.tile(pat, max_len)[:L],
+            max_new_tokens=new_tokens))
+    return reqs
+
+
 def _pool_blocks(lens, slots, new_tokens, block_size) -> int:
     """Blocks covering the peak per-slot working set of this traffic:
     the ``slots`` largest requests resident at once, each grown to
@@ -223,13 +260,15 @@ def _selection_summary(stats: EngineStats) -> dict:
 def run_cell(model, params, reqs, *, slots, max_len, abft, cache_kind,
              num_blocks=None, block_size=16,
              prefix_sharing=False, chunk_tokens=None, mesh=None,
+             spec_decode=None, draft_len=None,
              dtype=jnp.float32,
              telemetry: EngineTelemetry | None = None) -> dict:
     eng = ServeEngine(
         model, params, slots=slots, max_len=max_len, abft=abft,
         dtype=dtype, cache_kind=cache_kind, block_size=block_size,
         num_blocks=num_blocks, prefix_sharing=prefix_sharing,
-        chunk_tokens=chunk_tokens, mesh=mesh)
+        chunk_tokens=chunk_tokens, mesh=mesh,
+        spec_decode=spec_decode, draft_len=draft_len)
     # warm-up pass: serve a throwaway copy of the same traffic so jit
     # compilation (which dominates cold wall time on CPU) is excluded
     # from the reported tokens/s; shapes repeat, so the timed run below
@@ -302,6 +341,26 @@ def run_cell(model, params, reqs, *, slots, max_len, abft, cache_kind,
         cell["cmr"] = eng.plan.hardware.cmr
         cell["modeled_step_tput"] = (
             eng.chunk_tokens / eng.plan.modeled_step_time(eng.chunk_tokens))
+    if spec_decode is not None:
+        # the speculative accounting the acceptance criteria key on:
+        # draft economics + which schemes the per-step selector picked
+        # for the K-scaled verify windows
+        prop = eng.stats.draft_proposed
+        cell["spec"] = {
+            "proposer": eng.spec.name,
+            "draft_len": eng.draft_len,
+            "draft_proposed": prop,
+            "draft_accepted": eng.stats.draft_accepted,
+            "accept_rate": eng.stats.draft_accepted / max(prop, 1),
+            "verify_retries": eng.stats.verify_retries,
+            "scheme_flips": eng.stats.scheme_flips,
+            # schemes of the decode-composition steps only (the verify
+            # windows); prefill steps are compute-bound on any hardware
+            # and would mask the K-driven crossover
+            "schemes": dict(collections.Counter(
+                e["scheme"] for e in eng.stats.selection_trace
+                if e["decode"] and not e["prefill"])),
+        }
     cell.update(_latency_stats(reqs, t0))
     if telemetry is not None:
         cell["telemetry"] = dict(
@@ -309,6 +368,115 @@ def run_cell(model, params, reqs, *, slots, max_len, abft, cache_kind,
             counters_match_stats=telemetry.counters_match(eng.stats),
             trace_events=list(telemetry.tracer.events))
     return cell
+
+
+def _spec_sweep(model, params, args) -> dict:
+    """The speculative-decoding sweep: draft length K x proposer x ABFT
+    scheme over periodic-prompt traffic, each row judged against an
+    unsped baseline of the same engine geometry.  Runs at 4 slots
+    regardless of ``--slots``: the AUTO_TUNE_HW crossover sits at 18
+    step tokens, so 4-slot plain decode (4 tokens) stays memory-bound
+    while a full K=4 verify window (20 tokens) clears the CMR — the
+    scheme-flip evidence the sweep exists to produce."""
+    slots = 4
+    ks = [1, 4] if args.quick else [1, 2, 4]
+    proposers = ["ngram"] if args.quick else ["ngram", "self_draft"]
+    # decode budgets long enough that the steady state (full-K windows
+    # once the proposer locks on) dominates the first-step ramp-in
+    new_toks = max(args.new_tokens, 16)
+    reqs_proto = _spec_requests(args.requests, args.max_len, new_toks)
+    lens = [len(r.prompt) for r in reqs_proto]
+    # a verify step grows each slot's KV by up to K+1 tokens before the
+    # acceptance cursor settles; size the pool with tuned-K headroom
+    nb = _pool_blocks(lens, slots, new_toks + 9, args.block_size)
+    schemes = {
+        "none": ABFTConfig.off(),
+        "intensity_guided": ABFTConfig(
+            scheme=Scheme.AUTO, use_pallas=False, hardware=AUTO_TUNE_HW),
+    }
+
+    def cell(**kw):
+        reqs = [Request(uid=r.uid, prompt=r.prompt,
+                        max_new_tokens=r.max_new_tokens)
+                for r in reqs_proto]
+        return run_cell(model, params, reqs, slots=slots,
+                        max_len=args.max_len, cache_kind="paged",
+                        num_blocks=nb, block_size=args.block_size, **kw)
+
+    rows = []
+    base_tput, base_streams, decode_scheme = {}, {}, None
+    for scheme_name, abft in schemes.items():
+        base = cell(abft=abft)
+        base_streams[scheme_name] = base.pop("streams")
+        base_tput[scheme_name] = base["tokens_per_s"]
+        if scheme_name == "intensity_guided":
+            sel = base["selection"]["schemes"]
+            decode_scheme = max(sel, key=sel.get) if sel else None
+        for prop in proposers:
+            for k in ks:
+                c = cell(abft=abft, spec_decode=prop, draft_len=k)
+                streams = c.pop("streams")
+                row = dict(
+                    c, scheme=scheme_name, proposer=prop, draft_len=k,
+                    spec_matches_dense=(
+                        streams == base_streams[scheme_name]),
+                    spec_tput_frac=(c["tokens_per_s"]
+                                    / max(base_tput[scheme_name], 1e-9)))
+                rows.append(row)
+                print(f"spec  scheme={scheme_name:16s} "
+                      f"proposer={prop:10s} K={k} "
+                      f"accept={row['spec']['accept_rate']:.2f} "
+                      f"tput={row['spec_tput_frac']:.2f}x "
+                      f"match={row['spec_matches_dense']} "
+                      f"schemes={row['spec']['schemes']}")
+
+    # tuned row: draft_len="auto" resolves K via the plan's roofline +
+    # acceptance-rate prior (ProtectionPlan.tune_draft_len); acceptance
+    # is throughput at least the median of the fixed-K rows under the
+    # same scheme and proposer
+    tuned_c = cell(abft=schemes["intensity_guided"], spec_decode="ngram",
+                   draft_len="auto")
+    t_streams = tuned_c.pop("streams")
+    tuned = dict(
+        tuned_c, scheme="intensity_guided", proposer="ngram",
+        draft_len="auto",
+        tuned_draft_len=tuned_c["spec"]["draft_len"],
+        spec_matches_dense=(
+            t_streams == base_streams["intensity_guided"]),
+        spec_tput_frac=(tuned_c["tokens_per_s"]
+                        / max(base_tput["intensity_guided"], 1e-9)))
+    fixed = [r["tokens_per_s"] for r in rows
+             if r["scheme"] == "intensity_guided"
+             and r["proposer"] == "ngram"]
+    median = float(np.median(fixed)) if fixed else 0.0
+    verify_schemes = {
+        str(r["draft_len"]): r["spec"]["schemes"]
+        for r in rows if r["scheme"] == "intensity_guided"
+        and r["proposer"] == "ngram"}
+    # the scheme-flip evidence: some K's verify windows cross the CMR
+    # and land on a scheme plain decode never selects
+    flipped = decode_scheme is not None and any(
+        s != decode_scheme
+        for v in verify_schemes.values() for s in v)
+    out = {
+        "hardware": AUTO_TUNE_HW.name, "slots": slots,
+        "draft_lens": ks, "proposers": proposers,
+        "baseline_tokens_per_s": base_tput,
+        "rows": rows, "tuned": tuned,
+        "tuned_draft_len": tuned["tuned_draft_len"],
+        "fixed_tput_median": median,
+        "tuned_beats_fixed_median": tuned["tokens_per_s"] >= median,
+        "decode_scheme": decode_scheme,
+        "verify_schemes": verify_schemes,
+        "scheme_flipped": flipped,
+    }
+    print(f"spec  tuned_draft_len={out['tuned_draft_len']} "
+          f"tuned_tput={tuned['tokens_per_s']:.1f} tok/s "
+          f"(fixed median {median:.1f}) "
+          f"beats_median={out['tuned_beats_fixed_median']} "
+          f"decode_scheme={decode_scheme} "
+          f"verify_schemes={verify_schemes} flip={flipped}")
+    return out
 
 
 def main(argv=None) -> int:
@@ -541,6 +709,10 @@ def main(argv=None) -> int:
                       f"match={row['paged_matches_dense']}"
                       + shared_note + chunk_note + auto_note)
 
+    # speculative decoding needs the rollback guarantees chunked prefill
+    # needs too (attention-only cache writes, no SSM recurrence)
+    spec_sweep = _spec_sweep(model, params, args) if chunk_ok else None
+
     sharded = None
     if args.mesh:
         widths = sorted({int(w) for w in str(args.mesh).split(",")})
@@ -613,6 +785,7 @@ def main(argv=None) -> int:
         "mixes": list(mixes),
         "backend": jax.default_backend(),
         "cells": cells,
+        "spec_decode": spec_sweep,
         "sharded": sharded,
     }
     payload = json.dumps(summary, indent=2)

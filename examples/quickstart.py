@@ -144,7 +144,7 @@ assert any(per_width[1][la]["scheme"] != per_width[4][la]["scheme"]
 # corrected / uncorrected / SDC / masked, and an ErrorAdaptivePolicy
 # consumes the observed fault RATE to escalate protection at runtime
 # (ROADMAP 5b/5c; benchmarks/fault_campaign.py runs the full sweep).
-from repro.core import ErrorAdaptivePolicy, FaultModel
+from repro.core import ErrorAdaptivePolicy, FaultModel, Scheme
 from repro.serve.engine import Request, ServeEngine
 
 print("\n2f) fault campaign + error-rate-adaptive escalation:")
@@ -179,6 +179,49 @@ for entry in s.injection_log[:3]:
 assert s.faults_injected > 0 and s.sdc_faults == 0
 assert s.protection_escalations >= 1
 assert streams == clean_streams          # recovery stayed transparent
+
+# ----------------------------- 2g. speculative decoding flips the scheme
+# spec_decode speculates K drafts per slot and scores all K+1 positions
+# in ONE jitted verify call — so a decode step's token dimension grows
+# from `slots` to sum(k_i + 1).  On hardware whose scheme crossover sits
+# between the two (here ~18 tokens for this f32 plan: 4-slot plain
+# decode = 4 tokens, full K=4 verify window = 20), speculation alone
+# flips the per-step scheme — the paper's intensity decision reacting
+# to the serving optimization.  Streams stay byte-identical: greedy
+# verify provably reproduces the unsped stream (see
+# repro/serve/spec_decode.py), so draft quality only buys throughput.
+flip_hw = HardwareSpec(
+    name="flip", peak_flops=1e10, vpu_flops=2.6e8, hbm_bw=1e9,
+    ici_bw=1e9, hbm_bytes=1 << 30, vmem_bytes=1 << 20,
+    fixed_op_overhead_s=1e-6)
+spec_reqs = lambda: [Request(uid=i,                             # noqa: E731
+                             prompt=np.tile(np.arange(3, 7 + i % 2,
+                                                      dtype=np.int32),
+                                            16)[:21 + 2 * i],
+                             max_new_tokens=14 + i % 3)
+                     for i in range(4)]
+spec_abft = ABFTConfig(scheme=Scheme.AUTO, use_pallas=False,
+                       hardware=flip_hw)
+print("\n2g) speculative decoding (K-sweep on scheme-flip hardware):")
+base_eng = ServeEngine(model, qparams, slots=4, max_len=64,
+                       abft=spec_abft, dtype=jnp.float32)
+base = base_eng.run(spec_reqs())
+for k in (1, 4):
+    seng = ServeEngine(model, qparams, slots=4, max_len=64,
+                       abft=spec_abft, dtype=jnp.float32,
+                       spec_decode="ngram", draft_len=k)
+    sout = seng.run(spec_reqs())
+    assert sout == base                  # byte-identical greedy streams
+    st = seng.stats
+    schemes = sorted({e["scheme"] for e in st.selection_trace
+                      if e["decode"] and not e["prefill"]})
+    rate = st.draft_accepted / max(st.draft_proposed, 1)
+    print(f"   K={k}: accept={rate:.2f} verify-window schemes={schemes}")
+    if k == 4:
+        assert "global" in schemes       # K=4 window crossed the CMR
+print(f"   plan.for_step:  4 tokens -> "
+      f"{base_eng.plan.for_step(4).scheme_name},  20 tokens -> "
+      f"{base_eng.plan.for_step(20).scheme_name}")
 
 # ---------------------------------------------------------------- 3. a model
 params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)

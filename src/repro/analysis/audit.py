@@ -309,6 +309,32 @@ def trace_engine_chunk(model, params, abft, *, batch=2, seq=8,
     return flop_ops(closed, entry="engine._prefill_chunk")
 
 
+def trace_engine_verify(model, params, abft, *, batch=2, draft_len=3,
+                        max_len=16, dtype=jnp.float32) -> list:
+    """Trace the engine's REAL jitted ``_verify`` step — the speculative
+    K+1-token batched verify path.  Verify sites reuse the decode
+    ``LayerSpec`` names with K-scaled token dims, so the plan crosscheck
+    (which ignores the M dim) keeps its bijection with zero plan
+    edits — exactly the property that lets scheme selection flip with K
+    while the coverage proof stays closed."""
+    from repro.models.layers import ModelFault
+    from repro.serve.engine import ServeEngine
+
+    eng = ServeEngine(model, params, slots=batch, max_len=max_len,
+                      abft=abft, dtype=dtype, spec_decode="ngram",
+                      draft_len=draft_len)
+    t = draft_len + 1
+    toks = jnp.zeros((batch, t), jnp.int32)
+    pos = jnp.zeros((batch,), jnp.int32)
+    mask = jnp.ones((batch,), bool)
+    valid = jnp.full((batch,), t, jnp.int32)
+    closed = jax.make_jaxpr(
+        lambda *a: eng._verify(*a))(
+            eng.params, toks, eng.cache, pos, mask, valid, eng.keys,
+            None, ModelFault.none())
+    return flop_ops(closed, entry="engine._verify")
+
+
 def flash_allowlist_check(model, params, *, batch=2, max_len=16,
                           dtype=jnp.float32):
     """Validate the softmax allowlist against the model's real flash
@@ -361,9 +387,14 @@ def audit_model(model, phase: str = "mixed", *, plan=None, batch=2,
     traces = {"prefill": pre, "decode": dec}
     if phase == "mixed":
         if model.supports_chunked_prefill:
+            # chunked-prefill mixed step + plain decode + the speculative
+            # K+1-token verify step: with speculation on, EVERY serving
+            # FLOP still flows through a registered scheme
             traces["mixed"] = trace_engine_chunk(
                 model, params, abft, batch=batch, seq=seq,
-                max_len=max_len, dtype=dtype) + dec
+                max_len=max_len, dtype=dtype) + dec + \
+                trace_engine_verify(model, params, abft, batch=batch,
+                                    max_len=max_len, dtype=dtype)
         else:
             traces["mixed"] = pre + dec
 

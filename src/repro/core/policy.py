@@ -413,7 +413,10 @@ class ErrorAdaptivePolicy(ProtectionPolicy):
 
     ``shrink_chunk`` (0 < f <= 1) optionally scales the engine's chunked
     prefill token budget while escalated: smaller chunks shrink the
-    retry blast radius when errors are frequent.
+    retry blast radius when errors are frequent.  ``shrink_draft``
+    (0 < f <= 1) does the same for the speculative-decoding draft
+    length: a shorter draft window shrinks the verify-retry blast
+    radius AND the number of speculated tokens a hard fault discards.
     """
 
     kind = "adaptive"
@@ -424,13 +427,16 @@ class ErrorAdaptivePolicy(ProtectionPolicy):
                  hard_fault_threshold: float = 0.01,
                  clear_factor: float = 0.5,
                  deescalate_after: int = 16,
-                 shrink_chunk: float = 1.0):
+                 shrink_chunk: float = 1.0,
+                 shrink_draft: float = 1.0):
         if not 0.0 < clear_factor <= 1.0:
             raise ValueError("clear_factor must be in (0, 1]")
         if deescalate_after < 1:
             raise ValueError("deescalate_after must be >= 1")
         if not 0.0 < shrink_chunk <= 1.0:
             raise ValueError("shrink_chunk must be in (0, 1]")
+        if not 0.0 < shrink_draft <= 1.0:
+            raise ValueError("shrink_draft must be in (0, 1]")
         self.base = base if base is not None else IntensityGuidedPolicy()
         self.escalated = escalated if escalated is not None \
             else FixedPolicy(Scheme.GLOBAL)
@@ -439,6 +445,7 @@ class ErrorAdaptivePolicy(ProtectionPolicy):
         self.clear_factor = float(clear_factor)
         self.deescalate_after = int(deescalate_after)
         self.shrink_chunk = float(shrink_chunk)
+        self.shrink_draft = float(shrink_draft)
         self.level = 0                 # 0 = base, 1 = escalated
         self.escalations = 0
         self.deescalations = 0
@@ -492,6 +499,7 @@ class ErrorAdaptivePolicy(ProtectionPolicy):
             "clear_factor": self.clear_factor,
             "deescalate_after": self.deescalate_after,
             "shrink_chunk": self.shrink_chunk,
+            "shrink_draft": self.shrink_draft,
             "level": self.level,
         }
 
@@ -610,6 +618,7 @@ def policy_from_json(d: dict) -> ProtectionPolicy:
             clear_factor=d["clear_factor"],
             deescalate_after=d["deescalate_after"],
             shrink_chunk=d.get("shrink_chunk", 1.0),
+            shrink_draft=d.get("shrink_draft", 1.0),
         )
     raise ValueError(f"unknown policy kind {kind!r}")
 
@@ -853,6 +862,42 @@ class ProtectionPlan:
             while best < cap and \
                     self.modeled_step_time(best) / best > target:
                 best += q
+        self._tune_cache[key] = best
+        return best
+
+    def tune_draft_len(self, batch: int = 1, *, lo: int = 1, hi: int = 8,
+                       accept_rate: float = 0.7,
+                       tput_margin: float = 0.0) -> int:
+        """Roofline draft-length autotuning for speculative decoding:
+        the LARGEST K in ``[lo, hi]`` whose modeled per-EMITTED-token
+        verify time beats plain decode's per-token time by at least
+        ``tput_margin``.  A K-draft verify step scores ``batch * (K+1)``
+        tokens through the same GEMMs as decode — K multiplies step
+        intensity, so the modeled time comes from the SAME protected
+        roofline (``modeled_step_time``) that drives scheme selection,
+        and the chosen K shifts as the step crosses the CMR.  Expected
+        tokens emitted per slot per verify step, with independent
+        per-draft acceptance probability ``accept_rate`` = a:
+        ``a(1-a^K)/(1-a) + 1`` (the accepted prefix plus the bonus
+        token).  Returns 0 when no K wins — speculation cannot pay off
+        on this hardware/occupancy point."""
+        b = max(1, int(batch))
+        a = min(max(float(accept_rate), 0.0), 1.0)
+        key = ("draft", b, int(lo), int(hi), a, float(tput_margin))
+        got = self._tune_cache.get(key)
+        if got is not None:
+            return got
+        base = self.modeled_step_time(b) / b     # plain decode, s/token
+
+        def per_token(k: int) -> float:
+            emitted = (k + 1.0) if a >= 1.0 \
+                else a * (1.0 - a ** k) / (1.0 - a) + 1.0
+            return self.modeled_step_time(b * (k + 1)) / (b * emitted)
+
+        best = 0
+        for k in range(max(1, int(lo)), max(1, int(hi)) + 1):
+            if per_token(k) < base * (1.0 - float(tput_margin)):
+                best = k
         self._tune_cache[key] = best
         return best
 

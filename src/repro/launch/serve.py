@@ -55,6 +55,13 @@ def _chunk_tokens(v: str):
     return int(v)
 
 
+def _draft_len(v: str):
+    """--draft-len value: an int K or 'auto' (roofline-tuned)."""
+    if str(v).lower() == "auto":
+        return "auto"
+    return int(v)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ALL_ARCHS, default="llama3.2-1b")
@@ -122,6 +129,28 @@ def main(argv=None) -> int:
                          "the smallest budget whose mixed-step intensity "
                          "clears the device CMR (roofline autotuning) "
                          "and re-tunes as occupancy drifts")
+    ap.add_argument("--spec-decode", default=None,
+                    choices=["ngram", "self-draft"],
+                    help="speculative decoding proposer: 'ngram' "
+                         "(prompt-lookup, zero model cost) or "
+                         "'self-draft' (truncated-depth greedy draft "
+                         "from the same weights).  Drafts run "
+                         "unprotected; the K+1-token verify step goes "
+                         "through the ABFT-checked path and greedy "
+                         "streams stay byte-identical to the unsped "
+                         "engine")
+    ap.add_argument("--draft-len", type=_draft_len, default="auto",
+                    help="draft tokens per verify step: an int K or "
+                         "'auto' (largest K whose modeled per-emitted-"
+                         "token time beats plain decode on the roofline;"
+                         " re-tuned as occupancy drifts, shrunk by the "
+                         "adaptive policy under escalation)")
+    ap.add_argument("--draft-model", default=None, metavar="UNITS@WINDOW",
+                    help="self-draft truncation spec 'units@window' "
+                         "(e.g. '2@16'): how many scan units of the "
+                         "serving weights the draft forward keeps and "
+                         "how much trailing context it sees (only with "
+                         "--spec-decode self-draft)")
     ap.add_argument("--plan-out", default=None,
                     help="dump the engine's compiled ProtectionPlan "
                          "(per-layer selections + step fast path) as a "
@@ -172,6 +201,12 @@ def main(argv=None) -> int:
     policy = RecoveryPolicy(
         max_retries=args.max_retries,
         evict_on_hard_fault=not args.raise_on_hard_fault)
+    draft_units, draft_window = 1, 8
+    if args.draft_model:
+        if args.spec_decode != "self-draft":
+            ap.error("--draft-model requires --spec-decode self-draft")
+        u, _, w = args.draft_model.partition("@")
+        draft_units, draft_window = int(u), int(w or 8)
     telemetry = None
     if args.metrics_out or args.trace_out or args.log_events:
         sink = None
@@ -191,7 +226,12 @@ def main(argv=None) -> int:
                          chunk_tokens=args.chunk_tokens,
                          temperature=args.temperature, top_k=args.top_k,
                          seed=args.seed, telemetry=telemetry,
-                         fault_model=fault_model)
+                         fault_model=fault_model,
+                         spec_decode=(args.spec_decode.replace("-", "_")
+                                      if args.spec_decode else None),
+                         draft_len=(args.draft_len
+                                    if args.spec_decode else None),
+                         draft_units=draft_units, draft_window=draft_window)
     heartbeats = None
     if engine.mesh is not None:
         # liveness surface for the sharded fleet: one worker per mesh
@@ -266,6 +306,16 @@ def main(argv=None) -> int:
             engine.stats.protection_deescalations,
         "chunk_tokens": engine.chunk_tokens,
         "chunk_budget_retunes": engine.stats.chunk_budget_retunes,
+        "spec_decode": ({
+            "proposer": engine.spec.name,
+            "draft_len": engine.draft_len,
+            "draft_proposed": engine.stats.draft_proposed,
+            "draft_accepted": engine.stats.draft_accepted,
+            "accept_rate": (engine.stats.draft_accepted
+                            / engine.stats.draft_proposed
+                            if engine.stats.draft_proposed else None),
+            "verify_retries": engine.stats.verify_retries,
+        } if engine.spec is not None else None),
         "model_parallel": engine.model_parallel,
         "shard_plan": ([{"layer": r["layer"], "scheme": r["scheme"],
                          "ai": r["ai"], "bound": r["bound"]}

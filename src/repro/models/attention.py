@@ -21,6 +21,7 @@ from repro.models.layers import (
     or_flags,
     rms_norm,
     rope_tables,
+    verify_attention,
 )
 
 F32 = jnp.float32
@@ -262,6 +263,43 @@ def gqa_decode(x, p, cfg: ModelConfig, ctx: LayerCtx, pos, cache):
     return out, {"k": ck, "v": cv}, or_flags(flag, f_attn, f)
 
 
+def _window_scatter(cache_leaf, new, pos, valid):
+    """Write ``new`` (B, T, ...) into ``cache_leaf`` (B, S, ...) at rows
+    ``pos[b] .. pos[b] + T - 1``, keeping only the first ``valid[b]``
+    rows.  Out-of-window rows route past the cache depth and DROP — a
+    ``dynamic_update_slice`` would clamp a near-budget window backwards
+    onto committed keys (the padded verify T is uniform across slots;
+    per-slot draft budgets are not)."""
+    S = cache_leaf.shape[1]
+    B, T = new.shape[0], new.shape[1]
+    t = jnp.arange(T, dtype=jnp.int32)
+    posns = pos[:, None].astype(jnp.int32) + t[None, :]
+    posns = jnp.where(t[None, :] < valid[:, None], posns, S)
+    rows = jnp.broadcast_to(
+        jnp.arange(B, dtype=jnp.int32)[:, None], (B, T))
+    return cache_leaf.at[rows, posns].set(
+        new.astype(cache_leaf.dtype), mode="drop")
+
+
+def gqa_verify(x, p, cfg: ModelConfig, ctx: LayerCtx, pos, cache, valid):
+    """Speculative verify: x (B, T, D) holds each row's last committed
+    token followed by its draft window; row b writes its first
+    ``valid[b]`` k/v rows at positions ``pos[b]..`` and every query
+    attends its own causal prefix (verify_attention).  Rows beyond
+    ``valid`` are shape ballast (uniform T across slots) — their writes
+    drop and their logits are discarded host-side."""
+    B, T, _ = x.shape
+    pos = _vec_positions(pos, B)
+    positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    q, k, v, flag = _qkv(x, p, cfg, ctx, positions)
+    ck = _window_scatter(cache["k"], k, pos, valid)
+    cv = _window_scatter(cache["v"], v, pos, valid)
+    out = verify_attention(q, ck, cv, pos + 1)
+    out = out.reshape(B, T, -1)
+    out, f = dense(out, p["wo"], ctx, "attn_out", tag="attn.o")
+    return out, {"k": ck, "v": cv}, or_flags(flag, f)
+
+
 # ---------------------------------------------------------------- paged GQA
 
 def gqa_paged_prefill(x, p, cfg: ModelConfig, ctx: LayerCtx, positions,
@@ -332,6 +370,28 @@ def gqa_paged_decode(x, p, cfg: ModelConfig, ctx: LayerCtx, pos, cache,
     out = out.reshape(B, 1, -1)
     out, f = dense(out, p["wo"], ctx, "attn_out", tag="attn.o")
     return out, {"k": ck, "v": cv}, or_flags(flag, f_attn, f)
+
+
+def gqa_paged_verify(x, p, cfg: ModelConfig, ctx: LayerCtx, pos, cache,
+                     valid, tables):
+    """Paged speculative verify: the draft window's k/v scatter behind
+    the committed prefix via the block tables (the prefix-sharing suffix
+    scatter generalizes — per-row starts at the cursor, padding routed
+    to the sentinel), then each query attends the gathered logical KV
+    with its own per-query length mask."""
+    from repro.serve.paged_cache import paged_gather, paged_scatter_prefill
+
+    B, T, _ = x.shape
+    pos = _vec_positions(pos, B)
+    positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    q, k, v, flag = _qkv(x, p, cfg, ctx, positions)
+    ck = paged_scatter_prefill(cache["k"], k, tables, valid, starts=pos)
+    cv = paged_scatter_prefill(cache["v"], v, tables, valid, starts=pos)
+    out = verify_attention(
+        q, paged_gather(ck, tables), paged_gather(cv, tables), pos + 1)
+    out = out.reshape(B, T, -1)
+    out, f = dense(out, p["wo"], ctx, "attn_out", tag="attn.o")
+    return out, {"k": ck, "v": cv}, or_flags(flag, f)
 
 
 def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
@@ -442,10 +502,12 @@ def _mla_latent_kv(x, p, cfg: ModelConfig, ctx: LayerCtx, positions):
 
 
 def _mla_attend(q_full, scale, latent, p, cfg, ctx, B, L, decode_len=None,
-                lengths=None, q_offset=0):
+                lengths=None, q_offset=0, verify_len=None):
     """latent: concatenated [c_kv ; k_pe] (B, S, c+dr).  Values are the
     first c dims of the same buffer — attention reads ONE cache tensor
-    (no per-step concat of the 32k-deep cache; §Perf iteration C2)."""
+    (no per-step concat of the 32k-deep cache; §Perf iteration C2).
+    ``verify_len``: speculative-verify path — L consecutive queries per
+    row, query t masked at ``verify_len[b] + t`` (see verify_attention)."""
     c = cfg.kv_lora_rank
     kv = latent[:, :, None, :]                       # KV=1 (MQA)
     vv = latent[:, :, None, :c]
@@ -453,7 +515,10 @@ def _mla_attend(q_full, scale, latent, p, cfg, ctx, B, L, decode_len=None,
     # no fused ABFT kernel (flash routing never reaches MLA) — the
     # auditor reports this whole region as known_unprotected['mla']
     with coverage_scope("mla"):
-        if decode_len is None:
+        if verify_len is not None:
+            ctxv = verify_attention(q_full, kv, vv, verify_len,
+                                    scale=scale)
+        elif decode_len is None:
             ctxv = chunked_attention(
                 q_full, kv, vv, causal=True, scale=scale, lengths=lengths,
                 q_offset=q_offset)
@@ -519,6 +584,22 @@ def mla_decode(x, p, cfg: ModelConfig, ctx: LayerCtx, pos, cache):
     return out, {"latent": lat}, or_flags(f1, f2, f3)
 
 
+def mla_verify(x, p, cfg: ModelConfig, ctx: LayerCtx, pos, cache, valid):
+    """Speculative verify (dense MLA): the draft window's latents land
+    behind the committed prefix (drop-safe window scatter) and each
+    query attends its own causal prefix (see gqa_verify)."""
+    B, T, _ = x.shape
+    pos = _vec_positions(pos, B)
+    positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    q_full, scale, f1 = _mla_q(x, p, cfg, ctx, positions)
+    c_kv, k_pe, f2 = _mla_latent_kv(x, p, cfg, ctx, positions)
+    latent_new = jnp.concatenate([c_kv, k_pe], axis=-1)  # (B, T, c+dr)
+    lat = _window_scatter(cache["latent"], latent_new, pos, valid)
+    out, f3 = _mla_attend(
+        q_full, scale, lat, p, cfg, ctx, B, T, verify_len=pos + 1)
+    return out, {"latent": lat}, or_flags(f1, f2, f3)
+
+
 def mla_paged_prefill(x, p, cfg: ModelConfig, ctx: LayerCtx, positions,
                       cache, tables, lengths, starts=None):
     """Paged MLA prefill: latent rows scatter into the (NB, BS, c+dr)
@@ -563,6 +644,27 @@ def mla_paged_decode(x, p, cfg: ModelConfig, ctx: LayerCtx, pos, cache,
     out, f3 = _mla_attend(
         q_full, scale, paged_gather(lat, tables), p, cfg, ctx, B, 1,
         decode_len=pos + 1)
+    return out, {"latent": lat}, or_flags(f1, f2, f3)
+
+
+def mla_paged_verify(x, p, cfg: ModelConfig, ctx: LayerCtx, pos, cache,
+                     valid, tables):
+    """Paged speculative verify (MLA): draft latents scatter behind the
+    committed prefix via the block tables, then every query attends the
+    gathered logical latent buffer with its own per-query mask."""
+    from repro.serve.paged_cache import paged_gather, paged_scatter_prefill
+
+    B, T, _ = x.shape
+    pos = _vec_positions(pos, B)
+    positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    q_full, scale, f1 = _mla_q(x, p, cfg, ctx, positions)
+    c_kv, k_pe, f2 = _mla_latent_kv(x, p, cfg, ctx, positions)
+    latent_new = jnp.concatenate([c_kv, k_pe], axis=-1)  # (B, T, c+dr)
+    lat = paged_scatter_prefill(cache["latent"], latent_new, tables,
+                                valid, starts=pos)
+    out, f3 = _mla_attend(
+        q_full, scale, paged_gather(lat, tables), p, cfg, ctx, B, T,
+        verify_len=pos + 1)
     return out, {"latent": lat}, or_flags(f1, f2, f3)
 
 

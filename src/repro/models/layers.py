@@ -329,6 +329,46 @@ def decode_attention(q, k_cache, v_cache, length, scale=None):
         return out.reshape(B, 1, H, Dv).astype(q.dtype)
 
 
+def verify_attention(q, k_cache, v_cache, length, scale=None):
+    """Speculative-verify attention: T consecutive queries per row
+    against a (B, S, KV, D) cache.
+
+    q: (B, T, H, Dk) — row b's queries sit at logical positions
+    ``length[b] - 1 .. length[b] + T - 2`` (``length`` is the valid
+    cache count for the FIRST query, i.e. its prefix plus its own
+    freshly written key, exactly what ``decode_attention`` receives);
+    query t may attend ``length[b] + t`` positions.  Returns
+    (B, T, H, Dv).
+
+    Deliberately replicates ``decode_attention``'s op sequence —
+    storage-dtype score operands, one full softmax (no online
+    accumulation), probs cast to the cache dtype before PV — instead of
+    reusing ``chunked_attention`` (f32 probs + online softmax): each
+    accepted row of a T>1 verify call must be bitwise identical to the
+    decode path's output at the same position, the byte-identical-
+    stream contract speculative decoding is gated on.  T=1 degenerates
+    to ``decode_attention`` exactly.
+    """
+    with coverage_scope("softmax"):
+        B, T, H, Dk = q.shape
+        S, KV, Dv = k_cache.shape[1], k_cache.shape[2], v_cache.shape[3]
+        groups = H // KV
+        scale = scale if scale is not None else Dk ** -0.5
+        qg = q.reshape(B, T, KV, groups, Dk)
+        # storage-dtype operands: no materialized f32 cache copy (above)
+        s = jnp.einsum("btkgd,bskd->btkgs", qg, k_cache,
+                       preferred_element_type=F32) * scale
+        pos = jnp.arange(S)
+        lim = (jnp.reshape(length, (-1, 1))
+               + jnp.arange(T, dtype=jnp.int32)[None, :])     # (B, T)
+        valid = pos[None, None, :] < lim[:, :, None]
+        s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("btkgs,bskv->btkgv", p.astype(v_cache.dtype),
+                         v_cache, preferred_element_type=F32)
+        return out.reshape(B, T, H, Dv).astype(q.dtype)
+
+
 # ---------------------------------------------------------------- mlp
 
 def mlp(x, p, ctx: LayerCtx, act: str = "silu",

@@ -155,8 +155,14 @@ def apply_layer(
     mode: str, cache, pos, mem, causal: bool = True,
     slots=None, lengths=None, tables=None, prefix_lens=None,
 ):
-    """One transformer/mamba layer.  mode: full | prefill | decode.
-    ``pos`` (decode): scalar or (B,) per-slot cursor vector.
+    """One transformer/mamba layer.  mode: full | prefill | decode |
+    verify.
+    ``pos`` (decode/verify): scalar or (B,) per-slot cursor vector.
+    ``verify`` (speculative decoding): x is (B, T, D) — each row's last
+    committed token plus its draft window — and ``lengths`` carries the
+    per-row VALID window size (rows are padded to a uniform T);
+    attention-only stacks, like chunked prefill, for the same reason
+    (rollback resets a cursor, not an SSM recurrence).
     ``slots``/``lengths`` (prefill): scatter targets + ragged valid lengths
     for continuous-batching admission into an engine-deep cache.
     ``tables``: (B, W) block tables — selects the PAGED cache paths, where
@@ -199,6 +205,17 @@ def apply_layer(
                                cache["attn"], slots=slots, lengths=lengths,
                                starts=prefix_lens)
             new_cache["attn"] = nc
+        elif mode == "verify":
+            ver = (attn.gqa_verify if mixer == "attn" else attn.mla_verify)
+            if tables is not None:
+                ver = (attn.gqa_paged_verify if mixer == "attn"
+                       else attn.mla_paged_verify)
+                a, nc, f = ver(h, lp["mixer"], cfg, ctx, pos,
+                               cache["attn"], lengths, tables)
+            else:
+                a, nc, f = ver(h, lp["mixer"], cfg, ctx, pos,
+                               cache["attn"], lengths)
+            new_cache["attn"] = nc
         else:
             if tables is not None:
                 a, nc, f = dec(h, lp["mixer"], cfg, ctx, pos, cache["attn"],
@@ -214,6 +231,9 @@ def apply_layer(
         assert prefix_lens is None, (
             "prefix sharing / chunked prefill cannot resume the SSM "
             "recurrence state mid-prompt")
+        assert mode != "verify", (
+            "speculative verify cannot roll the SSM recurrence state "
+            "back to the last accepted position")
         if mode == "full":
             a, f = mb.mamba_forward(h, lp["mixer"], cfg, ctx)
         elif mode == "prefill":
@@ -725,6 +745,33 @@ class Model:
         x, new_cache, flag, _ = run_stack(
             x, params["segments"], self.plan, cfg, ctx, None,
             "decode", cache, pos, None, tables=block_tables)
+        x = norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+        logits, f_head = self._head(params, x, ctx)
+        return logits, new_cache, or_flags(flag, f_head)
+
+    def verify(self, params, tokens, cache, pos, ctx: LayerCtx, valid,
+               block_tables=None):
+        """Speculative-decoding batched verify: score K+1 positions per
+        slot in ONE call.  tokens: (B, T) int32 — row b holds its last
+        committed token followed by its (padded) draft window; pos: (B,)
+        per-slot cursors; ``valid`` (B,) the per-row usable window size
+        (``K_slot + 1``; padded rows beyond it neither write cache nor
+        emit — their logits are discarded host-side).  Row b's token t
+        sits at logical position ``pos[b] + t``; its k/v land at that
+        cache position and logits[b, t] predicts position
+        ``pos[b] + t + 1``.  Returns ALL T logits (B, T, V) — the host
+        acceptance loop compares them against the drafts.  Attention-
+        only stacks (supports_chunked_prefill); rejected-draft KV above
+        the accepted cursor is dead weight — masked by per-query lengths
+        and overwritten before any later query can attend it."""
+        cfg = self.cfg
+        B, T = tokens.shape
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+        x = params["embed"][tokens]
+        x, new_cache, flag, _ = run_stack(
+            x, params["segments"], self.plan, cfg, ctx, None,
+            "verify", cache, pos, None, lengths=valid,
+            tables=block_tables)
         x = norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
         logits, f_head = self._head(params, x, ctx)
         return logits, new_cache, or_flags(flag, f_head)

@@ -47,6 +47,10 @@ ENGINE_COUNTERS = {
     "serve_chunk_retries_total": "chunk_retries",
     "serve_chunk_budget_retunes_total": "chunk_budget_retunes",
     "serve_scheme_flips_total": "scheme_flips",
+    # speculative decoding (serve/spec_decode.py)
+    "serve_spec_draft_proposed_total": "draft_proposed",
+    "serve_spec_draft_accepted_total": "draft_accepted",
+    "serve_spec_verify_retries_total": "verify_retries",
     # fault-campaign classification (shadow-stream harness) + adaptive
     # protection level changes — SDCs are first-class exported counters
     "abft_faults_injected_total": "faults_injected",
@@ -94,6 +98,13 @@ class EngineTelemetry:
         self._g_chunk_budget = r.gauge(
             "serve_chunk_budget_tokens",
             "current chunked-prefill step token budget")
+        self._g_draft_len = r.gauge(
+            "serve_spec_draft_len",
+            "current speculative-decoding draft length K")
+        self._g_accept_rate = r.gauge(
+            "serve_spec_accept_rate",
+            "cumulative draft acceptance rate "
+            "(draft_accepted / draft_proposed)")
         self._g_det_win = r.gauge(
             "abft_detection_rate_window",
             "windowed ABFT detections per step (FaultRateMonitor)")
@@ -126,7 +137,8 @@ class EngineTelemetry:
              prefill_cursors: int | None = None,
              blocks_used: int | None = None,
              blocks_free: int | None = None,
-             chunk_budget: int | None = None) -> None:
+             chunk_budget: int | None = None,
+             draft_len: int | None = None) -> None:
         """Mirror cumulative ``EngineStats`` into the registry and feed
         the delta since the last sync to the fault-rate monitor.  Called
         by the engine after every ``step()``/``admit()``."""
@@ -159,6 +171,11 @@ class EngineTelemetry:
             self._g_blocks_free.set(blocks_free)
         if chunk_budget is not None:
             self._g_chunk_budget.set(chunk_budget)
+        if draft_len is not None:
+            self._g_draft_len.set(draft_len)
+            if stats.draft_proposed:
+                self._g_accept_rate.set(
+                    stats.draft_accepted / stats.draft_proposed)
 
     def counters_match(self, stats) -> bool:
         """True iff every mirrored counter equals its EngineStats field

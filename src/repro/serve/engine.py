@@ -255,6 +255,12 @@ from repro.serve.scheduler import (
     _pad_len,
     _pad_rows,
 )
+from repro.serve.spec_decode import (
+    greedy_accept,
+    make_proposer,
+    rejection_sample,
+    target_probs,
+)
 
 __all__ = [
     "ServeEngine", "Request", "RecoveryPolicy", "EngineStats",
@@ -286,7 +292,9 @@ class ServeEngine:
                  chunk_tokens: int | str | None = None,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  telemetry=None, fault_model=None,
-                 classify_injections: bool | None = None):
+                 classify_injections: bool | None = None,
+                 spec_decode=None, draft_len: int | str | None = None,
+                 draft_window: int = 8, draft_units: int = 1):
         assert slots >= 1
         self.model = model
         self.slots = slots
@@ -433,6 +441,49 @@ class ServeEngine:
         self._prefill = self.runner.prefill
         self._prefill_prefix = self.runner.prefill_prefix
         self._prefill_chunk = self.runner.prefill_chunk
+        self._verify = self.runner.verify
+
+        # --- speculative decoding (serve/spec_decode.py): a draft
+        # proposer plus the per-step draft length K.  Verification is
+        # the integrity boundary — drafts run unprotected (a wrong or
+        # corrupted draft costs throughput, never correctness), while
+        # the K+1-token verify call goes through the same ABFT-checked
+        # jitted path and detect->retry window as decode.  draft_len
+        # "auto"/None picks K from the SAME roofline that selects
+        # schemes (plan.tune_draft_len) and re-tunes as occupancy
+        # drifts; a fixed int is shrunk by the adaptive policy's
+        # shrink_draft while escalated.
+        self.spec = None
+        self.draft_len = 0
+        self.draft_auto = draft_len in (None, "auto")
+        self._draft_len_base: int | None = None
+        self._last_decode_tokens = 0
+        if spec_decode is not None:
+            if not model.supports_chunked_prefill:
+                raise ValueError(
+                    "spec_decode requires an attention-only decoder "
+                    "(SSM recurrence cannot roll back to the last "
+                    "accepted position)")
+            if abft.flash_attention:
+                raise ValueError(
+                    "spec_decode requires the XLA attention path: the "
+                    "fused flash_decode kernel cannot reproduce the "
+                    "multi-token verify stream bit-for-bit (the greedy "
+                    "byte-equality gate)")
+            if self.draft_auto:
+                self.draft_len = max(1, self.plan.tune_draft_len(
+                    batch=slots))
+            else:
+                if not isinstance(draft_len, int) or draft_len < 1:
+                    raise ValueError(
+                        f"draft_len must be a positive int or 'auto', "
+                        f"got {draft_len!r}")
+                self.draft_len = draft_len
+                self._draft_len_base = draft_len
+            self.spec = make_proposer(
+                spec_decode, model, self._level_ctx[0],
+                lambda: self.params, units=draft_units,
+                window=draft_window)
 
         self.executor.init_keys(seed, slots)
         self._emit_plan_rows()
@@ -522,6 +573,8 @@ class ServeEngine:
         for row in self.plan.report_rows():
             args = {"model_parallel": self.model_parallel,
                     "protection_level": self.protection_level}
+            if getattr(self, "spec", None) is not None:
+                args["draft_len"] = self.draft_len
             args.update(row)
             self._tr.instant("plan_row", args)
 
@@ -541,6 +594,7 @@ class ServeEngine:
         self._prefill = self.runner.prefill
         self._prefill_prefix = self.runner.prefill_prefix
         self._prefill_chunk = self.runner.prefill_chunk
+        self._verify = self.runner.verify
         if level:
             self.stats.protection_escalations += 1
         else:
@@ -553,6 +607,16 @@ class ServeEngine:
                     // 8) * 8)
             else:
                 self.chunk_tokens = self._chunk_tokens_base
+        # fixed draft lengths shrink under escalation like the chunk
+        # budget: a shorter draft window is a smaller verify-retry blast
+        # radius (auto draft lengths re-tune per step and apply the
+        # shrink there)
+        if self._draft_len_base is not None and self.adaptive is not None:
+            if level and self.adaptive.shrink_draft < 1.0:
+                self.draft_len = max(1, int(
+                    self._draft_len_base * self.adaptive.shrink_draft))
+            else:
+                self.draft_len = self._draft_len_base
         args = {"level": level,
                 "direction": "escalate" if level else "deescalate"}
         for k in ("window_detection_rate", "window_hard_fault_rate",
@@ -632,7 +696,9 @@ class ServeEngine:
                          if self.pool is not None else None),
             chunk_budget=(self.chunk_tokens
                           if isinstance(self.chunk_tokens, int)
-                          else None))
+                          else None),
+            draft_len=(self.draft_len
+                       if self.spec is not None else None))
 
     # ------------------------------------------------------------ admission
     def free_slots(self) -> list:
@@ -836,9 +902,9 @@ class ServeEngine:
         if self.chunk_tokens is not None:
             out = self._step_chunked(fault)
         else:
-            out = self._decode_core(fault)
+            out = self._serve_core(fault)
             if self.stats.steps > before:
-                self._observe_step_mix(len(out), 0)
+                self._observe_step_mix(self._last_decode_tokens, 0)
         # a fault that found no executing call this step (idle engine)
         # corrupted nothing — drop its unclaimed metadata
         self._injection_meta = None
@@ -911,8 +977,9 @@ class ServeEngine:
 
         out = {}
         steps_before = self.stats.steps
+        self._last_decode_tokens = 0
         if self.active:
-            out = self._decode_core(decode_fault)
+            out = self._serve_core(decode_fault)
         if rows:
             committed = self._run_prefill_chunk(rows, chunk_fault)
             if not committed:
@@ -924,7 +991,8 @@ class ServeEngine:
                 # never re-injects a fault this chunk already consumed
                 self.stats.steps += 1
         if self.stats.steps > steps_before:
-            self._observe_step_mix(len(out), prefill_tokens)
+            self._observe_step_mix(self._last_decode_tokens,
+                                   prefill_tokens)
         return out
 
     def _run_prefill_chunk(self, rows: list,
@@ -1181,6 +1249,173 @@ class ServeEngine:
         for s in finished:
             del self.active[s]
             self._release(s)
+        self._last_decode_tokens = len(out)
+        return out
+
+    # ------------------------------------------------- speculative decoding
+    def _serve_core(self, fault: ModelFault | None = None) -> dict:
+        """Route one resident-slot step: the speculative verify core
+        when a proposer is attached, else plain decode.  Leaves
+        ``_last_decode_tokens`` holding the step's actual decode-side
+        token count (window tokens for verify) for the intensity
+        observation — with speculation on, a verify step scores K+1
+        tokens per slot and the per-step scheme selection must see that
+        multiplied intensity."""
+        self._last_decode_tokens = 0
+        if self.spec is not None:
+            return self._verify_core(fault)
+        return self._decode_core(fault)
+
+    def _retune_draft_len(self) -> None:
+        """Auto draft-length re-tuning as slot occupancy drifts: the
+        roofline K depends on how many slots share the verify step
+        (batch multiplies its token count), so the knob re-tunes from
+        live occupancy exactly like the chunk budget.  While escalated,
+        the adaptive policy's ``shrink_draft`` tightens it further."""
+        k = max(1, self.plan.tune_draft_len(
+            batch=max(1, len(self.active))))
+        if self.adaptive is not None and self.protection_level \
+                and self.adaptive.shrink_draft < 1.0:
+            k = max(1, int(k * self.adaptive.shrink_draft))
+        self.draft_len = k
+
+    def _verify_core(self, fault: ModelFault | None = None) -> dict:
+        """One speculative verify step for all active slots: propose up
+        to ``draft_len`` tokens per slot (clamped so a window never
+        overruns the slot's remaining token budget), score all K_s+1
+        positions in ONE jitted ``verify`` call through the same
+        ABFT-checked path as decode, then accept host-side — greedy:
+        longest draft prefix matching the per-position argmax targets
+        plus one bonus target (provably the unsped engine's stream,
+        byte for byte); sampling: the rejection rule (exact in law).
+
+        Fault handling is the chunk-retry machinery in verify flavor: a
+        detected fault re-executes ONLY this draft window from the
+        pre-step cache/keys — the per-slot cursors never moved, so
+        rollback to the last accepted position is simply "don't
+        advance" — and a sticky permanent exhausts the retry budget and
+        evicts as decode does.  Returns {uid: last emitted token}."""
+        if self.draft_auto:
+            self._retune_draft_len()
+        proposals: dict = {}
+        for s, req in sorted(self.active.items()):
+            budget = min(self.draft_len,
+                         req.max_new_tokens - len(req.generated) - 1)
+            d = (np.asarray(self.spec.propose(req, budget), np.int32)
+                 if budget > 0 else np.zeros((0,), np.int32))
+            proposals[s] = d[:max(0, budget)]
+            self.stats.draft_proposed += len(proposals[s])
+        # paged growth/COW guard over the WHOLE window (tables frozen
+        # across the attempt/retry window, same as decode)
+        self._copy_cow_blocks(self.scheduler.grow_for_verify(
+            {s: len(d) for s, d in proposals.items()}))
+        if not self.active:
+            return {}
+        T = self.draft_len + 1
+        toks = np.zeros((self.slots, T), np.int32)
+        mask = np.zeros((self.slots,), bool)
+        valid = np.zeros((self.slots,), np.int32)
+        for s, req in self.active.items():
+            d = proposals[s]
+            toks[s, 0] = req.generated[-1]
+            toks[s, 1:1 + len(d)] = d
+            mask[s] = True
+            valid[s] = len(d) + 1
+        window_tokens = int(valid.sum())
+        pos = jnp.asarray(self.pos)
+        tables = (self.pool.device_tables()
+                  if self.pool is not None else None)
+        f = fault if fault is not None else ModelFault.none()
+        meta = self._take_injection_meta("manual") \
+            if fault is not None else None
+        retry_f = f if (meta is not None
+                        and meta.get("kind") == "permanent") \
+            else ModelFault.none()
+
+        prev_cache = self.cache
+        prev_keys = self.keys
+        dev = (jnp.asarray(toks), jnp.asarray(mask), jnp.asarray(valid))
+
+        def attempt(fa):
+            return self._verify(self.params, dev[0], prev_cache, pos,
+                                dev[1], dev[2], prev_keys, tables, fa)
+
+        with self._tr.span("verify_step",
+                           {"tokens": window_tokens,
+                            "draft_len": self.draft_len}) as sp:
+            logits, new_cache, flag, nkeys = attempt(f)
+            sp.fence(logits, flag)
+        self.stats.steps += 1
+        if self.pool is not None:
+            self.stats.observe_blocks_used(self.pool.blocks_used)
+            self.stats.blocks_shared_peak = max(
+                self.stats.blocks_shared_peak, self.pool.blocks_shared)
+        with self._tr.span("abft_check", {"phase": "verify"}):
+            faulted = bool(flag)
+        if faulted:
+            self.stats.faults_detected += 1
+            self._tr.instant("fault_detected", {"phase": "verify"})
+            for _ in range(self.policy.max_retries):
+                self.stats.retries += 1
+                self.stats.verify_retries += 1
+                with self._tr.span("abft_retry",
+                                   {"phase": "verify"}) as sp:
+                    logits, new_cache, flag, nkeys = attempt(retry_f)
+                    sp.fence(logits, flag)
+                if not bool(flag):
+                    break
+            if meta is not None:
+                self._record_injection(
+                    meta, "verify",
+                    "uncorrected" if bool(flag) else "corrected")
+            if bool(flag):
+                self.stats.hard_faults += 1
+                self._tr.instant("hard_fault", {"phase": "verify"})
+                if not self.policy.evict_on_hard_fault:
+                    raise RuntimeError("persistent fault after retry")
+                for s, req in list(self.active.items()):
+                    self._finish(req, "hard_fault:verify", evict=True)
+                    del self.active[s]
+                    self._release(s)
+                return {}
+        elif meta is not None:
+            outcome, extra = ("undetected", {})
+            if self.classify_injections:
+                s_logits, s_cache, _, _ = attempt(ModelFault.none())
+                outcome, extra = self._shadow_outcome(
+                    logits, new_cache, (s_logits, s_cache))
+            self._record_injection(meta, "verify", outcome, **extra)
+        self.cache = new_cache
+        self.keys = nkeys
+
+        out = {}
+        logits = np.asarray(logits)
+        finished = []
+        now = time.perf_counter()
+        for s, req in list(self.active.items()):
+            d = proposals[s]
+            rows = logits[s, :len(d) + 1]
+            if self.temperature <= 0.0:
+                targets = np.argmax(rows, axis=-1).astype(np.int32)
+                emitted = greedy_accept(d, targets)
+            else:
+                emitted = rejection_sample(
+                    d, target_probs(rows, self.temperature, self.top_k),
+                    prev_keys[s])
+            self.stats.draft_accepted += len(emitted) - 1
+            for t in emitted:
+                req.generated.append(int(t))
+                req.times.append(now)
+                self.stats.tokens += 1
+            self.pos[s] += len(emitted)
+            out[req.uid] = int(emitted[-1])
+            if len(req.generated) >= req.max_new_tokens:
+                self._finish(req)
+                finished.append(s)
+        for s in finished:
+            del self.active[s]
+            self._release(s)
+        self._last_decode_tokens = window_tokens
         return out
 
     def run(self, requests: list, fault_at: tuple | None = None,

@@ -1,9 +1,10 @@
 """Model-runner layer of the serving engine (executor-hierarchy
 refactor).
 
-One ``ModelRunner`` owns the four jitted device entry points the
+One ``ModelRunner`` owns the five jitted device entry points the
 engine drives — ``decode``, ``prefill``, ``prefill_prefix``,
-``prefill_chunk`` — plus the slot-masked sampler they share.  The
+``prefill_chunk``, ``verify`` — plus the slot-masked sampler they
+share.  The
 runner is pure device-side glue: it holds no request state, no slot
 table, and no cache (the executor owns params/cache/keys; the
 scheduler owns the host bookkeeping).  Under a ``MeshExecutor`` the
@@ -33,8 +34,9 @@ class ModelRunner:
     """Jitted prefill/decode entry points for one model + layer context.
 
     Attributes ``decode`` / ``prefill`` / ``prefill_prefix`` /
-    ``prefill_chunk`` are the compiled callables; their signatures are
-    exactly the old engine closures' (params first, fault last)."""
+    ``prefill_chunk`` / ``verify`` are the compiled callables; their
+    signatures are exactly the old engine closures' (params first,
+    fault last)."""
 
     def __init__(self, model: Model, ctx: LayerCtx, *,
                  temperature: float = 0.0, top_k: int = 0):
@@ -119,7 +121,30 @@ class ModelRunner:
             nkeys = jnp.where(final_mask[:, None], nkeys, keys)
             return first, new_cache, flag, nkeys
 
+        def _verify_step(p, toks, cache, pos, mask, valid, keys, tables,
+                         fault):
+            """Speculative batched verify: score T = K+1 positions per
+            slot in ONE call.  ``toks`` (B, T) holds each row's last
+            committed token followed by its padded draft window;
+            ``valid`` (B,) is the usable window size per row (K_slot+1).
+            Returns ALL T logits rows (f32) — greedy targets and
+            rejection-sampling probabilities are derived host-side by
+            the acceptance loop, so the device graph stays sampling-free
+            and the greedy byte-equality contract reduces to per-row
+            logits bit-equality with the unsped decode step.  Key
+            streams advance once per ACCEPTED verify step (masked rows
+            keep theirs), mirroring ``_decode_step``; a fault retry
+            therefore redraws nothing."""
+            logits, new_cache, flag = model.verify(
+                p, toks, cache, pos,
+                dataclasses.replace(self.ctx, fault=fault),
+                valid, block_tables=tables)
+            _, nkeys = _advance(keys)
+            nkeys = jnp.where(mask[:, None], nkeys, keys)
+            return logits, new_cache, flag, nkeys
+
         self.decode = jax.jit(_decode_step)
         self.prefill = jax.jit(_prefill_step)
         self.prefill_prefix = jax.jit(_prefill_prefix_step)
         self.prefill_chunk = jax.jit(_prefill_chunk_step)
+        self.verify = jax.jit(_verify_step)

@@ -96,6 +96,11 @@ class EngineStats:
     mixed_steps: int = 0       # steps carrying decode AND prefill tokens
     decode_only_steps: int = 0
     prefill_only_steps: int = 0
+    # speculative decoding
+    draft_proposed: int = 0    # draft tokens offered to verify steps
+    draft_accepted: int = 0    # draft tokens the verify step accepted
+    verify_retries: int = 0    # clean re-executions of a faulted verify
+    #                            window only (subset of ``retries``)
     # per-step intensity-guided selection trace: one entry per executed
     # step, {"step", "decode", "prefill", "intensity", "scheme"} — the
     # serving-time record of the paper's §5.3 decision re-made from each
@@ -450,10 +455,49 @@ class Scheduler:
         attempt/retry window) and COW any block another slot still
         references; a slot that cannot grow is evicted with a recorded
         error, freeing blocks for the rest.  Returns the COW (src, dst)
-        pairs whose payload the engine must copy on device."""
+        pairs whose payload the engine must copy on device.  A decode
+        step is exactly a zero-draft verify window."""
+        return self.grow_for_verify({})
+
+    def grow_for_verify(self, window: dict) -> list:
+        """Paged verify-step guard: ``window[slot]`` is the slot's draft
+        length K_s, so the step writes K_s + 1 rows at
+        cursor..cursor+K_s (K_s = 0, the default, is a plain decode
+        step).  Claims blocks through the window's LAST write and COWs
+        EVERY shared block the window touches — the whole window must be
+        writable before the jitted attempt because tables stay frozen
+        across the attempt/retry window.  Admission COWs the shared
+        partial tail eagerly, so the COW guard only fires on exotic
+        lifecycles — but scribbling on a sharer's block is silent
+        corruption, so it is unconditional.  A slot that cannot grow is
+        evicted with a recorded error, freeing blocks for the rest.
+        Returns the COW (src, dst) pairs whose payload the engine must
+        copy on device."""
         cow_pairs: list = []
         if self.pool is None:
             return cow_pairs
+        for s in sorted(self.active):
+            k_s = int(window.get(s, 0))
+            first = int(self.pos[s]) // self.pool.block_size
+            last = (int(self.pos[s]) + k_s) // self.pool.block_size
+            last = min(last, self.pool.slot_blocks(s) - 1)
+            evicted = False
+            for idx in range(first, last + 1):
+                if self.pool.refcount[self.pool.tables[s, idx]] > 1:
+                    if self.pool.blocks_free == 0:
+                        req = self.active.pop(s)
+                        self.finish(req, "oom:kv_blocks", evict=True)
+                        self.release(s)
+                        evicted = True
+                        break
+                    cow_pairs.append(self.pool.try_cow(s, idx))
+            if evicted:
+                continue
+            if not self.pool.try_grow(s, int(self.pos[s]) + k_s + 1):
+                req = self.active.pop(s)
+                self.finish(req, "oom:kv_blocks", evict=True)
+                self.release(s)
+        return cow_pairs
         for s in sorted(self.active):
             # copy-on-write guard: if this step's write lands in a
             # block another slot still references, redirect to a

@@ -1,0 +1,253 @@
+"""Speculative-decoding subsystem: draft proposers + acceptance rules.
+
+The serving engine speculates K tokens per slot per step, then scores
+all K+1 positions in ONE jitted ``verify`` call through the existing
+dense/paged cache paths (``ModelRunner.verify`` -> ``Model.verify``).
+This module owns everything around that call that is NOT device glue:
+
+* ``DraftProposer`` — the protocol the engine drives.  Two
+  dependency-free implementations ship:
+
+  - ``NGramProposer``: prompt-lookup drafting.  Match the longest
+    trailing n-gram of ``prompt + generated`` against its own history
+    and propose the K tokens that followed the most recent earlier
+    occurrence.  Pure numpy, zero model cost — the classic
+    "prompt-lookup decoding" baseline.
+  - ``SelfDraftProposer``: self-draft via truncated decode.  Greedy
+    continuation from a depth-truncated copy of the SAME weights (the
+    first ``units`` scan units) over a fixed trailing context window —
+    no draft KV cache, no second parameter set.
+
+* Acceptance — ``greedy_accept`` (longest matching prefix + bonus
+  token; provably reproduces the unsped greedy stream byte-for-byte,
+  see the invariant below) and ``rejection_sample`` (standard
+  speculative sampling against a point-mass draft distribution; exact
+  in law w.r.t. the target distribution).
+
+Correctness invariant (greedy).  Verify row j of a slot scores input
+token x_j at logical position pos+j, where x_0 is the last committed
+token and x_{j+1} = drafts[j]; its argmax t_j is EXACTLY the token the
+unsped engine would emit at that position PROVIDED x_1..x_j each
+matched the preceding target — which is precisely the acceptance
+condition.  Induction over the accepted prefix gives byte-identical
+streams.  Draft quality therefore affects THROUGHPUT only, never
+output: a bad proposer degenerates to plain decode (one emitted token
+per step), which is also why proposers run unprotected — the
+ABFT-checked verify step is the integrity boundary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import LayerCtx, norm
+from repro.models.model import Model, run_stack
+
+_EMPTY = np.zeros((0,), np.int32)
+
+
+@runtime_checkable
+class DraftProposer(Protocol):
+    """Anything the engine can ask for draft tokens.
+
+    ``propose`` may return FEWER than ``k`` tokens (including zero — the
+    slot then degenerates to a plain single-token verify); it must never
+    return more."""
+
+    name: str
+
+    def propose(self, req, k: int) -> np.ndarray:  # (<= k,) int32
+        ...
+
+
+# ------------------------------------------------------------- proposers
+
+class NGramProposer:
+    """Prompt-lookup drafting: longest-suffix n-gram match over the
+    request's own token history (prompt + generated), newest occurrence
+    wins, proposing the K tokens that followed it."""
+
+    name = "ngram"
+
+    def __init__(self, max_n: int = 3, min_n: int = 1):
+        if not 1 <= min_n <= max_n:
+            raise ValueError("need 1 <= min_n <= max_n")
+        self.max_n = int(max_n)
+        self.min_n = int(min_n)
+
+    def propose(self, req, k: int) -> np.ndarray:
+        if k <= 0:
+            return _EMPTY
+        hist = np.concatenate(
+            [np.asarray(req.prompt, np.int32),
+             np.asarray(req.generated, np.int32)])
+        for n in range(self.max_n, self.min_n - 1, -1):
+            if len(hist) <= n:
+                continue
+            tail = hist[-n:]
+            windows = np.lib.stride_tricks.sliding_window_view(hist, n)
+            # exclude the trailing window (it IS the tail)
+            hits = np.nonzero((windows[:-1] == tail).all(axis=1))[0]
+            if hits.size:
+                # newest occurrence wins, but prefer one with a full
+                # K-token continuation in history: a periodic tail
+                # otherwise matches itself near the end and strands the
+                # proposal at a single token
+                full = hits[hits + n + k <= len(hist)]
+                i = int(full[-1] if full.size else hits[-1]) + n
+                return hist[i:i + k].astype(np.int32)
+        return _EMPTY
+
+
+class SelfDraftProposer:
+    """Self-draft via truncated decode: greedy K-step continuation using
+    only the first ``units`` scan units of the SAME weights over a fixed
+    ``window`` of trailing context.  Stateless — no draft KV cache to
+    keep coherent across rollbacks, at the price of re-reading the
+    window each draft step.  ``params_fn`` defers to the engine's live
+    (possibly sharded) parameters."""
+
+    name = "self_draft"
+
+    def __init__(self, model: Model, ctx: LayerCtx, params_fn, *,
+                 units: int = 1, window: int = 8):
+        self.model = model
+        self.window = int(window)
+        self._params_fn = params_fn
+        take = max(1, int(units))
+        plan = []
+        for seg in model.plan:
+            if take <= 0:
+                break
+            reps = min(seg.repeats, take)
+            plan.append(dataclasses.replace(seg, repeats=reps))
+            take -= reps
+        self._plan = plan
+        cfg = model.cfg
+
+        def _draft(params, toks, positions, k):
+            segs = [
+                jax.tree_util.tree_map(lambda a, r=seg.repeats: a[:r], sp)
+                for seg, sp in zip(self._plan, params["segments"])
+            ]
+
+            def one(carry, _):
+                t, p = carry
+                x = params["embed"][t][None]          # (1, W, D)
+                h, _, _, _ = run_stack(
+                    x, segs, self._plan, cfg, ctx, p[None], "full",
+                    None, None, None)
+                h = norm(h, params["final_norm"], cfg.norm, cfg.norm_eps)
+                logits, _ = model._head(params, h[:, -1:, :], ctx)
+                nxt = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+                return (jnp.concatenate([t[1:], nxt[None]]), p + 1), nxt
+
+            (_, _), drafts = jax.lax.scan(
+                one, (toks, positions), None, length=k)
+            return drafts
+
+        self._draft = jax.jit(_draft, static_argnums=3)
+
+    def propose(self, req, k: int) -> np.ndarray:
+        if k <= 0:
+            return _EMPTY
+        hist = np.concatenate(
+            [np.asarray(req.prompt, np.int32),
+             np.asarray(req.generated, np.int32)])
+        w = self.window
+        toks = np.zeros((w,), np.int32)
+        n = min(w, len(hist))
+        toks[w - n:] = hist[-n:]
+        start = len(hist) - w
+        positions = np.maximum(np.arange(start, start + w), 0)
+        out = self._draft(
+            self._params_fn(), jnp.asarray(toks),
+            jnp.asarray(positions, jnp.int32), int(k))
+        return np.asarray(out, np.int32)
+
+
+# ------------------------------------------------------------ acceptance
+
+def greedy_accept(drafts: np.ndarray, targets: np.ndarray) -> list:
+    """Greedy acceptance: ``targets[j]`` is the argmax of verify row j
+    (= the token the unsped engine emits after x_0..x_j), ``drafts`` the
+    proposed window.  Accept the longest prefix where each draft equals
+    the preceding target, then emit one bonus target — a+1 tokens for a
+    accepted drafts, K+1 when everything matched."""
+    a = 0
+    while a < len(drafts) and int(drafts[a]) == int(targets[a]):
+        a += 1
+    return [int(t) for t in targets[:a + 1]]
+
+
+def target_probs(logits: np.ndarray, temperature: float,
+                 top_k: int = 0) -> np.ndarray:
+    """Rows of verify logits -> the engine's sampling distribution
+    (temperature + optional top-k cutoff), f64 normalized."""
+    lg = np.asarray(logits, np.float64) / max(float(temperature), 1e-8)
+    if top_k > 0:
+        k = min(int(top_k), lg.shape[-1])
+        kth = np.sort(lg, axis=-1)[..., -k][..., None]
+        lg = np.where(lg < kth, -np.inf, lg)
+    lg -= lg.max(axis=-1, keepdims=True)
+    p = np.exp(lg)
+    return p / p.sum(axis=-1, keepdims=True)
+
+
+def rejection_sample(drafts: np.ndarray, probs: np.ndarray,
+                     key) -> list:
+    """Speculative sampling against a deterministic (point-mass) draft
+    distribution: accept draft d at row j with probability p_j(d); on
+    rejection emit a sample from p_j with d removed and renormalized
+    (the residual of the standard rejection rule when q is a point
+    mass); after a fully accepted window emit a bonus token from the
+    last row.  Exact in law: each emitted token is distributed as its
+    row's target distribution.  ``key`` is the slot's PRNG key; draws
+    are ``fold_in``-derived so the verify retry path redraws nothing."""
+    emitted = []
+    for j in range(len(drafts)):
+        d = int(drafts[j])
+        pj = probs[j]
+        u = float(jax.random.uniform(jax.random.fold_in(key, 2 * j)))
+        if u < float(pj[d]):
+            emitted.append(d)
+            continue
+        resid = np.array(pj)
+        resid[d] = 0.0
+        tot = float(resid.sum())
+        if tot <= 0.0:                       # p was a point mass at d
+            emitted.append(int(np.argmax(pj)))
+        else:
+            emitted.append(int(jax.random.choice(
+                jax.random.fold_in(key, 2 * j + 1),
+                pj.shape[-1], p=jnp.asarray(resid / tot))))
+        return emitted
+    pj = probs[len(drafts)]
+    emitted.append(int(jax.random.choice(
+        jax.random.fold_in(key, 2 * len(drafts) + 1),
+        pj.shape[-1], p=jnp.asarray(pj))))
+    return emitted
+
+
+def make_proposer(spec, model: Model, ctx: LayerCtx, params_fn,
+                  *, units: int = 1, window: int = 8) -> DraftProposer:
+    """Engine-facing factory: a string ("ngram" | "self_draft") or an
+    already-built proposer instance."""
+    if isinstance(spec, str):
+        name = spec.replace("-", "_")
+        if name in ("ngram", "prompt_lookup"):
+            return NGramProposer()
+        if name == "self_draft":
+            return SelfDraftProposer(model, ctx, params_fn,
+                                     units=units, window=window)
+        raise ValueError(f"unknown draft proposer {spec!r} "
+                         "(want 'ngram' or 'self_draft')")
+    if not hasattr(spec, "propose"):
+        raise TypeError("spec_decode must be a proposer name or an "
+                        "object with a .propose(req, k) method")
+    return spec

@@ -1,0 +1,404 @@
+"""Speculative decoding subsystem (serve/spec_decode.py + engine
+verify core): ABFT-protected, intensity-adaptive verification.
+
+Coverage:
+
+  * equivalence — greedy streams from a speculative engine are
+    byte-identical to the unsped engine for dense, paged,
+    paged+prefix-sharing, chunked-prefill, and MLA caches, for both
+    shipped proposers, with non-trivial acceptance actually exercised
+    (draft quality affects throughput only — see the module invariant
+    in spec_decode.py);
+  * fault isolation — a fault landing in a verify step retries ONLY
+    that draft window (``verify_retries``; the stream is unchanged), a
+    persistent verify fault exhausts the retry budget and evicts with
+    ``hard_fault:verify``;
+  * acceptance rules — ``greedy_accept`` prefix semantics and the
+    ``rejection_sample`` law (empirical distribution of each emitted
+    token matches the target row distribution under fixed fold_in
+    keys);
+  * tuning — ``ProtectionPlan.tune_draft_len`` boundary/monotonicity
+    properties, and ``draft_len="auto"`` wiring through the engine;
+  * scheme selection — on a crafted HardwareSpec the per-step
+    intensity-guided decision picks ``block_1s`` for plain decode but
+    ``global`` for a K-scaled verify window, with matching
+    ``scheme_flip`` telemetry instants;
+  * adaptive protection — ``shrink_draft`` JSON round-trip and the
+    engine tightening the draft window while escalated;
+  * sharding — mesh=2 speculative streams match the unsped mesh=1
+    baseline (bf16, multi-device only).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, scaled_down
+from repro.core import ABFTConfig, FaultSpec, Scheme
+from repro.core.hardware import HardwareSpec
+from repro.core.policy import ErrorAdaptivePolicy, policy_from_json
+from repro.models import ModelFault, build_model
+from repro.obs import EngineTelemetry
+from repro.serve.engine import RecoveryPolicy, Request, ServeEngine
+from repro.serve.spec_decode import (
+    NGramProposer,
+    greedy_accept,
+    make_proposer,
+    rejection_sample,
+)
+
+N_DEV = len(jax.devices())
+
+ABFT = ABFTConfig(scheme=Scheme.AUTO, use_pallas=False)
+
+# Same crafted spec as tests/test_chunked_prefill.py: with the scaled
+# model's (k=64, n=128) f32 step projection the per-step selection picks
+# block_1s for small token counts and global once a step carries >= 18
+# tokens — so 4-slot plain decode (4 tokens) and a 4-slot K=4 verify
+# window (20 tokens) land on DIFFERENT schemes.
+FLIP_HW = HardwareSpec(
+    name="flip", peak_flops=1e10, vpu_flops=2.6e8, hbm_bw=1e9,
+    ici_bw=1e9, hbm_bytes=1 << 30, vmem_bytes=1 << 20,
+    fixed_op_overhead_s=1e-6)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = scaled_down(get_config("llama3.2-1b"), n_layers=2)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def mla_model():
+    cfg = scaled_down(get_config("deepseek-v3-671b"), n_layers=2)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(2), dtype=jnp.float32)
+    return cfg, model, params
+
+
+def _engine(model, params, *, slots=2, max_len=64, **kw):
+    return ServeEngine(model, params, slots=slots, max_len=max_len,
+                       abft=ABFT, dtype=jnp.float32, **kw)
+
+
+def _periodic_reqs(n=3, budget=10):
+    """Periodic prompts (the prompt-lookup best case) with staggered
+    periods/budgets; the random-init model settles into short output
+    cycles, so the n-gram proposer reaches full-K proposals after the
+    first few tokens."""
+    return [Request(uid=i,
+                    prompt=np.tile(3 + np.arange(4 + i % 2,
+                                                 dtype=np.int32),
+                                   16)[:21 + 2 * i],
+                    max_new_tokens=budget + i % 3)
+            for i in range(n)]
+
+
+def _streams(reqs):
+    return {r.uid: r.generated for r in reqs}
+
+
+# ================================================= greedy equivalence
+
+@pytest.mark.parametrize("kind,kw", [
+    ("dense", {}),
+    ("paged", {"cache_kind": "paged"}),
+    ("prefix_shared", {"cache_kind": "paged", "prefix_sharing": True}),
+    ("chunked", {"cache_kind": "paged", "chunk_tokens": 8}),
+])
+def test_spec_matches_unsped(small_model, kind, kw):
+    _, model, params = small_model
+    ref_reqs = _periodic_reqs()
+    ref = _engine(model, params, **kw).run(ref_reqs)
+    reqs = _periodic_reqs()
+    eng = _engine(model, params, spec_decode="ngram", draft_len=3, **kw)
+    out = eng.run(reqs)
+    assert out == ref
+    assert _streams(reqs) == _streams(ref_reqs)
+    assert eng.stats.draft_accepted > 0       # speculation really engaged
+    assert eng.stats.draft_accepted <= eng.stats.draft_proposed
+
+
+def test_spec_matches_unsped_self_draft(small_model):
+    _, model, params = small_model
+    ref_reqs = _periodic_reqs()
+    ref = _engine(model, params).run(ref_reqs)
+    reqs = _periodic_reqs()
+    eng = _engine(model, params, spec_decode="self_draft", draft_len=2)
+    assert eng.run(reqs) == ref
+    assert _streams(reqs) == _streams(ref_reqs)
+    assert eng.stats.draft_proposed > 0
+
+
+def test_spec_matches_unsped_mla(mla_model):
+    """MLA + paged: the rejected-draft rollback path (low acceptance on
+    this model) still reproduces the unsped stream."""
+    _, model, params = mla_model
+    ref_reqs = _periodic_reqs(n=2, budget=6)
+    ref = _engine(model, params, cache_kind="paged").run(ref_reqs)
+    reqs = _periodic_reqs(n=2, budget=6)
+    eng = _engine(model, params, cache_kind="paged",
+                  spec_decode="ngram", draft_len=3)
+    assert eng.run(reqs) == ref
+    assert _streams(reqs) == _streams(ref_reqs)
+
+
+def test_spec_auto_draft_len_matches(small_model):
+    _, model, params = small_model
+    ref_reqs = _periodic_reqs()
+    ref = _engine(model, params).run(ref_reqs)
+    reqs = _periodic_reqs()
+    eng = _engine(model, params, spec_decode="ngram", draft_len="auto")
+    assert eng.run(reqs) == ref
+    assert eng.draft_len >= 1                 # tuner resolved a real K
+
+
+# ================================================= fault isolation
+
+def test_verify_fault_retries_window_only(small_model):
+    """A transient fault on a verify step: detected, the draft window
+    re-executes from the pre-step cache/keys, the stream is unchanged
+    and only ``verify_retries`` moves."""
+    _, model, params = small_model
+    clean_reqs = _periodic_reqs()
+    clean = _engine(model, params, spec_decode="ngram",
+                    draft_len=3).run(clean_reqs)
+    reqs = _periodic_reqs()
+    eng = _engine(model, params, spec_decode="ngram", draft_len=3,
+                  policy=RecoveryPolicy(max_retries=1))
+    fault = ModelFault.at(1, "mlp_down", FaultSpec.value(0, 2, 1e4))
+    out = eng.run(reqs, fault_at=(1, fault))
+    assert out == clean
+    assert _streams(reqs) == _streams(clean_reqs)
+    assert eng.stats.faults_detected == 1
+    assert eng.stats.verify_retries == 1
+    assert eng.stats.retries == 1             # all retries were verify
+    assert eng.stats.hard_faults == 0
+
+
+def test_verify_hard_fault_evicts(small_model):
+    """No retry budget: the faulted verify window becomes a hard fault
+    and the resident slots are evicted with ``hard_fault:verify``."""
+    _, model, params = small_model
+    reqs = _periodic_reqs(n=2)
+    eng = _engine(model, params, spec_decode="ngram", draft_len=3,
+                  policy=RecoveryPolicy(max_retries=0))
+    fault = ModelFault.at(1, "mlp_down", FaultSpec.value(0, 2, 1e4))
+    eng.run(reqs, fault_at=(1, fault))
+    assert eng.stats.hard_faults == 1
+    assert eng.stats.evictions == 2
+    assert all(r.error == "hard_fault:verify" for r in reqs)
+
+
+# ================================================= acceptance rules
+
+def test_greedy_accept_prefix_semantics():
+    t = np.array([5, 6, 7, 8], np.int32)
+    assert greedy_accept(np.array([5, 6, 7]), t) == [5, 6, 7, 8]
+    assert greedy_accept(np.array([5, 9, 7]), t) == [5, 6]
+    assert greedy_accept(np.array([9, 6, 7]), t) == [5]
+    assert greedy_accept(np.zeros((0,), np.int32), t) == [5]
+
+
+def test_ngram_proposer_full_continuation():
+    """A periodic tail matches itself near the end of history; the
+    proposer must still find an occurrence with a full K-token
+    continuation instead of stranding the proposal at one token."""
+    req = Request(uid=0, prompt=np.tile(
+        np.array([3, 4, 5, 6], np.int32), 8), max_new_tokens=4)
+    out = NGramProposer().propose(req, 4)
+    assert list(out) == [3, 4, 5, 6]
+    # no n-gram of an all-distinct history recurs -> empty proposal
+    req2 = Request(uid=1, prompt=np.arange(1, 20, dtype=np.int32),
+                   max_new_tokens=4)
+    assert NGramProposer().propose(req2, 4).size == 0
+
+
+def test_rejection_sample_matches_target_law():
+    """Point-mass speculative sampling is exact in law: over many keys,
+    the first emitted token's empirical distribution matches the target
+    row whether the draft is likely or unlikely under it."""
+    probs = np.array([[0.5, 0.3, 0.2],
+                      [1 / 3, 1 / 3, 1 / 3]], np.float64)  # bonus row
+    for draft in (0, 2):
+        counts = np.zeros(3)
+        n = 3000
+        for i in range(n):
+            key = jax.random.PRNGKey(i)
+            emitted = rejection_sample(
+                np.array([draft], np.int32), probs, key)
+            counts[emitted[0]] += 1
+        assert np.abs(counts / n - probs[0]).max() < 0.03
+
+
+def test_rejection_sample_bonus_token():
+    """A fully accepted window emits one bonus draw from the last row."""
+    probs = np.array([[1.0, 0.0], [0.0, 1.0]], np.float64)
+    out = rejection_sample(np.array([0], np.int32), probs,
+                           jax.random.PRNGKey(0))
+    assert out == [0, 1]
+
+
+def test_make_proposer_validation(small_model):
+    _, model, params = small_model
+    with pytest.raises(ValueError, match="unknown draft proposer"):
+        make_proposer("beam", model, None, lambda: params)
+    with pytest.raises(TypeError, match="propose"):
+        make_proposer(42, model, None, lambda: params)
+
+
+# ================================================= tune_draft_len
+
+def test_tune_draft_len_properties(small_model):
+    _, model, params = small_model
+    plan = model.protection_plan(hw=FLIP_HW, phase="serve", n_tokens=4,
+                                 dtype_bytes=4)
+    k = plan.tune_draft_len(batch=4)
+    assert 1 <= k <= 8
+    assert plan.tune_draft_len(batch=4, hi=3) <= 3
+    # zero acceptance can never amortize the larger window
+    assert plan.tune_draft_len(batch=4, accept_rate=0.0) == 0
+    # monotone: a better proposer never shrinks the chosen window
+    ks = [plan.tune_draft_len(batch=4, accept_rate=a)
+          for a in (0.0, 0.3, 0.6, 0.9, 1.0)]
+    assert ks == sorted(ks)
+
+
+def test_tune_draft_len_memoized(small_model):
+    _, model, params = small_model
+    plan = model.protection_plan(hw=FLIP_HW, phase="serve", n_tokens=4,
+                                 dtype_bytes=4)
+    assert plan.tune_draft_len(batch=2) == plan.tune_draft_len(batch=2)
+
+
+# ================================================= scheme selection
+
+def test_for_step_scheme_differs_for_verify_window(small_model):
+    """The acceptance criterion: the SAME plan selects different schemes
+    for a plain decode step vs a K-token verify window on the crafted
+    hardware."""
+    _, model, params = small_model
+    plan = model.protection_plan(hw=FLIP_HW, phase="serve", n_tokens=4,
+                                 dtype_bytes=4)
+    assert plan.for_step(4).scheme_name == "block_1s"     # plain decode
+    assert plan.for_step(4 * 5).scheme_name == "global"   # K=4 verify
+
+
+def test_engine_scheme_flips_with_draft_len(small_model):
+    """End to end: a 4-slot speculative engine on FLIP_HW crosses the
+    CMR whenever full K=4 windows execute — the selection trace carries
+    BOTH schemes for decode-composition steps and every flip has a
+    matching scheme_flip telemetry instant."""
+    _, model, params = small_model
+    tel = EngineTelemetry(trace=True)
+    abft = ABFTConfig(scheme=Scheme.AUTO, use_pallas=False,
+                      hardware=FLIP_HW)
+    eng = ServeEngine(model, params, slots=4, max_len=64, abft=abft,
+                      dtype=jnp.float32, spec_decode="ngram",
+                      draft_len=4, telemetry=tel)
+    eng.run(_periodic_reqs(n=4, budget=14))
+    verify_schemes = {e["scheme"] for e in eng.stats.selection_trace
+                      if e["decode"] and not e["prefill"]}
+    assert verify_schemes == {"block_1s", "global"}
+    assert eng.stats.scheme_flips > 0
+    flips = [e for e in tel.tracer.events
+             if e.get("name") == "scheme_flip"]
+    assert len(flips) == eng.stats.scheme_flips
+
+
+# ================================================= engine validation
+
+def test_spec_rejects_ssm_models():
+    cfg = scaled_down(get_config("mamba2-1.3b"), n_layers=2)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)
+    with pytest.raises(ValueError, match="attention-only"):
+        _engine(model, params, spec_decode="ngram", draft_len=2)
+
+
+def test_spec_rejects_flash_attention(small_model):
+    _, model, params = small_model
+    abft = ABFTConfig(scheme=Scheme.AUTO, use_pallas=True,
+                      flash_attention=True)
+    with pytest.raises(ValueError, match="flash"):
+        ServeEngine(model, params, slots=2, max_len=64, abft=abft,
+                    dtype=jnp.float32, spec_decode="ngram", draft_len=2)
+
+
+def test_spec_rejects_bad_draft_len(small_model):
+    _, model, params = small_model
+    with pytest.raises(ValueError, match="draft_len"):
+        _engine(model, params, spec_decode="ngram", draft_len=0)
+
+
+# ================================================= adaptive shrink
+
+def test_shrink_draft_json_roundtrip():
+    p = ErrorAdaptivePolicy(shrink_draft=0.5)
+    assert policy_from_json(p.to_json()).shrink_draft == 0.5
+    # default survives round-trip of pre-existing serializations
+    d = ErrorAdaptivePolicy().to_json()
+    d.pop("shrink_draft")
+    assert policy_from_json(d).shrink_draft == 1.0
+    with pytest.raises(ValueError, match="shrink_draft"):
+        ErrorAdaptivePolicy(shrink_draft=0.0)
+
+
+def test_escalation_shrinks_draft_window(small_model):
+    _, model, params = small_model
+    adaptive = ErrorAdaptivePolicy(shrink_draft=0.5)
+    abft = ABFTConfig.from_policy(adaptive, use_pallas=False)
+    eng = ServeEngine(model, params, slots=2, max_len=64, abft=abft,
+                      dtype=jnp.float32, spec_decode="ngram",
+                      draft_len=4)
+    assert eng.draft_len == 4
+    adaptive.level = 1
+    eng._set_protection_level(1, {})
+    assert eng.draft_len == 2
+    adaptive.level = 0
+    eng._set_protection_level(0, {})
+    assert eng.draft_len == 4
+
+
+# ================================================= telemetry counters
+
+def test_spec_counters_exported(small_model):
+    _, model, params = small_model
+    tel = EngineTelemetry()
+    eng = _engine(model, params, spec_decode="ngram", draft_len=3,
+                  telemetry=tel)
+    eng.run(_periodic_reqs())
+    assert tel.counters_match(eng.stats)
+    snap = tel.registry.snapshot()
+    prop = snap["serve_spec_draft_proposed_total"]["series"][0]["value"]
+    acc = snap["serve_spec_draft_accepted_total"]["series"][0]["value"]
+    assert prop == eng.stats.draft_proposed > 0
+    assert acc == eng.stats.draft_accepted <= prop
+    gauges = {g: snap[g]["series"][0]["value"]
+              for g in ("serve_spec_draft_len", "serve_spec_accept_rate")}
+    assert gauges["serve_spec_draft_len"] == eng.draft_len
+    assert gauges["serve_spec_accept_rate"] == pytest.approx(acc / prop)
+
+
+# ================================================= sharded equality
+
+@pytest.mark.skipif(N_DEV < 2, reason="needs 2 devices (set XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=8)")
+def test_spec_matches_mesh1_baseline(small_model):
+    cfg, model, _ = small_model
+    params = model.init_params(jax.random.PRNGKey(0), dtype=jnp.bfloat16)
+
+    def run(mesh, spec):
+        reqs = _periodic_reqs(n=3, budget=6)
+        kw = dict(spec_decode="ngram", draft_len=3) if spec else {}
+        ServeEngine(model, params, slots=2, max_len=64, abft=ABFT,
+                    dtype=jnp.bfloat16, cache_kind="paged",
+                    num_blocks=24, mesh=mesh, **kw).run(reqs)
+        return _streams(reqs)
+
+    base = run(1, spec=False)
+    assert run(2, spec=True) == base
+    assert run(2, spec=False) == base
